@@ -1,0 +1,115 @@
+"""Diagnostic: attribute per-device HBM bytes / collective link bytes of a
+dry-run cell to source ops (by HLO metadata op_name).  The §Perf iteration
+loop's "profile" on a CPU-only container.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.attr --arch X --shape Y [--set k=v] [--top 15]
+"""
+from __future__ import annotations
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import collections
+import json
+import re
+
+
+def attribute(text: str, top: int = 15):
+    from repro.roofline.hlo import (_parse_blocks, computation_multiplicities,
+                                    shape_bytes)
+    from repro.roofline.flops import (_CALL_RE, _DEF_RE, _NO_BYTES, _OPERANDS_RE,
+                                      _fusion_called_blocks, _fusion_read_bytes)
+    blocks, _ = _parse_blocks(text)
+    mult = computation_multiplicities(text)
+    fusion_blocks = _fusion_called_blocks(blocks)
+    agg = collections.Counter()
+    for name, lines in blocks.items():
+        m = mult.get(name, 0.0)
+        if m <= 0 or name in fusion_blocks:
+            continue
+        shapes = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            nm, shape, op = dm.groups()
+            if op in _NO_BYTES or op == "reshape":
+                continue
+            rb = shape_bytes(shape) if not shape.startswith("(") else sum(
+                shape_bytes(p) for p in shape.strip("()").split(","))
+            after = line.split(op + "(", 1)
+            arg = ""
+            if len(after) == 2:
+                d2 = 1
+                buf = []
+                for ch in after[1]:
+                    if ch == "(":
+                        d2 += 1
+                    elif ch == ")":
+                        d2 -= 1
+                        if d2 == 0:
+                            break
+                    buf.append(ch)
+                arg = "".join(buf)
+            onames = [om.group(1) for om in _OPERANDS_RE.finditer(arg)]
+            if op == "fusion":
+                cm = _CALL_RE.search(line)
+                ob = _fusion_read_bytes(blocks.get(cm.group(1), [])) if cm else 0
+            elif op in ("dynamic-slice", "slice", "gather"):
+                ob = rb
+            elif op == "dynamic-update-slice":
+                upd = shapes.get(onames[1], "") if len(onames) > 1 else ""
+                ub = shape_bytes(upd) if upd and not upd.startswith("(") else rb
+                ob, rb = ub, ub
+            else:
+                ob = sum(shape_bytes(shapes[o]) for o in onames
+                         if o in shapes and not shapes[o].startswith("("))
+            meta = re.search(r'op_name="([^"]+)"', line)
+            opn = meta.group(1) if meta else op
+            opn = re.sub(r"jit\(\w+\)/", "", opn).replace("while/body/", "L/")
+            opn = opn.replace("closed_call/", "")[:100]
+            agg[(op, opn)] += m * (rb + ob)
+    return agg.most_common(top)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    import repro.roofline.flops as F
+    cap = {}
+    orig = F.analyze
+    F.analyze = lambda t: (cap.__setitem__("t", t), orig(t))[1]
+    import repro.launch.dryrun as dr
+    dr.hlo_flops.analyze = F.analyze
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    rec = dr.run_cell(args.arch, args.shape, args.mesh == "multi", overrides=overrides)
+    r = rec["roofline"]
+    print(f"compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
+          f"collective={r['collective_s']*1e3:.1f}ms dominant={r['dominant']}")
+    for (op, opn), b in attribute(cap["t"], args.top):
+        print(f"{b/1e9:10.1f} GB  {op:14s} {opn}")
+
+
+if __name__ == "__main__":
+    main()

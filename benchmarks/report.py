@@ -1,0 +1,56 @@
+"""Regenerates the data-driven sections of EXPERIMENTS.md from artifacts.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.report > EXPERIMENTS.generated.md
+(The checked-in EXPERIMENTS.md embeds this output plus the hand-written §Perf
+iteration log.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.roofline import load, run as roofline_table
+
+
+def dryrun_summary(dir_: str = "artifacts/dryrun") -> str:
+    rows = [r for r in load(dir_) if r["status"] == "ok"]
+    lines = [
+        "| arch | shape | mesh | compile (s) | args GB/dev | temp GB/dev | "
+        "collectives (count: AR/AG/RS/A2A/CP) | link GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    for r in rows:
+        m = r["memory"]
+        c = r["collectives"]
+
+        def cnt(k):
+            return int(c.get(k, {}).get("count", 0))
+
+        lines.append(
+            f"| {r['arch'][:22]} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f} "
+            f"| {m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.2f} "
+            f"| {cnt('all-reduce')}/{cnt('all-gather')}/{cnt('reduce-scatter')}"
+            f"/{cnt('all-to-all')}/{cnt('collective-permute')} "
+            f"| {r['collective_link_bytes_per_device']/1e9:.2f} |"
+        )
+    skips = [r for r in load(dir_) if r["status"] == "skipped" and r["mesh"].startswith("16x16")]
+    lines.append("")
+    lines.append(f"Skipped cells ({len(skips)} single-pod): " + "; ".join(
+        f"{r['arch']}/{r['shape']}" for r in skips))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print("## §Dry-run (compile proof + per-device footprint)\n")
+    print(dryrun_summary())
+    print("\n## §Roofline — single-pod 16x16 (256 chips), per step per chip\n")
+    print(roofline_table(mesh="16x16"))
+    print("\n## §Roofline — multi-pod 2x16x16 (512 chips)\n")
+    print(roofline_table(mesh="2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

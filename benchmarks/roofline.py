@@ -1,0 +1,82 @@
+"""§Roofline report: reads dry-run artifacts and emits the per-(arch x shape x
+mesh) three-term table (compute / memory / collective, seconds per step per
+chip), dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line lever.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.roofline [--dir artifacts/dryrun] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+from typing import Dict, List
+
+LEVERS = {
+    ("memory", "train"): "flash-attn kernel (VMEM-resident online-softmax acc) + bigger attn_chunk",
+    ("memory", "prefill"): "flash-attn kernel; chunked-CE already bounds logits",
+    ("memory", "decode"): "batch decode steps / quantise KV to int8",
+    ("collective", "train"): "reduce-scatter grads instead of all-reduce; overlap with bwd dots",
+    ("collective", "prefill"): "shard seq (SP) to kill act all-gathers",
+    ("collective", "decode"): "stop FSDP-gathering weights per token: TP-only placement on a bigger cell",
+    ("compute", "train"): "drop causal-masked flops (block-skip); reduce remat",
+    ("compute", "prefill"): "drop causal-masked flops (block-skip)",
+    ("compute", "decode"): "decode is tiny; batch more sessions per step",
+}
+
+
+def load(dir_: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(str(Path(dir_) / "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def fmt_row(r: Dict) -> str:
+    arch = r["arch"][:22]
+    if r["status"] == "skipped":
+        return f"| {arch} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | {r['why'][:42]} |"
+    if r["status"] != "ok":
+        return f"| {arch} | {r['shape']} | {r['mesh']} | — | — | — | ERROR | — | see artifact |"
+    rf = r["roofline"]
+    lever = LEVERS.get((rf["dominant"], r["kind"]), "")
+    return (f"| {arch} | {r['shape']} | {r['mesh']} | {rf['compute_s']*1e3:.1f} "
+            f"| {rf['memory_s']*1e3:.1f} | {rf['collective_s']*1e3:.1f} "
+            f"| **{rf['dominant']}** | {r['useful_flops_ratio']:.2f} | {lever[:58]} |")
+
+
+def run(dir_: str = "artifacts/dryrun", mesh: str = None) -> str:
+    rows = load(dir_)
+    if mesh:
+        rows = [r for r in rows if r.get("mesh") == mesh]
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | useful | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    for r in rows:
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16",
+                    help="16x16 (roofline table is single-pod) | 2x16x16 | all")
+    args = ap.parse_args()
+    mesh = None if args.mesh == "all" else args.mesh
+    print(run(args.dir, mesh))
+    # aggregate
+    rows = [r for r in load(args.dir) if r["status"] == "ok"
+            and (mesh is None or r["mesh"] == mesh)]
+    dom = {}
+    for r in rows:
+        dom[r["roofline"]["dominant"]] = dom.get(r["roofline"]["dominant"], 0) + 1
+    print(f"\n{len(rows)} cells: dominant terms {dom}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus the per-benchmark tables.
+
+  fig6_case_study       §V latency/retries reproduction (simulated testbed)
+  fig8_overhead         §VI scheduling-time overhead, 7 workloads x 3 schedulers
+  sec7_scheduler_scale  linear-time claim + batched data plane
+  roofline              §Roofline terms from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import statistics
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    rows = []
+
+    # ---- Fig. 6 (§V) ------------------------------------------------------- #
+    from benchmarks import affinity_case_study as cs
+    table = cs.run()
+    print("== Fig. 6: divide-et-impera case study (simulated testbed) ==")
+    for name, r in table.items():
+        print(f"  {name:28s} mean={r['mean_ms']:.0f}ms median={r['median_ms']:.0f}ms "
+              f"p95={r['p95_ms']:.0f}ms retried={r['retried_requests']} "
+              f"fast={r['fast_fraction']*100:.1f}%")
+    aapp = table["aAPP"]
+    rows.append(("fig6_case_study", aapp["mean_ms"] * 1000,
+                 f"aapp_mean_ms={aapp['mean_ms']:.0f};retries={aapp['retried_requests']}"))
+
+    # ---- Fig. 8 (§VI) ------------------------------------------------------- #
+    from benchmarks import overhead as oh
+    table = oh.run()
+    print("\n== Fig. 8: scheduling-time overhead (avg ms) ==")
+    gaps = []
+    for scen, r in table.items():
+        gaps.append(abs(r["aAPP"]["avg_ms"] - r["APP"]["avg_ms"]))
+        print(f"  {scen:18s} vanilla={r['vanilla']['avg_ms']:.4f} "
+              f"APP={r['APP']['avg_ms']:.4f} aAPP={r['aAPP']['avg_ms']:.4f}")
+    aapp_avg = statistics.mean(r["aAPP"]["avg_ms"] for r in table.values())
+    rows.append(("fig8_overhead", aapp_avg * 1000,
+                 f"max_gap_us={max(gaps)*1000:.1f}"))
+
+    # ---- §VII scale ---------------------------------------------------------- #
+    from benchmarks import scheduler_scale as sc
+    srows = sc.run()
+    print("\n== scheduler scale ==")
+    for r in srows:
+        print(f"  W={r['workers']:5d} scalar={r['scalar_us_per_decision']:.1f}us "
+              f"batched={r['batched_us_per_decision']:.1f}us")
+    big = srows[-1]
+    rows.append(("sec7_scheduler_scale", big["scalar_us_per_decision"],
+                 f"batched_speedup_at_{big['workers']}w={big['speedup']:.1f}x"))
+
+    # ---- roofline (reads artifacts if the dry-run has been run) --------------- #
+    art = Path("artifacts/dryrun")
+    if art.exists() and any(art.glob("*.json")):
+        from benchmarks.roofline import load
+        cells = [r for r in load(str(art)) if r["status"] == "ok"
+                 and r["mesh"] == "16x16"]
+        if cells:
+            dom_s = [max(r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                         r["roofline"]["collective_s"]) for r in cells]
+            rows.append(("roofline_dominant_term_median", statistics.median(dom_s) * 1e6,
+                         f"cells={len(cells)}"))
+            print(f"\n== roofline: {len(cells)} single-pod cells "
+                  f"(median dominant term {statistics.median(dom_s):.2f}s) ==")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

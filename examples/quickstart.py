@@ -1,0 +1,68 @@
+"""Quickstart: the aAPP language end-to-end in 60 lines.
+
+Parses the paper's Fig. 5 script, schedules a divide/impera/heavy workload on
+a 6-worker cluster with the exact Listing-1 semantics, and shows the state
+tables updating on completions.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import random
+
+from repro.core import ClusterState, Registry, parse, schedule
+
+SCRIPT = """
+d:
+  workers: *
+  strategy: random
+  affinity: [!h_eu, !h_us]
+i:
+  workers: *
+  strategy: random
+  affinity: [!h_eu, !h_us, d]
+h_eu:
+  workers: [workereu1]
+h_us:
+  workers: [workerus1]
+"""
+
+
+def main():
+    script = parse(SCRIPT)
+    state = ClusterState()
+    for w in ["workereu1", "workereu2", "workereu3",
+              "workerus1", "workerus2", "workerus3"]:
+        state.add_worker(w, max_memory=2048)
+
+    reg = Registry()
+    reg.register("divide", memory=256, tag="d")
+    reg.register("impera", memory=192, tag="i")
+    reg.register("heavy_eu", memory=512, tag="h_eu")
+    reg.register("heavy_us", memory=512, tag="h_us")
+
+    rng = random.Random(0)
+
+    # co-tenants first: pinned to the small workers by the script
+    for h in ("heavy_eu", "heavy_us"):
+        w = schedule(h, state.conf(), script, reg, rng=rng)
+        state.allocate(h, w, reg)
+        print(f"{h:10s} -> {w}")
+
+    # a divide lands on a heavy-free worker (anti-affinity) ...
+    wd = schedule("divide", state.conf(), script, reg, rng=rng)
+    act = state.allocate("divide", wd, reg)
+    print(f"{'divide':10s} -> {wd}   (anti-affine with heavy)")
+
+    # ... and both imperas co-locate with it (affinity -> session locality)
+    for i in range(2):
+        wi = schedule("impera", state.conf(), script, reg, rng=rng)
+        state.allocate("impera", wi, reg)
+        print(f"{'impera':10s} -> {wi}   (affine with divide)")
+        assert wi == wd
+
+    # completion notifications shrink the tables (activeFunctions bookkeeping)
+    state.complete(act.activation_id)
+    print("after divide completes:", dict(state.tag_counts(wd)))
+
+
+if __name__ == "__main__":
+    main()

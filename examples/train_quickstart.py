@@ -1,0 +1,27 @@
+"""End-to-end training demo: a reduced gemma3 trains for 200 steps on the
+synthetic pipeline with async checkpoints, then 'crashes' and resumes from the
+latest checkpoint — loss continues exactly where it left off.
+
+Run:  PYTHONPATH=src python examples/train_quickstart.py
+"""
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def run():
+    with tempfile.TemporaryDirectory() as ckdir:
+        common = [
+            "--arch", "gemma3-4b", "--reduced", "--batch", "8", "--seq-len", "128",
+            "--ckpt-dir", ckdir, "--ckpt-every", "50", "--log-every", "25",
+        ]
+        print("=== phase 1: train 100 steps (checkpoint every 50) ===")
+        train_main(common + ["--steps", "100"])
+        print("=== phase 2: 'crash' and resume to step 200 ===")
+        out = train_main(common + ["--steps", "200", "--resume"])
+        print(f"final loss: {out['final_loss']:.4f} "
+              f"(from {out['first_loss']:.4f} at resume)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,200 @@
+"""Discrete-event simulator of the paper's §V testbed.
+
+Models, explicitly, every latency mechanism the paper attributes its results
+to:
+
+* **processor-sharing contention**: a worker's vCPUs are shared equally among
+  resident compute phases — co-location with `heavy` slows `divide`/`impera`
+  down (the anti-affinity motivation);
+* **session locality**: the first connection a worker opens to its zone's
+  storage replica costs ``conn_setup``; later functions on the same worker
+  reuse it (the affinity motivation, §II);
+* **eventual consistency**: a document written in zone A becomes visible in
+  zone B after a sampled replication lag; `divide` polls its *local* replica
+  with exponential back-off (1 s base, doubling — §V) and counts retries;
+* **control-plane asymmetry**: OpenWhisk core components live in the EU zone,
+  so invocations on US workers pay an extra overhead (the paper's observed
+  EU/US latency gap).
+
+Scheduling decisions are delegated to a pluggable ``scheduler_fn`` driven by
+the *real* aAPP machinery (`repro.core`): the simulator maintains a
+``ClusterState`` and calls the scheduler exactly when OpenWhisk's load
+balancer would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import random
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.state import ClusterState, Registry
+from .topology import WorkerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    invoke_overhead: float = 0.05  # platform routing cost (s)
+    us_overhead: float = 0.35  # extra cost when the worker is cross-zone
+    conn_setup: float = 0.30  # new DB connection per (worker, replica)
+    impera_compute: float = 0.8  # single-vCPU seconds
+    divide_compute: float = 0.3
+    heavy_compute: float = 120.0
+    sync_lag_median: float = 0.02  # cross-zone replication lag (lognormal)
+    sync_lag_sigma: float = 2.0
+    # co-tenancy pressure on the 1-vCPU node class (the DB replicas run on the
+    # same class — Fig. 7) multiplies replication lag: MongoDB apply-queues
+    # grow under resource contention.  This reproduces APP's deep retry
+    # ladders (§V's ~60 s p95) while anti-affine policies, which keep
+    # divide/impera off the small nodes, only ever see baseline lag.
+    lag_load_factor: float = 40.0
+    notify_delay: float = 0.06  # completion ack via the control plane
+    backoff_base: float = 1.0  # §V: 1 s, doubling
+    max_retries: int = 8
+    docs_per_impera: int = 50
+
+
+class _Task:
+    _ids = itertools.count()
+
+    def __init__(self, fname: str, worker: str, on_done: Callable, activation_id: str):
+        self.id = next(self._ids)
+        self.fname = fname
+        self.worker = worker
+        self.on_done = on_done
+        self.activation_id = activation_id
+        self.remaining = 0.0  # single-cpu seconds of compute left
+        self.last_update = 0.0
+
+
+class ClusterSim:
+    """Event loop + processor-sharing workers + 2-zone eventually-consistent DB."""
+
+    def __init__(self, workers: Dict[str, WorkerSpec], params: SimParams, seed: int = 0):
+        self.workers = workers
+        self.p = params
+        self.rng = random.Random(seed)
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self.state = ClusterState()
+        for w in workers.values():
+            self.state.add_worker(w.name, max_memory=w.memory_mb)
+        self.registry = Registry()
+        # compute tasks per worker (processor sharing)
+        self._running: Dict[str, List[_Task]] = {w: [] for w in workers}
+        self._next_completion_scheduled = False
+        # DB: (index) -> list of (zone, visible_at: {zone: t})
+        self._docs: Dict[str, List[Dict[str, float]]] = {}
+        self._connections: Dict[Tuple[str, str], bool] = {}
+        self.failures: List[str] = []
+
+    # ---- event machinery -------------------------------------------------- #
+
+    def at(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable) -> None:
+        self.at(self.now + dt, fn)
+
+    def run(self) -> None:
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            self._advance_compute(t)
+            self.now = t
+            fn()
+
+    # ---- processor-sharing compute ----------------------------------------- #
+
+    def _rates(self, worker: str) -> float:
+        n = len(self._running[worker])
+        if n == 0:
+            return 0.0
+        return min(1.0, self.workers[worker].vcpus / n)
+
+    def _advance_compute(self, t: float) -> None:
+        dt = t - self.now
+        if dt <= 0:
+            return
+        for w, tasks in self._running.items():
+            r = self._rates(w)
+            for task in tasks:
+                task.remaining -= r * dt
+
+    def _reschedule_completions(self) -> None:
+        """(Re)compute the earliest completion; events re-validate on firing."""
+        best: Optional[Tuple[float, _Task]] = None
+        for w, tasks in self._running.items():
+            r = self._rates(w)
+            if r <= 0:
+                continue
+            for task in tasks:
+                eta = self.now + max(task.remaining, 0.0) / r
+                if best is None or eta < best[0]:
+                    best = (eta, task)
+        if best is not None:
+            t, task = best
+            self.at(t, lambda task=task: self._maybe_complete(task))
+
+    def _maybe_complete(self, task: _Task) -> None:
+        if task not in self._running[task.worker]:
+            return  # stale event
+        if task.remaining > 1e-9:
+            self._reschedule_completions()  # rates changed since scheduling
+            return
+        self._running[task.worker].remove(task)
+        self._reschedule_completions()
+        task.on_done()
+
+    def compute(self, fname: str, worker: str, work: float, activation_id: str,
+                on_done: Callable) -> None:
+        task = _Task(fname, worker, on_done, activation_id)
+        task.remaining = work
+        self._running[worker].append(task)
+        self._reschedule_completions()
+
+    # ---- DB ----------------------------------------------------------------- #
+
+    def db_connect(self, worker: str) -> float:
+        """Returns connection cost (session locality: reuse is free)."""
+        zone = self.workers[worker].zone
+        key = (worker, zone)
+        if self._connections.get(key):
+            return 0.0
+        self._connections[key] = True
+        return self.p.conn_setup
+
+    def _small_node_pressure(self) -> int:
+        """Non-heavy functions currently computing on the 1-vCPU node class
+        (the class the DB replicas share)."""
+        n = 0
+        for w, tasks in self._running.items():
+            if self.workers[w].vcpus <= 1:
+                n += sum(1 for t in tasks if not t.fname.startswith("heavy"))
+        return n
+
+    def db_write(self, index: str, worker: str, n_docs: int) -> None:
+        zone = self.workers[worker].zone
+        other = "us" if zone == "eu" else "eu"
+        lag = self.rng.lognormvariate(math.log(self.p.sync_lag_median),
+                                      self.p.sync_lag_sigma)
+        lag *= 1.0 + self.p.lag_load_factor * self._small_node_pressure()
+        self._docs.setdefault(index, []).append(
+            {"n": n_docs, zone: self.now, other: self.now + lag}
+        )
+
+    def db_visible(self, index: str, worker: str, expected_docs: int) -> bool:
+        zone = self.workers[worker].zone
+        docs = self._docs.get(index, [])
+        total = sum(d["n"] for d in docs if d.get(zone, float("inf")) <= self.now)
+        return total >= expected_docs
+
+    # ---- invocation overheads ------------------------------------------------ #
+
+    def overhead(self, worker: str) -> float:
+        o = self.p.invoke_overhead
+        if self.workers[worker].zone == "us":
+            o += self.p.us_overhead  # control plane lives in the EU zone
+        return o

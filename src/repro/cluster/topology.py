@@ -1,0 +1,50 @@
+"""Cluster topology for the §V case study and the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    name: str
+    zone: str
+    vcpus: float
+    memory_mb: float
+
+
+def paper_testbed() -> Dict[str, WorkerSpec]:
+    """Fig. 7: 6 OpenWhisk workers — per zone, 2 x (2 vCPU / 2 GB) and
+    1 x (1 vCPU / 1 GB); heavies are pinned to the small ones."""
+    return {
+        "workereu1": WorkerSpec("workereu1", "eu", 1, 1024),
+        "workereu2": WorkerSpec("workereu2", "eu", 2, 2048),
+        "workereu3": WorkerSpec("workereu3", "eu", 2, 2048),
+        "workerus1": WorkerSpec("workerus1", "us", 1, 1024),
+        "workerus2": WorkerSpec("workerus2", "us", 2, 2048),
+        "workerus3": WorkerSpec("workerus3", "us", 2, 2048),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """A TPU sub-mesh 'worker' for the serving engine (DESIGN.md mapping)."""
+    name: str
+    pod: str
+    chips: int
+    hbm_gb: float
+
+    @property
+    def zone(self) -> str:
+        return self.pod
+
+
+def two_pod_cells(cells_per_pod: int = 4, chips_per_cell: int = 64,
+                  hbm_per_chip_gb: float = 16.0) -> Dict[str, CellSpec]:
+    out = {}
+    for pod in ("pod0", "pod1"):
+        for i in range(cells_per_pod):
+            name = f"{pod}-cell{i}"
+            out[name] = CellSpec(name, pod, chips_per_cell,
+                                 chips_per_cell * hbm_per_chip_gb)
+    return out

@@ -1,0 +1,25 @@
+"""aAPP — the paper's contribution: language, semantics, state, fast path."""
+from .ast import (
+    AAppError,
+    AAppScript,
+    Affinity,
+    Block,
+    Invalidate,
+    SchedulingFailure,
+    TagPolicy,
+    default_policy,
+)
+from .parser import parse, parse_file, to_text
+from .scheduler import schedule, try_schedule, valid, candidate_blocks
+from .state import Activation, ClusterState, Conf, Registry, WorkerView, ConcurrencyConflict
+from .baseline import schedule_vanilla, try_schedule_vanilla
+from .batched import CompiledPolicies, TagIndex, StateTensors, schedule_wave, WaveResult
+
+__all__ = [
+    "AAppError", "AAppScript", "Affinity", "Block", "Invalidate", "SchedulingFailure",
+    "TagPolicy", "default_policy", "parse", "parse_file", "to_text", "schedule",
+    "try_schedule", "valid", "candidate_blocks", "Activation", "ClusterState", "Conf",
+    "Registry", "WorkerView", "ConcurrencyConflict", "schedule_vanilla",
+    "try_schedule_vanilla", "CompiledPolicies", "TagIndex", "StateTensors",
+    "schedule_wave", "WaveResult",
+]

@@ -1,0 +1,186 @@
+"""aAPP abstract syntax (Fig. 2 of the paper).
+
+An aAPP script is an ordered map ``tag -> TagPolicy``.  Each ``TagPolicy`` is an
+ordered list of ``Block``s plus an optional ``followup`` (``default`` | ``fail``,
+default ``default``).  Each ``Block`` selects candidate ``workers`` (explicit ids
+or the wildcard ``*``), a ``strategy`` (``best_first`` | ``any``; the paper's §V
+script also spells ``random`` which is an alias of ``any``), ``invalidate``
+options (``capacity_used n%`` | ``max_concurrent_invocations n``) and the novel
+``affinity`` clause: a list of tag ids (affine) and ``!``-negated tag ids
+(anti-affine).  Affinity is *directional* (footnote 2) — no symmetry is imposed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+WILDCARD = "*"
+DEFAULT_TAG = "default"
+
+STRATEGY_BEST_FIRST = "best_first"
+STRATEGY_ANY = "any"
+_STRATEGY_ALIASES = {
+    "best_first": STRATEGY_BEST_FIRST,
+    "best-first": STRATEGY_BEST_FIRST,
+    "platform": STRATEGY_BEST_FIRST,  # APP legacy alias
+    "any": STRATEGY_ANY,
+    "random": STRATEGY_ANY,  # used in the paper's Fig. 5 script
+}
+
+FOLLOWUP_DEFAULT = "default"
+FOLLOWUP_FAIL = "fail"
+
+
+class AAppError(Exception):
+    """Static (parse/validation) error in an aAPP script."""
+
+
+class SchedulingFailure(Exception):
+    """Raised when no valid worker exists (Listing 1, line 15)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Invalidate:
+    """Invalidate options of a block.
+
+    ``capacity_used`` is a percentage threshold in (0, 100]: a worker is invalid
+    once its memory occupation reaches the threshold (paper §III: "invalidates a
+    worker if its resource occupation reaches the set threshold").
+    ``max_concurrent_invocations`` invalidates a worker that already hosts >= n
+    functions.
+    """
+
+    capacity_used: Optional[float] = None
+    max_concurrent_invocations: Optional[int] = None
+
+    def __post_init__(self):
+        if self.capacity_used is not None and not (0 < self.capacity_used <= 100):
+            raise AAppError(
+                f"capacity_used must be a percentage in (0, 100], got {self.capacity_used}"
+            )
+        if (
+            self.max_concurrent_invocations is not None
+            and self.max_concurrent_invocations < 1
+        ):
+            raise AAppError(
+                "max_concurrent_invocations must be >= 1, got "
+                f"{self.max_concurrent_invocations}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Affinity:
+    """The affinity clause: affine tags and anti-affine tags (``!tag``)."""
+
+    affine: Tuple[str, ...] = ()
+    anti_affine: Tuple[str, ...] = ()
+
+    @staticmethod
+    def from_terms(terms: Sequence[str]) -> "Affinity":
+        affine, anti = [], []
+        for t in terms:
+            t = t.strip()
+            if not t:
+                raise AAppError("empty affinity term")
+            if t.startswith("!"):
+                name = t[1:].strip()
+                if not name:
+                    raise AAppError("anti-affinity '!' with no tag")
+                anti.append(name)
+            else:
+                affine.append(t)
+        return Affinity(affine=tuple(affine), anti_affine=tuple(anti))
+
+    @property
+    def empty(self) -> bool:
+        return not self.affine and not self.anti_affine
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    workers: Tuple[str, ...]  # worker ids, or (WILDCARD,)
+    strategy: str = STRATEGY_BEST_FIRST
+    invalidate: Invalidate = dataclasses.field(default_factory=Invalidate)
+    affinity: Affinity = dataclasses.field(default_factory=Affinity)
+
+    def __post_init__(self):
+        if not self.workers:
+            raise AAppError("block with empty workers list")
+        if self.strategy not in (STRATEGY_BEST_FIRST, STRATEGY_ANY):
+            raise AAppError(f"unknown strategy {self.strategy!r}")
+        if WILDCARD in self.workers and len(self.workers) > 1:
+            raise AAppError("'*' cannot be mixed with explicit worker ids")
+
+    @property
+    def is_wildcard(self) -> bool:
+        return self.workers == (WILDCARD,)
+
+
+@dataclasses.dataclass(frozen=True)
+class TagPolicy:
+    tag: str
+    blocks: Tuple[Block, ...]
+    followup: str = FOLLOWUP_DEFAULT
+
+    def __post_init__(self):
+        if not self.blocks:
+            raise AAppError(f"tag {self.tag!r} has no blocks")
+        if self.followup not in (FOLLOWUP_DEFAULT, FOLLOWUP_FAIL):
+            raise AAppError(f"unknown followup {self.followup!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AAppScript:
+    """An ordered collection of tag policies."""
+
+    policies: Tuple[TagPolicy, ...]
+
+    def __post_init__(self):
+        seen = set()
+        for p in self.policies:
+            if p.tag in seen:
+                raise AAppError(f"duplicate tag {p.tag!r}")
+            seen.add(p.tag)
+
+    @property
+    def tags(self) -> Tuple[str, ...]:
+        return tuple(p.tag for p in self.policies)
+
+    def __contains__(self, tag: str) -> bool:
+        return any(p.tag == tag for p in self.policies)
+
+    def __getitem__(self, tag: str) -> TagPolicy:
+        for p in self.policies:
+            if p.tag == tag:
+                return p
+        raise KeyError(tag)
+
+    def get(self, tag: str) -> Optional[TagPolicy]:
+        try:
+            return self[tag]
+        except KeyError:
+            return None
+
+    def referenced_tags(self) -> Dict[str, List[str]]:
+        """tag -> tags referenced in its affinity clauses (for validation)."""
+        out: Dict[str, List[str]] = {}
+        for p in self.policies:
+            refs: List[str] = []
+            for b in p.blocks:
+                refs.extend(b.affinity.affine)
+                refs.extend(b.affinity.anti_affine)
+            out[p.tag] = refs
+        return out
+
+
+def default_policy(script: AAppScript) -> TagPolicy:
+    """The special ``default`` policy; synthesised if absent (APP semantics:
+    any worker, best_first, fail if exhausted)."""
+    p = script.get(DEFAULT_TAG)
+    if p is not None:
+        return p
+    return TagPolicy(
+        tag=DEFAULT_TAG,
+        blocks=(Block(workers=(WILDCARD,)),),
+        followup=FOLLOWUP_FAIL,
+    )

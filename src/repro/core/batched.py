@@ -1,0 +1,324 @@
+"""Vectorized/batched aAPP scheduling — the data-plane fast path.
+
+The scalar reference (:mod:`repro.core.scheduler`) is O(blocks x workers x tags)
+*per function* in Python.  At controller scale (thousands of pending
+invocations x thousands of cells per wave) that loop dominates scheduling
+latency, so we compile policies to tensors and evaluate Listing-1's ``valid()``
+for an entire wave in one batched call:
+
+* every (function, block) pair becomes a *row*: affinity vector ``aff[T]``
+  (+1/-1/0), capacity threshold, concurrency bound, worker mask and rank;
+* worker state becomes ``occ[W, T]`` tag counts + memory/concurrency vectors;
+* one ``affinity_valid`` evaluation (Pallas kernel on TPU, jnp ref elsewhere)
+  yields ``valid[R, W]`` against the wave-start snapshot.
+
+Sequential exactness.  Listing 1 is inherently sequential: an allocation can
+flip validity for later functions (e.g. `impera` affine to `divide` placed in
+the same wave).  We preserve *exact* sequential semantics with a dirty-worker
+correction pass: the snapshot matrix answers for untouched workers, and only
+workers whose state changed inside the wave (typically a handful) are
+re-checked scalarly.  ``schedule_wave(...)`` is therefore bit-identical to
+calling :func:`repro.core.scheduler.schedule` in a loop with the same RNG —
+property-tested in ``tests/test_batched_equivalence.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .ast import (
+    AAppScript,
+    Block,
+    STRATEGY_ANY,
+    STRATEGY_BEST_FIRST,
+)
+from .scheduler import candidate_blocks
+from .state import ClusterState, Conf, Registry
+from repro.kernels.affinity import NO_CAP, NO_CONC, affinity_valid_np
+
+
+# --------------------------------------------------------------------------- #
+# tag universe
+# --------------------------------------------------------------------------- #
+
+
+class TagIndex:
+    def __init__(self, tags: Sequence[str]):
+        self.tags: Tuple[str, ...] = tuple(dict.fromkeys(tags))
+        self.index: Dict[str, int] = {t: i for i, t in enumerate(self.tags)}
+
+    @staticmethod
+    def from_script(script: AAppScript, reg: Registry) -> "TagIndex":
+        tags = list(script.tags) + list(reg.tags())
+        for _, refs in script.referenced_tags().items():
+            tags.extend(refs)
+        return TagIndex(tags)
+
+    def __len__(self) -> int:
+        return len(self.tags)
+
+    def __getitem__(self, tag: str) -> int:
+        return self.index[tag]
+
+
+# --------------------------------------------------------------------------- #
+# compiled policies
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledBlock:
+    aff: np.ndarray  # [T] int8
+    cap_pct: float
+    max_conc: int
+    strategy: str
+    wildcard: bool
+    worker_ids: Tuple[str, ...]  # explicit list (order = rank) if not wildcard
+    block: Block  # original (for scalar re-checks)
+
+
+class CompiledPolicies:
+    """tag -> compiled candidate block list (with followup/defaults resolved)."""
+
+    def __init__(self, script: AAppScript, reg: Registry, tag_index: Optional[TagIndex] = None):
+        self.script = script
+        self.tag_index = tag_index or TagIndex.from_script(script, reg)
+        self._cache: Dict[str, List[CompiledBlock]] = {}
+
+    def blocks_for(self, tag: str) -> List[CompiledBlock]:
+        got = self._cache.get(tag)
+        if got is None:
+            got = [self._compile(b) for b in candidate_blocks(tag, self.script)]
+            self._cache[tag] = got
+        return got
+
+    def _compile(self, block: Block) -> CompiledBlock:
+        T = len(self.tag_index)
+        aff = np.zeros((T,), np.int8)
+        for t in block.affinity.affine:
+            aff[self.tag_index[t]] = 1
+        for t in block.affinity.anti_affine:
+            aff[self.tag_index[t]] = -1
+        inv = block.invalidate
+        return CompiledBlock(
+            aff=aff,
+            cap_pct=float(inv.capacity_used) if inv.capacity_used is not None else NO_CAP,
+            max_conc=int(inv.max_concurrent_invocations)
+            if inv.max_concurrent_invocations is not None
+            else NO_CONC,
+            strategy=block.strategy,
+            wildcard=block.is_wildcard,
+            worker_ids=() if block.is_wildcard else block.workers,
+            block=block,
+        )
+
+
+# --------------------------------------------------------------------------- #
+# state snapshot tensors
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class StateTensors:
+    workers: Tuple[str, ...]  # conf order
+    widx: Dict[str, int]
+    occ: np.ndarray  # [W, T] int32
+    mem_used: np.ndarray  # [W] f32
+    max_mem: np.ndarray  # [W] f32
+    n_funcs: np.ndarray  # [W] i32
+
+    @staticmethod
+    def from_conf(conf: Conf, tag_index: TagIndex) -> "StateTensors":
+        workers = tuple(conf.keys())
+        W, T = len(workers), len(tag_index)
+        occ = np.zeros((W, T), np.int32)
+        mem_used = np.zeros((W,), np.float32)
+        max_mem = np.zeros((W,), np.float32)
+        n_funcs = np.zeros((W,), np.int32)
+        for i, w in enumerate(workers):
+            view = conf[w]
+            mem_used[i] = view.memory_used
+            max_mem[i] = view.max_memory
+            n_funcs[i] = len(view.fs)
+            for t in view.tags:
+                j = tag_index.index.get(t)
+                if j is not None:
+                    occ[i, j] += 1
+        return StateTensors(
+            workers=workers,
+            widx={w: i for i, w in enumerate(workers)},
+            occ=occ,
+            mem_used=mem_used,
+            max_mem=max_mem,
+            n_funcs=n_funcs,
+        )
+
+
+# --------------------------------------------------------------------------- #
+# wave scheduler
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class WaveResult:
+    assignments: List[Optional[str]]  # per function, worker id or None
+    rows_evaluated: int
+    corrections: int
+
+
+def _row_valid_scalar(
+    cb: CompiledBlock,
+    f_mem: float,
+    occ_row: np.ndarray,
+    mem_used: float,
+    max_mem: float,
+    n_funcs: int,
+) -> bool:
+    """Scalar re-check of one (function-block, worker) cell on live state."""
+    if mem_used + f_mem > max_mem:
+        return False
+    if cb.cap_pct < NO_CAP and mem_used >= cb.cap_pct * 0.01 * max_mem:
+        return False
+    if cb.max_conc < NO_CONC and n_funcs >= cb.max_conc:
+        return False
+    pos = cb.aff == 1
+    if pos.any() and (occ_row[pos] == 0).any():
+        return False
+    neg = cb.aff == -1
+    if neg.any() and (occ_row[neg] > 0).any():
+        return False
+    return True
+
+
+def schedule_wave(
+    fs: Sequence[str],
+    conf: Conf,
+    policies: CompiledPolicies,
+    reg: Registry,
+    *,
+    rng: Optional[random.Random] = None,
+    backend: str = "auto",
+    apply_to: Optional[ClusterState] = None,
+) -> WaveResult:
+    """Schedule ``fs`` in order with exact Listing-1 semantics.
+
+    One batched ``valid`` evaluation against the wave-start snapshot + scalar
+    corrections for workers dirtied by earlier assignments in the same wave.
+    """
+    rng = rng if rng is not None else random
+    tag_index = policies.tag_index
+    snap = StateTensors.from_conf(conf, tag_index)
+    W = len(snap.workers)
+
+    # ---- build rows -------------------------------------------------------- #
+    rows: List[Tuple[int, CompiledBlock]] = []  # (function position, block)
+    row_of: List[List[int]] = []  # function position -> row ids (block order)
+    f_mems: List[float] = []
+    f_tags: List[str] = []
+    for fi, f in enumerate(fs):
+        spec = reg[f]
+        f_mems.append(spec.memory)
+        f_tags.append(spec.tag)
+        ids = []
+        for cb in policies.blocks_for(spec.tag):
+            ids.append(len(rows))
+            rows.append((fi, cb))
+        row_of.append(ids)
+
+    R = len(rows)
+    if R == 0 or W == 0:
+        return WaveResult(assignments=[None] * len(fs), rows_evaluated=0, corrections=0)
+
+    aff = np.stack([cb.aff for _, cb in rows])  # [R, T]
+    cap = np.array([cb.cap_pct for _, cb in rows], np.float32)
+    conc = np.array([cb.max_conc for _, cb in rows], np.int64).clip(max=NO_CONC).astype(np.int32)
+    f_mem_rows = np.array([f_mems[fi] for fi, _ in rows], np.float32)
+    wmask = np.zeros((R, W), bool)
+    for r, (fi, cb) in enumerate(rows):
+        if cb.wildcard:
+            wmask[r, :] = True
+        else:
+            for wid in cb.worker_ids:
+                j = snap.widx.get(wid)
+                if j is not None:
+                    wmask[r, j] = True
+
+    valid = affinity_valid_np(
+        snap.occ,
+        aff,
+        wmask,
+        snap.mem_used,
+        snap.max_mem,
+        snap.n_funcs,
+        f_mem_rows,
+        cap,
+        conc,
+        backend=backend,
+    )  # [R, W] bool
+
+    # ---- sequential pass with dirty corrections ----------------------------- #
+    live_occ = snap.occ  # copy-on-dirty
+    live_mem = snap.mem_used
+    live_nfn = snap.n_funcs
+    dirtied = False
+    dirty: set = set()
+    corrections = 0
+    tag_col: Dict[str, int] = tag_index.index
+
+    assignments: List[Optional[str]] = []
+    for fi, f in enumerate(fs):
+        chosen: Optional[str] = None
+        for r in row_of[fi]:
+            cb = rows[r][1]
+            # candidate order must match the reference: explicit list order,
+            # or conf order for wildcard blocks.
+            if cb.wildcard:
+                order = range(W)
+            else:
+                order = [snap.widx[w] for w in cb.worker_ids if w in snap.widx]
+            candidates: List[int] = []
+            for j in order:
+                if j in dirty:
+                    corrections += 1
+                    ok = _row_valid_scalar(
+                        cb,
+                        f_mems[fi],
+                        live_occ[j],
+                        float(live_mem[j]),
+                        float(snap.max_mem[j]),
+                        int(live_nfn[j]),
+                    )
+                else:
+                    ok = bool(valid[r, j])
+                if ok:
+                    if cb.strategy == STRATEGY_BEST_FIRST:
+                        candidates = [j]
+                        break
+                    candidates.append(j)
+            if candidates:
+                if cb.strategy == STRATEGY_BEST_FIRST:
+                    jj = candidates[0]
+                else:
+                    assert cb.strategy == STRATEGY_ANY
+                    jj = rng.choice(candidates)
+                chosen = snap.workers[jj]
+                if not dirtied:
+                    live_occ = live_occ.copy()
+                    live_mem = live_mem.copy()
+                    live_nfn = live_nfn.copy()
+                    dirtied = True
+                col = tag_col.get(f_tags[fi])
+                if col is not None:
+                    live_occ[jj, col] += 1
+                live_mem[jj] += f_mems[fi]
+                live_nfn[jj] += 1
+                dirty.add(jj)
+                break
+        assignments.append(chosen)
+        if apply_to is not None and chosen is not None:
+            apply_to.allocate(f, chosen, reg)
+
+    return WaveResult(assignments=assignments, rows_evaluated=R, corrections=corrections)

@@ -1,0 +1,124 @@
+"""Listing-1 scheduling semantics — the faithful scalar reference.
+
+``schedule`` and ``valid`` mirror the paper's pseudo-code line for line:
+
+* blocks of the function's tag are scanned top-to-bottom; unless
+  ``followup: fail``, the ``default`` tag's blocks are appended;
+* ``workers: *`` expands to every worker in the current ``conf``;
+* a worker is valid iff it exists, has spare memory for the function,
+  passes the block's ``invalidate`` rules, and the block's affinity terms hold
+  against the tags currently resident on it;
+* the first non-empty valid list wins; ``best_first`` picks its first element,
+  ``any`` a uniformly random one;
+* if no block yields a valid worker the scheduling fails.
+
+Complexity: O(#blocks × #workers × script size) per call — linear, as claimed
+in §VII.  The vectorized/batched fast path lives in :mod:`repro.core.batched`.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence
+
+from .ast import (
+    AAppScript,
+    Block,
+    SchedulingFailure,
+    STRATEGY_ANY,
+    STRATEGY_BEST_FIRST,
+    FOLLOWUP_FAIL,
+    default_policy,
+)
+from .state import Conf, Registry
+
+
+def valid(f: str, w: str, conf: Conf, reg: Registry, block: Block) -> bool:
+    """Listing 1, lines 17-36."""
+    spec = reg[f]
+    view = conf.get(w)
+    if view is None:  # worker unknown / failed (line 19: `w not in conf`)
+        return False
+    if view.memory_used + spec.memory > view.max_memory:  # line 19
+        return False
+
+    inv = block.invalidate
+    if inv.capacity_used is not None:  # lines 22-24 (percentage of max_memory)
+        threshold = inv.capacity_used / 100.0 * view.max_memory
+        if view.memory_used >= threshold:
+            return False
+    if inv.max_concurrent_invocations is not None:  # lines 25-27
+        if len(view.fs) >= inv.max_concurrent_invocations:
+            return False
+
+    aff = block.affinity
+    if not aff.empty:  # lines 28-35
+        w_tags = view.tag_set()
+        for t in aff.affine:
+            if t not in w_tags:
+                return False
+        for t in aff.anti_affine:
+            if t in w_tags:
+                return False
+    return True
+
+
+def candidate_blocks(tag: str, aapp: AAppScript) -> List[Block]:
+    """The block list Listing 1 iterates: the tag's blocks, then — unless the
+    tag says ``followup: fail`` — the ``default`` tag's blocks.  Unknown tags
+    fall through to the default policy directly (APP semantics)."""
+    policy = aapp.get(tag)
+    if policy is None:
+        return list(default_policy(aapp).blocks)
+    blocks = list(policy.blocks)
+    if policy.followup != FOLLOWUP_FAIL:
+        blocks += list(default_policy(aapp).blocks)
+    return blocks
+
+
+def valid_workers_for_block(
+    f: str, block: Block, conf: Conf, reg: Registry
+) -> List[str]:
+    """Lines 7-9: expand ``*`` and filter with ``valid``.
+
+    Worker order: explicit lists keep script order; ``*`` uses ``conf``
+    insertion order (the platform's stable worker order)."""
+    ids: Sequence[str] = conf.keys() if block.is_wildcard else block.workers
+    return [w for w in ids if valid(f, w, conf, reg, block)]
+
+
+def schedule(
+    f: str,
+    conf: Conf,
+    aapp: AAppScript,
+    reg: Registry,
+    *,
+    rng: Optional[random.Random] = None,
+) -> str:
+    """Listing 1, lines 1-15.  Returns the selected worker id or raises
+    :class:`SchedulingFailure`."""
+    spec = reg[f]  # line 2 (raises KeyError for unregistered functions)
+    blocks = candidate_blocks(spec.tag, aapp)  # lines 3-5
+    rng = rng if rng is not None else random
+
+    for block in blocks:  # line 6
+        workers = valid_workers_for_block(f, block, conf, reg)  # lines 7-9
+        if workers:  # line 10
+            if block.strategy == STRATEGY_BEST_FIRST:  # lines 11-12
+                return workers[0]
+            assert block.strategy == STRATEGY_ANY  # lines 13-14
+            return rng.choice(workers)
+    raise SchedulingFailure(f"function {f!r} not schedulable")  # line 15
+
+
+def try_schedule(
+    f: str,
+    conf: Conf,
+    aapp: AAppScript,
+    reg: Registry,
+    *,
+    rng: Optional[random.Random] = None,
+) -> Optional[str]:
+    try:
+        return schedule(f, conf, aapp, reg, rng=rng)
+    except SchedulingFailure:
+        return None

@@ -1,0 +1,235 @@
+"""Worker/function state tracking (paper §IV).
+
+The aAPP-based load balancer keeps two lookup tables:
+
+* ``activeFunctions``  — worker id -> the function instances currently allocated
+  on it (with their tags and memory), used by ``valid()`` to check
+  (anti-)affinity and capacity;
+* ``activeTagActivations`` — activation id -> (function, tag, worker), used to
+  remove the right instance when a completion notification arrives (instances of
+  the same function definition are indistinguishable by name alone).
+
+``ClusterState`` owns both tables plus the worker inventory, and produces the
+``conf`` view consumed by :func:`repro.core.scheduler.schedule` (Listing 1).
+It is thread-safe, supports elastic add/remove/fail of workers, and offers an
+optimistic-concurrency hook (``expected_version``) for the multi-controller
+races the paper flags as future work (§VII).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+from .ast import AAppError
+
+
+class ConcurrencyConflict(Exception):
+    """Optimistic allocation raced with another controller's update."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    """Registry entry: ``reg[f] = (memory, tag)`` in Listing 1."""
+
+    memory: float
+    tag: str
+
+
+class Registry:
+    """Function name -> (memory, tag)."""
+
+    def __init__(self, entries: Optional[Mapping[str, Tuple[float, str]]] = None):
+        self._entries: Dict[str, FunctionSpec] = {}
+        if entries:
+            for name, (memory, tag) in entries.items():
+                self.register(name, memory=memory, tag=tag)
+
+    def register(self, name: str, *, memory: float, tag: str) -> None:
+        if memory < 0:
+            raise AAppError(f"function {name!r}: negative memory")
+        self._entries[name] = FunctionSpec(memory=float(memory), tag=tag)
+
+    def __getitem__(self, name: str) -> FunctionSpec:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"function {name!r} not registered") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def tags(self) -> Tuple[str, ...]:
+        return tuple(sorted({s.tag for s in self._entries.values()}))
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation:
+    """A running function instance."""
+
+    activation_id: str
+    function: str
+    tag: str
+    memory: float
+    worker: str
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerView:
+    """The per-worker slice of ``conf`` that Listing 1 reads."""
+
+    fs: Tuple[str, ...]  # function names of resident instances
+    tags: Tuple[str, ...]  # their tags (parallel to fs)
+    memory_used: float
+    max_memory: float
+
+    def tag_set(self) -> frozenset:
+        return frozenset(self.tags)
+
+
+Conf = Dict[str, WorkerView]
+
+
+class ClusterState:
+    """Worker inventory + the two tracking tables."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._max_memory: Dict[str, float] = {}
+        self._alive: Dict[str, bool] = {}
+        # activeFunctions: worker -> {activation_id: Activation}
+        self._active_functions: Dict[str, Dict[str, Activation]] = {}
+        # activeTagActivations: activation_id -> Activation
+        self._active_tag_activations: Dict[str, Activation] = {}
+        self._ids = itertools.count()
+        self._version = 0
+
+    # -- worker inventory (elastic) ---------------------------------------- #
+
+    def add_worker(self, worker: str, *, max_memory: float) -> None:
+        with self._lock:
+            if worker in self._max_memory and self._alive[worker]:
+                raise AAppError(f"worker {worker!r} already present")
+            self._max_memory[worker] = float(max_memory)
+            self._alive[worker] = True
+            self._active_functions.setdefault(worker, {})
+            self._version += 1
+
+    def remove_worker(self, worker: str) -> List[Activation]:
+        """Gracefully drain: returns the activations that must be rescheduled."""
+        return self.fail_worker(worker)
+
+    def fail_worker(self, worker: str) -> List[Activation]:
+        """A worker disappeared (crash / pre-emption).  Its activations are
+        evicted from both tables and returned for rescheduling."""
+        with self._lock:
+            if worker not in self._max_memory:
+                return []
+            self._alive[worker] = False
+            lost = list(self._active_functions.get(worker, {}).values())
+            self._active_functions[worker] = {}
+            for act in lost:
+                self._active_tag_activations.pop(act.activation_id, None)
+            self._version += 1
+            return lost
+
+    def workers(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(w for w, alive in self._alive.items() if alive)
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    # -- conf view ---------------------------------------------------------- #
+
+    def conf(self) -> Conf:
+        with self._lock:
+            out: Conf = {}
+            for w, alive in self._alive.items():
+                if not alive:
+                    continue
+                acts = self._active_functions.get(w, {})
+                out[w] = WorkerView(
+                    fs=tuple(a.function for a in acts.values()),
+                    tags=tuple(a.tag for a in acts.values()),
+                    memory_used=sum(a.memory for a in acts.values()),
+                    max_memory=self._max_memory[w],
+                )
+            return out
+
+    def tag_counts(self, worker: str) -> Dict[str, int]:
+        with self._lock:
+            counts: Dict[str, int] = {}
+            for a in self._active_functions.get(worker, {}).values():
+                counts[a.tag] = counts.get(a.tag, 0) + 1
+            return counts
+
+    # -- the two tables ------------------------------------------------------ #
+
+    def allocate(
+        self,
+        function: str,
+        worker: str,
+        reg: Registry,
+        *,
+        expected_version: Optional[int] = None,
+    ) -> Activation:
+        """Record an allocation decision.  With ``expected_version`` this is a
+        compare-and-swap: it fails if another controller changed the state since
+        the caller computed its decision (multi-controller safety)."""
+        with self._lock:
+            if expected_version is not None and expected_version != self._version:
+                raise ConcurrencyConflict(
+                    f"state moved from v{expected_version} to v{self._version}"
+                )
+            if not self._alive.get(worker, False):
+                raise AAppError(f"worker {worker!r} not available")
+            spec = reg[function]
+            act = Activation(
+                activation_id=f"act-{next(self._ids)}",
+                function=function,
+                tag=spec.tag,
+                memory=spec.memory,
+                worker=worker,
+            )
+            self._active_functions[worker][act.activation_id] = act
+            self._active_tag_activations[act.activation_id] = act
+            self._version += 1
+            return act
+
+    def complete(self, activation_id: str) -> Optional[Activation]:
+        """Completion notification from a worker: look the activation up in
+        ``activeTagActivations`` and drop that instance from
+        ``activeFunctions`` (paper §IV)."""
+        with self._lock:
+            act = self._active_tag_activations.pop(activation_id, None)
+            if act is None:
+                return None  # worker already failed / duplicate ack
+            self._active_functions.get(act.worker, {}).pop(activation_id, None)
+            self._version += 1
+            return act
+
+    def active_activations(self) -> Tuple[Activation, ...]:
+        with self._lock:
+            return tuple(self._active_tag_activations.values())
+
+    # -- bulk load (tests / simulator) ---------------------------------------- #
+
+    @staticmethod
+    def from_conf(conf: Conf) -> Tuple["ClusterState", Registry]:
+        """Rebuild a state + registry from a plain ``conf`` mapping (testing)."""
+        state = ClusterState()
+        reg = Registry()
+        n = 0
+        for w, view in conf.items():
+            state.add_worker(w, max_memory=view.max_memory)
+            per = view.memory_used / len(view.fs) if view.fs else 0.0
+            for fname, tag in zip(view.fs, view.tags):
+                if fname not in reg:
+                    reg.register(fname, memory=per, tag=tag)
+                state.allocate(fname, w, reg)
+                n += 1
+        return state, reg

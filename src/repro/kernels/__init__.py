@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated with interpret=True off-TPU):
+
+* affinity         — the paper's batched valid() scheduling matrix
+* flash_attention  — prefill attention (memory-roofline fix vs XLA chunks)
+* mamba_scan       — selective-scan for ssm/hybrid prefill
+"""

@@ -1,0 +1,4 @@
+from .ops import affinity_valid, affinity_valid_np
+from .ref import NO_CAP, NO_CONC, affinity_valid_ref
+
+__all__ = ["affinity_valid", "affinity_valid_np", "affinity_valid_ref", "NO_CAP", "NO_CONC"]

@@ -1,0 +1,80 @@
+"""jit'd public wrapper around the affinity kernel: padding, backend pick,
+unpadding.  On non-TPU platforms the Pallas body runs in ``interpret`` mode
+(for tests) or falls back to the pure-jnp reference (production CPU path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import BF, BW, T_ALIGN, affinity_valid_kernel
+from .ref import NO_CAP, NO_CONC, affinity_valid_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def affinity_valid(
+    occ,
+    aff,
+    wmask,
+    mem_used,
+    max_mem,
+    n_funcs,
+    f_mem,
+    cap_pct=None,
+    max_conc=None,
+    *,
+    backend: str = "auto",
+):
+    """Batched Listing-1 ``valid()``: returns ``valid[F, W]`` (bool).
+
+    ``backend``: ``auto`` (pallas on TPU, ref elsewhere), ``pallas``
+    (interpret-mode off-TPU — used by tests), or ``ref``.
+    """
+    occ = jnp.asarray(occ, jnp.int32)
+    aff = jnp.asarray(aff, jnp.int8)
+    W, T = occ.shape
+    F = aff.shape[0]
+    if aff.shape[1] != T:
+        raise ValueError(f"tag axes differ: occ {T}, aff {aff.shape[1]}")
+
+    if cap_pct is None:
+        cap_pct = jnp.full((F,), NO_CAP, jnp.float32)
+    if max_conc is None:
+        max_conc = jnp.full((F,), NO_CONC, jnp.int32)
+
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return affinity_valid_ref(
+            occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem, cap_pct, max_conc
+        )
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    interpret = jax.default_backend() != "tpu"
+    Fp, Wp, Tp = _round_up(max(F, 1), BF), _round_up(max(W, 1), BW), _round_up(max(T, 1), T_ALIGN)
+
+    occ_p = jnp.zeros((Wp, Tp), jnp.int32).at[:W, :T].set(occ)
+    aff_p = jnp.zeros((Fp, Tp), jnp.int8).at[:F, :T].set(aff)
+    wmask_p = jnp.zeros((Fp, Wp), jnp.int8).at[:F, :W].set(jnp.asarray(wmask, jnp.int8))
+    mem_p = jnp.zeros((Wp, 1), jnp.float32).at[:W, 0].set(jnp.asarray(mem_used, jnp.float32))
+    maxm_p = jnp.zeros((Wp, 1), jnp.float32).at[:W, 0].set(jnp.asarray(max_mem, jnp.float32))
+    nfn_p = jnp.zeros((Wp, 1), jnp.int32).at[:W, 0].set(jnp.asarray(n_funcs, jnp.int32))
+    fmem_p = jnp.zeros((Fp, 1), jnp.float32).at[:F, 0].set(jnp.asarray(f_mem, jnp.float32))
+    cap_p = jnp.full((Fp, 1), NO_CAP, jnp.float32).at[:F, 0].set(jnp.asarray(cap_pct, jnp.float32))
+    conc_p = jnp.full((Fp, 1), NO_CONC, jnp.int32).at[:F, 0].set(jnp.asarray(max_conc, jnp.int32))
+
+    valid = affinity_valid_kernel(
+        aff_p, fmem_p, cap_p, conc_p, occ_p, mem_p, maxm_p, nfn_p, wmask_p,
+        interpret=interpret,
+    )
+    return valid[:F, :W].astype(bool)
+
+
+def affinity_valid_np(*args, **kwargs) -> np.ndarray:
+    """Host-side convenience: numpy in/out."""
+    return np.asarray(affinity_valid(*args, **kwargs))

@@ -1,0 +1,118 @@
+"""Causal / sliding-window flash attention — Pallas TPU kernel.
+
+Grid (B, H, n_q_blocks, n_kv_blocks); the kv dimension is innermost, so the
+online-softmax accumulators live in VMEM scratch across the kv sweep — this is
+precisely the HBM-traffic term that the XLA chunked path cannot eliminate (its
+[.., Sq, hd] accumulator round-trips HBM every kv chunk; see EXPERIMENTS.md
+§Perf).  GQA maps q-head h to kv-head h // (H/K) in the BlockSpec index map.
+
+Working set per grid cell: q (BQ x hd) + k,v (BK x hd) + acc (BQ x hd f32)
++ m,l (BQ) — BQ=BK=512, hd=128: ~1.3 MiB, far under the VMEM budget; larger
+BK amortises the grid overhead for long context.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+BQ = 512
+BK = 512
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window, scale: float, bq: int, bk: int,
+                  n_kv: int, sq: int, skv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = (q_pos < sq) & (kv_pos < skv)  # padding
+    if causal:
+        ok &= kv_pos <= q_pos
+    if window is not None:
+        ok &= kv_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]  # [bq, 1]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _final():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "sq", "skv", "interpret"),
+)
+def flash_attention_padded(q, k, v, *, causal=True, window=None, bq=BQ, bk=BK,
+                           sq=None, skv=None, interpret=False):
+    """Padded entry: Sq % bq == 0, Skv % bk == 0, H % K == 0.
+    q [B,Sq,H,hd], k/v [B,Skv,K,hd] -> o [B,Sq,H,hd].
+    ``sq``/``skv`` give the unpadded lengths for masking."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    assert Sq % bq == 0 and Skv % bk == 0 and H % K == 0
+    ratio = H // K
+    n_q, n_kv = Sq // bq, Skv // bk
+    sq = Sq if sq is None else sq
+    skv = Skv if skv is None else skv
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, scale=1.0 / (hd ** 0.5),
+        bq=bq, bk=bk, n_kv=n_kv, sq=sq, skv=skv,
+    )
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ]
+    except ImportError:  # pragma: no cover
+        scratch = [
+            pl.MemorySpace.ANY((bq, 1), jnp.float32),  # type: ignore
+        ]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j, r=ratio: (b, j, h // r, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j, r=ratio: (b, j, h // r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Public flash-attention entry: padding, backend pick, model-facing signature."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BK, BQ, flash_attention_padded
+from .ref import flash_attention_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def flash_attention(q, k, v, q_pos=None, kv_pos=None, *, causal=True, window=None,
+                    bq=None, bk=None, backend="auto"):
+    """q [B,Sq,H,hd], k/v [B,Skv,K,hd] -> [B,Sq,H,hd].
+
+    ``q_pos``/``kv_pos`` are accepted for signature parity with
+    repro.models.attention.attention; the kernel assumes contiguous positions
+    starting at 0 (the only case the prefill path produces).
+    """
+    if backend == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = bq or min(BQ, _round_up(Sq, 128))
+    bk = bk or min(BK, _round_up(Skv, 128))
+    Sq_p, Skv_p = _round_up(Sq, bq), _round_up(Skv, bk)
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0))) if Sq_p != Sq else q
+    kp = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0))) if Skv_p != Skv else k
+    vp = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0))) if Skv_p != Skv else v
+    interpret = jax.default_backend() != "tpu"
+    out = flash_attention_padded(qp, kp, vp, causal=causal, window=window, bq=bq,
+                                 bk=bk, sq=Sq, skv=Skv, interpret=interpret)
+    return out[:, :Sq]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the flash-attention kernel: direct softmax(QK^T)V with
+causal / sliding-window masks and GQA head grouping (same maths as
+repro.models.attention.attention_direct)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attention_direct
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    Sq, Skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    kv_pos = jnp.arange(Skv, dtype=jnp.int32)
+    return attention_direct(q, k, v, q_pos, kv_pos, causal=causal, window=window)

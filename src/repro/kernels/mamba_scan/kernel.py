@@ -1,0 +1,78 @@
+"""Chunked selective-scan — Pallas TPU kernel (mamba-1 prefill hot loop).
+
+Grid (B, D/bd, S/chunk); the chunk axis is innermost so the state carry
+``h [bd, N]`` persists in VMEM scratch across the whole sequence sweep for a
+given channel block — the defining trick of hardware selective scans: the
+O(S·D·N) hidden-state tensor never touches HBM, only the O(S·(D+N)) inputs
+and O(S·D) output stream do.
+
+Per grid cell VMEM: dt,x (chunk x bd), B,C (chunk x N), A (bd x N),
+h (bd x N f32), y (chunk x bd) — chunk=256, bd=512, N=16:
+~1.6 MiB, comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 256
+BD = 512
+
+
+def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *, chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dt = dt_ref[0].astype(jnp.float32)  # [chunk, bd]
+    x = x_ref[0].astype(jnp.float32)
+    bm = b_ref[0].astype(jnp.float32)  # [chunk, N]
+    cm = c_ref[0].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)  # [bd, N]
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = dt[t][:, None]  # [bd, 1]
+        abar = jnp.exp(dt_t * a)  # [bd, N]
+        h = abar * h + (dt_t * x[t][:, None]) * bm[t][None, :]
+        y = y.at[t].set(jnp.sum(h * cm[t][None, :], axis=1))
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def selective_scan_kernel(dt, x, b, c, a, *, chunk=CHUNK, bd=BD, interpret=False):
+    """Padded shapes: S % chunk == 0, D % bd == 0.
+    dt/x [B,S,D], b/c [B,S,N], a [D,N] -> y [B,S,D] f32."""
+    B, S, D = dt.shape
+    N = a.shape[1]
+    assert S % chunk == 0 and D % bd == 0, (S, D, chunk, bd)
+    grid = (B, D // bd, S // chunk)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, j: (b_, j, d)),  # dt
+            pl.BlockSpec((1, chunk, bd), lambda b_, d, j: (b_, j, d)),  # x
+            pl.BlockSpec((1, chunk, N), lambda b_, d, j: (b_, j, 0)),  # B
+            pl.BlockSpec((1, chunk, N), lambda b_, d, j: (b_, j, 0)),  # C
+            pl.BlockSpec((bd, N), lambda b_, d, j: (d, 0)),  # A
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda b_, d, j: (b_, j, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, b, c, a)

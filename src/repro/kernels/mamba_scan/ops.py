@@ -1,0 +1,32 @@
+"""Public selective-scan entry: padding + backend pick."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BD, CHUNK, selective_scan_kernel
+from .ref import selective_scan_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def selective_scan(dt, x, b, c, a, *, chunk=None, bd=None, backend="auto"):
+    """dt/x [B,S,D], b/c [B,S,N], a [D,N] -> y [B,S,D] f32."""
+    if backend == "ref":
+        return selective_scan_ref(dt, x, b, c, a)
+    B, S, D = dt.shape
+    chunk = chunk or min(CHUNK, _round_up(S, 8))
+    bd = bd or min(BD, D)
+    Sp, Dp = _round_up(S, chunk), _round_up(D, bd)
+    pad3 = lambda t: jnp.pad(t, ((0, 0), (0, Sp - S), (0, 0)))
+    if Sp != S:
+        dt, x, b, c = pad3(dt), pad3(x), pad3(b), pad3(c)
+    if Dp != D:
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, Dp - D)))
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Dp - D)))
+        a = jnp.pad(a, ((0, Dp - D), (0, 0)))
+    interpret = jax.default_backend() != "tpu"
+    y = selective_scan_kernel(dt, x, b, c, a, chunk=chunk, bd=bd, interpret=interpret)
+    return y[:, :S, :D]

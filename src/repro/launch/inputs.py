@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input per (arch x shape) —
+weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.layers import dtype_of
+from repro.models.model import init_cache
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec, *, with_labels: bool) -> Dict[str, Any]:
+    """Inputs for train_step / prefill_step."""
+    S, B = shape.seq_len, shape.global_batch
+    dt = dtype_of(cfg.dtype)
+    if cfg.family == "encdec":
+        half = S // 2
+        out = {
+            "frames": _sds((B, half, cfg.frontend_dim), dt),
+            "tokens": _sds((B, half), jnp.int32),
+        }
+        if with_labels:
+            out["labels"] = _sds((B, half), jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        text = S - cfg.n_patches
+        out = {
+            "patches": _sds((B, cfg.n_patches, cfg.frontend_dim), dt),
+            "tokens": _sds((B, text), jnp.int32),
+        }
+        if with_labels:
+            out["labels"] = _sds((B, text), jnp.int32)
+        return out
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def decode_struct(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Dict[str, Any], Any]:
+    """(token struct, cache struct) for serve_step: one new token against a
+    KV/state cache of length seq_len."""
+    S, B = shape.seq_len, shape.global_batch
+    token = _sds((B, 1), jnp.int32)
+    if cfg.family == "encdec":
+        half = S // 2
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, half, enc_len=half))
+    else:
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return token, cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All structs for the step implied by the shape kind."""
+    if shape.kind == "train":
+        return {"batch": batch_struct(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_struct(cfg, shape, with_labels=False)}
+    token, cache = decode_struct(cfg, shape)
+    return {"token": token, "cache": cache}

@@ -1,0 +1,4 @@
+from .model import (
+    init_model, model_forward, model_loss, model_decode_step, init_cache,
+    model_flops_per_token, params_shape,
+)

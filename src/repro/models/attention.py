@@ -1,0 +1,343 @@
+"""GQA attention: memory-efficient chunked online-softmax (the XLA path used by
+dry-run compiles), a direct path for tiny smoke models, sliding-window (local)
+variants with ring-buffer decode caches, and cross-attention for enc-dec.
+
+The Pallas flash kernel (``repro.kernels.flash_attention``) implements the same
+contract for the TPU hot path; ``repro/kernels/flash_attention/ref.py`` oracles
+against the direct path here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, normal_init, zeros_init
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype, *, qkv_bias=False,
+                   prefix_shape=()) -> Dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(ks[0], (*prefix_shape, d_model, n_heads * head_dim), dtype),
+        "wk": normal_init(ks[1], (*prefix_shape, d_model, n_kv_heads * head_dim), dtype),
+        "wv": normal_init(ks[2], (*prefix_shape, d_model, n_kv_heads * head_dim), dtype),
+        "wo": normal_init(ks[3], (*prefix_shape, n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = zeros_init(ks[0], (*prefix_shape, n_heads * head_dim), dtype)
+        p["bk"] = zeros_init(ks[1], (*prefix_shape, n_kv_heads * head_dim), dtype)
+        p["bv"] = zeros_init(ks[2], (*prefix_shape, n_kv_heads * head_dim), dtype)
+    return p
+
+
+def qkv_proj(params: Dict, x, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (
+        q.reshape(B, S, n_heads, head_dim),
+        k.reshape(B, S, n_kv_heads, head_dim),
+        v.reshape(B, S, n_kv_heads, head_dim),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# core attention maths
+# --------------------------------------------------------------------------- #
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: Optional[int]):
+    """[...,Sq,Skv] additive bias from position masks."""
+    ok = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= kv_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_direct(q, k, v, q_pos, kv_pos, *, causal=True, window=None):
+    """Reference/smoke path: materialises the score matrix.
+
+    q [B,Sq,H,hd], k/v [B,Skv,K,hd] -> [B,Sq,H,hd]
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) / jnp.sqrt(hd)
+    scores = scores + _mask_bias(q_pos, kv_pos, causal=causal, window=window)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, q_pos, kv_pos, *, causal=True, window=None, chunk=512,
+                      block_skip=False):
+    """Online-softmax over kv chunks: O(Sq * chunk) live scores instead of
+    O(Sq * Skv).  This is the memory-roofline-friendly XLA path for 32k prefill.
+
+    With ``block_skip`` (a §Perf knob) fully-masked (q-block, kv-chunk) pairs'
+    flops still appear in HLO (XLA cannot drop them), so the *useful* causal
+    flops ratio is accounted analytically in the roofline report instead.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    if Skv % chunk != 0:
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad),), constant_values=2**30)
+        Skv += pad
+    n_chunks = Skv // chunk
+
+    qf = (q / jnp.sqrt(hd).astype(q.dtype)).reshape(B, Sq, K, G, hd)
+    kc = k.reshape(B, n_chunks, chunk, K, hd).swapaxes(0, 1)  # [n,B,c,K,hd]
+    vc = v.reshape(B, n_chunks, chunk, K, hd).swapaxes(0, 1)
+    pc = kv_pos.reshape(n_chunks, chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kj,
+                       preferred_element_type=jnp.float32)
+        s = s + _mask_bias(q_pos, pj, causal=causal, window=window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention_chunked2d(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                        chunk=512, q_block=2048):
+    """Two-level chunking with causal pair packing (§Perf iteration).
+
+    The 1-D chunked path keeps an O(Sq x hd) accumulator live across every kv
+    chunk — per-layer HBM traffic ~ acc_bytes * Skv/chunk.  Here queries are
+    blocked too, and the scan enumerates only the (q-block, kv-chunk) pairs
+    the causal (and sliding-window) mask can reach: for causal attention
+    that's ~half the rectangle, so both the masked-out matmul flops *and* the
+    accumulator round-trips drop ~2x — visible directly in the lowered HLO
+    (the trip count of the pair loop).  Exact same maths as `attention_direct`
+    (online softmax over segments; tested in tests/test_attention.py).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    qb = min(q_block, Sq)
+    if Sq % qb != 0:
+        return attention_chunked(q, k, v, q_pos, kv_pos, causal=causal,
+                                 window=window, chunk=chunk)
+    ck = min(chunk, Skv)
+    pad = (-Skv) % ck
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad),), constant_values=2**30)
+    n_q, n_kv = Sq // qb, (Skv + pad) // ck
+
+    # static pair list: only (i, j) blocks the mask can reach (positions are
+    # contiguous from 0 on this path — the prefill/train case)
+    pairs = []
+    for i in range(n_q):
+        qlo, qhi = i * qb, (i + 1) * qb - 1
+        for j in range(n_kv):
+            klo = j * ck
+            if klo >= Skv:
+                continue
+            khi = min((j + 1) * ck, Skv) - 1
+            if causal and klo > qhi:
+                continue  # entirely in the future
+            if window is not None and khi <= qlo - window:
+                continue  # entirely outside the window
+            pairs.append((i, j))
+    pair_i = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pair_j = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    seg_end = jnp.asarray(
+        [t + 1 == len(pairs) or pairs[t + 1][0] != pairs[t][0] for t in range(len(pairs))]
+    )
+
+    qf = (q / jnp.sqrt(hd).astype(q.dtype)).reshape(B, n_q, qb, K, G, hd)
+    kc = k.reshape(B, n_kv, ck, K, hd)
+    vc = v.reshape(B, n_kv, ck, K, hd)
+    out0 = jnp.zeros((B, n_q, qb, K, G, hd), q.dtype)
+
+    def body(carry, inp):
+        m, l, acc, out = carry
+        i, j, is_end = inp
+        qi = jax.lax.dynamic_index_in_dim(qf, i, 1, keepdims=False)  # [B,qb,K,G,hd]
+        kj = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        qp = i * qb + jnp.arange(qb, dtype=jnp.int32)
+        kp = j * ck + jnp.arange(ck, dtype=jnp.int32)
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qi, kj,
+                       preferred_element_type=jnp.float32)
+        ok = jnp.ones((qb, ck), bool)
+        ok &= (kp < Skv)[None, :]
+        if causal:
+            ok &= kp[None, :] <= qp[:, None]
+        if window is not None:
+            ok &= kp[None, :] > qp[:, None] - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        blk = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]).transpose(0, 3, 1, 2, 4)
+        out = jax.lax.cond(
+            is_end,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, blk.astype(o.dtype), i, 1),
+            lambda o: o,
+            out,
+        )
+        reset = is_end
+        m_next = jnp.where(reset, jnp.full_like(m_new, NEG_INF), m_new)
+        l_next = jnp.where(reset, jnp.zeros_like(l_new), l_new)
+        acc_next = jnp.where(reset, jnp.zeros_like(acc_new), acc_new)
+        return (m_next, l_next, acc_next, out), None
+
+    m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, qb, hd), jnp.float32)
+    (_, _, _, out), _ = jax.lax.scan(body, (m0, l0, acc0, out0),
+                                     (pair_i, pair_j, seg_end))
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None, impl="chunked",
+              chunk=512, q_block=2048):
+    if impl == "direct" or q.shape[1] * k.shape[1] <= 256 * 256:
+        return attention_direct(q, k, v, q_pos, kv_pos, causal=causal, window=window)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                                 chunk=chunk)
+    if impl == "chunked2d":
+        return attention_chunked2d(q, k, v, q_pos, kv_pos, causal=causal,
+                                   window=window, chunk=chunk, q_block=q_block)
+    if impl == "flash":  # TPU Pallas path
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, q_pos, kv_pos, causal=causal, window=window)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# --------------------------------------------------------------------------- #
+# decode (one new token against a cache)
+# --------------------------------------------------------------------------- #
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, slot_pos=None):
+    """q [B,1,H,hd]; caches [B,Smax,K,hd]; ``pos`` scalar int32 = index of the
+    new token.  ``slot_pos`` [Smax] gives the absolute position stored in each
+    cache slot (ring buffers); defaults to iota for linear caches."""
+    B, Smax, K, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // K
+    if slot_pos is None:
+        slot_pos = jnp.arange(Smax, dtype=jnp.int32)
+    # keep the cache in its storage dtype: bf16 dots with f32 accumulation
+    # (a full-cache bf16->f32 convert per layer costs more HBM than the
+    # attention itself — §Perf qwen1.5-32b decode iteration 2)
+    qf = (q / jnp.sqrt(hd).astype(q.dtype)).reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    ok = slot_pos <= pos
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_attention_buffered(q, k_cache, v_cache, kb, vb, cache_len, pos):
+    """Decode against a *read-only* main cache plus a small append buffer
+    (paged-append KV, §Perf qwen1.5-32b iteration 3).
+
+    The main cache's sequence dim may be sharded — it is never written during
+    decode, so GSPMD emits no per-step full-shard select/update rewrite; the
+    buffer is tiny and unsharded, so its dynamic update stays local.
+
+    q [B,1,H,hd]; k_cache/v_cache [B,L,K,hd] hold positions [0, cache_len);
+    kb/vb [B,BUF,K,hd] hold positions [cache_len, cache_len+BUF); ``pos`` is
+    the current token's position (attends to everything <= pos).
+    """
+    B, L, K, hd = k_cache.shape
+    BUF = kb.shape[1]
+    H = q.shape[2]
+    G = H // K
+    qf = (q / jnp.sqrt(hd).astype(q.dtype)).reshape(B, K, G, hd)
+    s1 = jnp.einsum("bkgh,bskh->bkgs", qf, k_cache,
+                    preferred_element_type=jnp.float32)  # [B,K,G,L]
+    s2 = jnp.einsum("bkgh,bskh->bkgs", qf, kb,
+                    preferred_element_type=jnp.float32)  # [B,K,G,BUF]
+    ok1 = jnp.arange(L, dtype=jnp.int32) < cache_len
+    ok2 = cache_len + jnp.arange(BUF, dtype=jnp.int32) <= pos
+    s1 = jnp.where(ok1[None, None, None, :], s1, NEG_INF)
+    s2 = jnp.where(ok2[None, None, None, :], s2, NEG_INF)
+    m = jnp.maximum(s1.max(axis=-1), s2.max(axis=-1))
+    e1 = jnp.exp(s1 - m[..., None])
+    e2 = jnp.exp(s2 - m[..., None])
+    l = e1.sum(axis=-1) + e2.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", e1.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o + jnp.einsum("bkgs,bskh->bkgh", e2.astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_insert(k_cache, v_cache, k_new, v_new, pos):
+    """Write [B,1,K,hd] at index pos of a linear cache."""
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache
+
+
+def ring_insert(k_cache, v_cache, k_new, v_new, pos, window):
+    slot = pos % window
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    return k_cache, v_cache
+
+
+def ring_slot_positions(pos, window):
+    """Absolute position stored in each slot of a ring cache after writing
+    ``pos``: slot s holds the largest p <= pos with p % window == s."""
+    s = jnp.arange(window, dtype=jnp.int32)
+    p = pos - ((pos - s) % window)
+    return jnp.where(p >= 0, p, 2**30)  # not-yet-written slots masked out

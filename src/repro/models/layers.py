@@ -1,0 +1,135 @@
+"""Shared neural-net building blocks (functional, pytree params)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+
+def normal_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(key, d, dtype, norm_type: str) -> Dict:
+    if norm_type == "rmsnorm":
+        return {"w": ones_init(key, (d,), dtype)}
+    return {"w": ones_init(key, (d,), dtype), "b": zeros_init(key, (d,), dtype)}
+
+
+def apply_norm(params: Dict, x, norm_type: str, eps: float):
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, params["w"], eps)
+    return layernorm(x, params["w"], params["b"], eps)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+
+
+def init_mlp(key, d, ff, dtype, mlp_type: str, prefix_shape=()) -> Dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": normal_init(ks[0], (*prefix_shape, d, ff), dtype),
+            "w_up": normal_init(ks[1], (*prefix_shape, d, ff), dtype),
+            "w_down": normal_init(ks[2], (*prefix_shape, ff, d), dtype),
+        }
+    return {
+        "w_up": normal_init(ks[0], (*prefix_shape, d, ff), dtype),
+        "b_up": zeros_init(ks[0], (*prefix_shape, ff), dtype),
+        "w_down": normal_init(ks[1], (*prefix_shape, ff, d), dtype),
+        "b_down": zeros_init(ks[1], (*prefix_shape, d), dtype),
+    }
+
+
+def apply_mlp(params: Dict, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ params["w_down"]
+    h = x @ params["w_up"] + params["b_up"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"] + params["b_down"]
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# embeddings / heads
+# --------------------------------------------------------------------------- #
+
+
+def init_embed(key, vocab, d, dtype) -> Dict:
+    return {"tok": normal_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+def embed_tokens(params: Dict, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def logits_from_hidden(x, head_w):
+    """x [..., D] @ head_w [D, V] -> f32 logits."""
+    return (x @ head_w).astype(jnp.float32)

@@ -1,0 +1,57 @@
+"""Family dispatch: one entry point per model operation."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, param_counts
+from . import encdec as ed
+from . import transformer as tf
+
+
+def init_model(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return ed.init_encdec(cfg, key)
+    return tf.init_lm(cfg, key)
+
+
+def model_forward(cfg: ModelConfig, params, batch, *, impl=None):
+    if cfg.family == "encdec":
+        return ed.encdec_forward(cfg, params, batch, impl=impl)
+    return tf.lm_forward(cfg, params, batch, impl=impl)
+
+
+def model_loss(cfg: ModelConfig, params, batch, *, impl=None):
+    hidden = model_forward(cfg, params, batch, impl=impl)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        hidden = hidden[:, -labels.shape[1]:]  # drop patch positions
+    if cfg.family == "encdec":
+        return ed.encdec_loss(cfg, params, hidden, labels)
+    return tf.lm_loss(cfg, params, hidden, labels)
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, *, enc_len: int = 0):
+    if cfg.family == "encdec":
+        return ed.encdec_init_cache(cfg, B, max_len, enc_len)
+    return tf.init_cache(cfg, B, max_len)
+
+
+def model_decode_step(cfg: ModelConfig, params, cache, token):
+    if cfg.family == "encdec":
+        return ed.encdec_decode_step(cfg, params, cache, token)
+    return tf.lm_decode_step(cfg, params, cache, token)
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS = 6 * N_active per token (attention flops excluded — the
+    roofline report adds them separately where relevant)."""
+    _, active = param_counts(cfg)
+    return 6.0 * active
+
+
+def params_shape(cfg: ModelConfig):
+    """Parameter ShapeDtypeStruct tree without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,212 @@
+"""Mamba-1 selective state-space block (falcon-mamba / jamba substrate).
+
+Prefill/train uses a chunked scan: ``lax.scan`` carries the [B, di, N] state
+across sequence chunks, and inside a chunk an associative scan materialises at
+most ``[B, chunk, di, N]`` — bounded VMEM-sized working set instead of the
+O(S·di·N) naive expansion.  The same chunked structure is the blueprint for the
+Pallas kernel in ``repro/kernels/mamba_scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMSpec
+from repro.sharding.ctx import shard
+from .layers import normal_init, zeros_init
+
+
+def init_mamba(key, d_model, spec: SSMSpec, dtype, prefix_shape=()) -> Dict:
+    di = spec.expand * d_model
+    dtr = spec.resolved_dt_rank(d_model)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a = jnp.tile(jnp.arange(1, spec.d_state + 1, dtype=jnp.float32), (di, 1))
+    a_log = jnp.broadcast_to(jnp.log(a), (*prefix_shape, di, spec.d_state))
+    return {
+        "in_proj": normal_init(ks[0], (*prefix_shape, d_model, 2 * di), dtype),
+        "conv_w": normal_init(ks[1], (*prefix_shape, di, spec.conv_dim), dtype,
+                              scale=1.0 / np.sqrt(spec.conv_dim)),
+        "conv_b": zeros_init(ks[1], (*prefix_shape, di), dtype),
+        "x_proj": normal_init(ks[2], (*prefix_shape, di, dtr + 2 * spec.d_state), dtype),
+        "dt_w": normal_init(ks[3], (*prefix_shape, dtr, di), dtype),
+        "dt_b": zeros_init(ks[3], (*prefix_shape, di), dtype),
+        "a_log": a_log.astype(jnp.float32),
+        "d_skip": jnp.ones((*prefix_shape, di), jnp.float32),
+        "out_proj": normal_init(ks[4], (*prefix_shape, di, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv over sequence.  x [B,S,di], w [di,kw].
+    Returns (y [B,S,di], new_conv_state [B,di,kw-1])."""
+    B, S, di = x.shape
+    kw = w.shape[-1]
+    if conv_state is None:
+        ctx = jnp.zeros((B, kw - 1, di), x.dtype)
+    else:
+        ctx = conv_state.swapaxes(1, 2)  # [B, kw-1, di]
+    xp = jnp.concatenate([ctx, x], axis=1)  # [B, S+kw-1, di]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(kw):  # kw is tiny (4): unrolled taps beat a real conv here
+        y = y + xp[:, i : i + S, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, S:, :].swapaxes(1, 2) if kw > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+def _ssm_scan_chunked(abar, bx, c, h0, chunk: int):
+    """h_t = abar_t * h_{t-1} + bx_t ;  y_t = h_t · c_t.
+
+    abar/bx [B,S,di,N] (built lazily per chunk by the caller), c [B,S,N].
+    Here inputs arrive already chunked: [nc, B, cl, ...]."""
+
+    def chunk_body(h, inp):
+        ab, bxc, cc = inp  # [B, cl, di, N], [B, cl, N]
+
+        def assoc(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        # prefix transforms within the chunk
+        a_pref, b_pref = jax.lax.associative_scan(assoc, (ab, bxc), axis=1)
+        h_t = a_pref * h[:, None] + b_pref  # [B, cl, di, N]
+        y = jnp.einsum("bldn,bln->bld", h_t, cc)
+        return h_t[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_body, h0, (abar, bx, c))
+    return h_last, ys
+
+
+def mamba_forward(params: Dict, x, spec: SSMSpec, *, chunk: int = 256,
+                  scan_dtype=jnp.float32):
+    """x [B, S, D] -> [B, S, D] (training / prefill)."""
+    B, S, D = x.shape
+    di = params["d_skip"].shape[-1]
+    N = spec.d_state
+    dtr = spec.resolved_dt_rank(D)
+
+    xz = x @ params["in_proj"]  # [B, S, 2di]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xr, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    xc = shard(xc, "act_bti")
+
+    proj = xc @ params["x_proj"]  # [B, S, dtr + 2N]
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_raw @ params["dt_w"]).astype(jnp.float32) + params["dt_b"].astype(jnp.float32)
+    )  # [B, S, di] f32
+    a = -jnp.exp(params["a_log"])  # [di, N] f32
+
+    if chunk <= 0 or chunk >= S:
+        # Unchunked: one associative scan over the whole sequence.  Per-device
+        # the [B,S,di,N] expansion is modest once batch and d_inner are
+        # sharded, and — crucially — the VJP of associative_scan is more
+        # associative scans, avoiding the nested-scan backward that rebuilds
+        # full-size gradient stacks via pad+add every chunk iteration
+        # (§Perf falcon-mamba iteration 3: 96 s -> see EXPERIMENTS.md).
+        dtc = dt.astype(scan_dtype)
+        abar = jnp.exp(dtc[..., None] * a.astype(scan_dtype)).astype(scan_dtype)
+        bx = (dtc * xc.astype(scan_dtype))[..., None] * b_ssm.astype(scan_dtype)[:, :, None, :]
+
+        def assoc(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        _, h_t = jax.lax.associative_scan(assoc, (abar, bx), axis=1)  # h0 = 0
+        y = jnp.einsum("bsdn,bsn->bsd", h_t, c_ssm.astype(scan_dtype),
+                       preferred_element_type=jnp.float32)
+        y = y + params["d_skip"] * xc.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        return y @ params["out_proj"]
+
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        b_p = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p, b_p, c_p = xc, b_ssm, c_ssm
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def chunkify(t):  # [B, Sp, ...] -> [nc, B, cl, ...]
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c = chunkify(dt.astype(scan_dtype))
+    xc_c = chunkify(xc_p.astype(scan_dtype))
+    b_c = chunkify(b_p.astype(scan_dtype))
+    c_c = chunkify(c_p.astype(scan_dtype))
+
+    # abar/bx built per chunk inside the scan keeps peak memory at chunk size
+    def build(dtj, xj, bj):
+        abar = jnp.exp(dtj[..., None] * a.astype(scan_dtype)).astype(scan_dtype)
+        bx = (dtj * xj)[..., None] * bj[:, :, None, :]
+        return abar, bx
+
+    def chunk_body(h, inp):
+        dtj, xj, bj, cj = inp
+        abar, bx = build(dtj, xj, bj)
+
+        def assoc(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        a_pref, b_pref = jax.lax.associative_scan(assoc, (abar, bx), axis=1)
+        h_t = a_pref * h[:, None] + b_pref
+        y = jnp.einsum("bldn,bln->bld", h_t, cj,
+                       preferred_element_type=jnp.float32)
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), scan_dtype)
+    _, ys = jax.lax.scan(chunk_body, h0, (dt_c, xc_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
+    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    # cast before out_proj: bf16 partial-sum all-reduces are half the traffic
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"]
+
+
+def mamba_decode_step(params: Dict, x, state: Tuple, spec: SSMSpec):
+    """One-token decode.  x [B, 1, D]; state = (conv_state [B,di,kw-1],
+    h [B,di,N]).  Returns (y [B,1,D], new_state)."""
+    B, _, D = x.shape
+    di = params["d_skip"].shape[-1]
+    N = spec.d_state
+    dtr = spec.resolved_dt_rank(D)
+    conv_state, h = state
+
+    xz = x @ params["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(xr, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    proj = xc @ params["x_proj"]
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_raw @ params["dt_w"]).astype(jnp.float32) + params["dt_b"].astype(jnp.float32)
+    )[:, 0]  # [B, di]
+    a = -jnp.exp(params["a_log"])
+    abar = jnp.exp(dt[..., None] * a)  # [B, di, N]
+    bx = (dt * xc[:, 0].astype(jnp.float32))[..., None] * b_ssm[:, 0, None, :].astype(jnp.float32)
+    h_new = abar * h + bx
+    y = jnp.einsum("bdn,bn->bd", h_new, c_ssm[:, 0].astype(jnp.float32))
+    y = y + params["d_skip"] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    return (y @ params["out_proj"])[:, None, :], (new_conv, h_new)
+
+
+def init_mamba_state(B, d_model, spec: SSMSpec, dtype):
+    di = spec.expand * d_model
+    return (
+        jnp.zeros((B, di, spec.conv_dim - 1), dtype),
+        jnp.zeros((B, di, spec.d_state), jnp.float32),
+    )

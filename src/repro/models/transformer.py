@@ -1,0 +1,378 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are stacked ``[G, ...]`` per period position and applied with
+``jax.lax.scan`` over groups, so HLO size (and compile time on the 512-device
+dry-run mesh) is O(period), not O(depth).  Heterogeneous periods (gemma3's
+5-local:1-global, jamba's 1-attn:7-mamba with MoE every other layer) unroll
+statically *inside* the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.ctx import shard
+from . import attention as attn_mod
+from .attention import (
+    attention,
+    cache_insert,
+    decode_attention,
+    decode_attention_buffered,
+    init_attention,
+    qkv_proj,
+    ring_insert,
+    ring_slot_positions,
+)
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    dtype_of,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_norm,
+    normal_init,
+)
+from .moe import init_moe, moe_ffn
+from .ssm import init_mamba, init_mamba_state, mamba_decode_step, mamba_forward
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _init_layer(cfg: ModelConfig, key, p: int, prefix_shape=None) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    prefix = (cfg.n_groups,) if prefix_shape is None else tuple(prefix_shape)
+    ks = jax.random.split(key, 6)
+    lp: Dict[str, Any] = {
+        "ln1": init_norm(ks[0], cfg.d_model, dt, cfg.norm_type),
+        "ln2": init_norm(ks[1], cfg.d_model, dt, cfg.norm_type),
+    }
+    if prefix:
+        lp["ln1"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (*prefix, *a.shape)), lp["ln1"])
+        lp["ln2"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (*prefix, *a.shape)), lp["ln2"])
+    kind = cfg.layer_kind(p)
+    if kind == "mamba":
+        lp["ssm"] = init_mamba(ks[2], cfg.d_model, cfg.ssm, dt, prefix_shape=prefix)
+    else:
+        lp["attn"] = init_attention(
+            ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            qkv_bias=cfg.qkv_bias, prefix_shape=prefix,
+        )
+    fk = cfg.ffn_kind(p)
+    if fk in ("dense", "moe+dense"):
+        lp["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, dt, cfg.mlp_type,
+                             prefix_shape=prefix)
+    if fk in ("moe", "moe+dense"):
+        lp["moe"] = init_moe(ks[4], cfg.d_model, cfg.moe, dt, cfg.mlp_type,
+                             prefix_shape=prefix)
+    return lp
+
+
+def init_lm(cfg: ModelConfig, key) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, cfg.period + 4)
+    params: Dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": init_norm(ks[1], cfg.d_model, dt, cfg.norm_type),
+        "layers": [_init_layer(cfg, ks[2 + p], p) for p in range(cfg.period)],
+    }
+    if cfg.n_tail:
+        params["tail"] = [
+            _init_layer(cfg, jax.random.fold_in(ks[2 + p], 1000), p, prefix_shape=())
+            for p in range(cfg.n_tail)
+        ]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(ks[-2], (cfg.d_model, cfg.vocab), dt)
+    if cfg.frontend == "vision":
+        params["frontend"] = {
+            "w1": normal_init(ks[-1], (cfg.frontend_dim, cfg.d_model), dt),
+            "w2": normal_init(ks[-1], (cfg.d_model, cfg.d_model), dt),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# layer application
+# --------------------------------------------------------------------------- #
+
+
+def _rope_theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == "attn" and cfg.rope_theta_global is not None:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _apply_attn_layer(cfg: ModelConfig, lp, x, positions, kind, impl):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = qkv_proj(lp["attn"], x, cfg.n_heads, cfg.n_kv_heads, hd)
+    theta = _rope_theta(cfg, kind)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = shard(q, "attn_q")
+    k = shard(k, "attn_kv")
+    v = shard(v, "attn_kv")
+    window = cfg.sliding_window if kind == "local" else None
+    y = attention(q, k, v, positions, positions, causal=True, window=window,
+                  impl=impl, chunk=cfg.attn_chunk, q_block=cfg.attn_q_block)
+    y = shard(y, "attn_out")
+    y = y.reshape(B, S, cfg.n_heads * hd) @ lp["attn"]["wo"]
+    return y, (k, v)
+
+
+def _apply_ffn(cfg: ModelConfig, lp, h, p: int):
+    fk = cfg.ffn_kind(p)
+    if fk == "dense":
+        return apply_mlp(lp["mlp"], h, cfg.mlp_type)
+    out = moe_ffn(lp["moe"], h, cfg.moe, cfg.mlp_type)
+    if fk == "moe+dense":
+        out = out + apply_mlp(lp["mlp"], h, cfg.mlp_type)
+    return out
+
+
+def _apply_layer(cfg: ModelConfig, lp, x, positions, p: int, impl, collect_cache):
+    kind = cfg.layer_kind(p)
+    h = apply_norm(lp["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    kv = None
+    if kind == "mamba":
+        from .layers import dtype_of as _dt
+        y = mamba_forward(lp["ssm"], h, cfg.ssm, chunk=cfg.scan_chunk,
+                          scan_dtype=_dt(cfg.ssm_scan_dtype))
+    else:
+        y, kv = _apply_attn_layer(cfg, lp, h, positions, kind, impl)
+    x = x + y
+    x = shard(x, "act_btd")
+    h = apply_norm(lp["ln2"], x, cfg.norm_type, cfg.norm_eps)
+    x = x + _apply_ffn(cfg, lp, h, p)
+    x = shard(x, "act_btd")
+    if collect_cache:
+        return x, (kind, kv, h)
+    return x, None
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+
+def _input_embeds(cfg: ModelConfig, params, batch):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision":
+        p = batch["patches"] @ params["frontend"]["w1"]
+        p = jax.nn.gelu(p.astype(jnp.float32)).astype(x.dtype) @ params["frontend"]["w2"]
+        x = jnp.concatenate([p.astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_forward(cfg: ModelConfig, params, batch, *, impl=None):
+    """-> final hidden states [B, S_total, D]."""
+    impl = impl or cfg.attn_impl
+    x = _input_embeds(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = shard(x, "act_btd")
+
+    def group_body(carry, gp):
+        h = carry
+        for p in range(cfg.period):
+            h, _ = _apply_layer(cfg, gp[p], h, positions, p, impl, False)
+        return h, None
+
+    body = group_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    for p in range(cfg.n_tail):  # remainder layers (unrolled)
+        x, _ = _apply_layer(cfg, params["tail"][p], x, positions, p, impl, False)
+    return apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+def head_weights(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["lm_head"]
+
+
+def lm_loss(cfg: ModelConfig, params, hidden, labels):
+    """Chunked cross-entropy: logits are materialised ``loss_chunk`` tokens at
+    a time, bounding the [tokens, vocab] buffer."""
+    B, S, D = hidden.shape
+    head = head_weights(cfg, params)
+    h = hidden.reshape(B * S, D)
+    y = labels.reshape(B * S)
+    N = h.shape[0]
+    chunk = min(cfg.loss_chunk, N)
+    pad = (-N) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, pad),), constant_values=-1)
+    nc = h.shape[0] // chunk
+    h = h.reshape(nc, chunk, D)
+    y = y.reshape(nc, chunk)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, yc = inp
+        logits = (hc @ head).astype(jnp.float32)  # [chunk, V]
+        logits = shard(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        correct = jnp.take_along_axis(
+            logits, jnp.clip(yc, 0, cfg.vocab - 1)[:, None], axis=-1
+        )[:, 0]
+        w = (yc >= 0).astype(jnp.float32)
+        return (tot + ((lse - correct) * w).sum(), cnt + w.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (h, y))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_logits(cfg: ModelConfig, params, hidden):
+    return (hidden @ head_weights(cfg, params)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int):
+    """Empty decode cache pytree (shapes only matter for the dry-run)."""
+    dt = dtype_of(cfg.dtype)
+    G = cfg.n_groups
+    hd = cfg.resolved_head_dim
+
+    def one(p, prefix):
+        kind = cfg.layer_kind(p)
+        if kind == "mamba":
+            di = cfg.ssm.expand * cfg.d_model
+            return {
+                "conv": jnp.zeros((*prefix, B, di, cfg.ssm.conv_dim - 1), dt),
+                "h": jnp.zeros((*prefix, B, di, cfg.ssm.d_state), jnp.float32),
+            }
+        L = cfg.sliding_window if kind == "local" else max_len
+        lc = {
+            "k": jnp.zeros((*prefix, B, L, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((*prefix, B, L, cfg.n_kv_heads, hd), dt),
+        }
+        if kind == "attn" and cfg.decode_buffer:
+            lc["bk"] = jnp.zeros((*prefix, B, cfg.decode_buffer, cfg.n_kv_heads, hd), dt)
+            lc["bv"] = jnp.zeros((*prefix, B, cfg.decode_buffer, cfg.n_kv_heads, hd), dt)
+        return lc
+
+    cache = {
+        "layers": [one(p, (G,)) for p in range(cfg.period)],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.decode_buffer:
+        cache["cache_len"] = jnp.zeros((), jnp.int32)
+    if cfg.n_tail:
+        cache["tail"] = [one(p, ()) for p in range(cfg.n_tail)]
+    return cache
+
+
+def _decode_layer(cfg: ModelConfig, lp, lc, x, pos, p: int, cache_len=None):
+    kind = cfg.layer_kind(p)
+    h = apply_norm(lp["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    if kind == "mamba":
+        y, (conv, hs) = mamba_decode_step(lp["ssm"], h, (lc["conv"], lc["h"]), cfg.ssm)
+        new_lc = {"conv": conv, "h": hs}
+    else:
+        B = x.shape[0]
+        hd = cfg.resolved_head_dim
+        q, k, v = qkv_proj(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads, hd)
+        theta = _rope_theta(cfg, kind)
+        posv = pos[None]
+        q = apply_rope(q, posv, theta)
+        k = apply_rope(k, posv, theta)
+        if kind == "local":
+            w = cfg.sliding_window
+            kc, vc = ring_insert(lc["k"], lc["v"], k, v, pos, w)
+            y = decode_attention(q, kc, vc, pos, slot_pos=ring_slot_positions(pos, w))
+            new_lc = {"k": kc, "v": vc}
+        elif cfg.decode_buffer:
+            # paged-append: the big (possibly seq-sharded) cache is read-only;
+            # the new token lands in the small unsharded buffer
+            bi = pos - cache_len
+            kb = jax.lax.dynamic_update_slice(lc["bk"], k.astype(lc["bk"].dtype),
+                                              (0, bi, 0, 0))
+            vb = jax.lax.dynamic_update_slice(lc["bv"], v.astype(lc["bv"].dtype),
+                                              (0, bi, 0, 0))
+            y = decode_attention_buffered(q, lc["k"], lc["v"], kb, vb, cache_len, pos)
+            new_lc = {"bk": kb, "bv": vb}
+        else:
+            kc, vc = cache_insert(lc["k"], lc["v"], k, v, pos)
+            y = decode_attention(q, kc, vc, pos, slot_pos=None)
+            new_lc = {"k": kc, "v": vc}
+        y = y.reshape(B, 1, cfg.n_heads * hd) @ lp["attn"]["wo"]
+    x = x + y
+    h = apply_norm(lp["ln2"], x, cfg.norm_type, cfg.norm_eps)
+    x = x + _apply_ffn(cfg, lp, h, p)
+    return x, new_lc
+
+
+def lm_decode_step(cfg: ModelConfig, params, cache, token):
+    """token [B, 1] -> (logits [B, vocab] f32, new cache)."""
+    x = embed_tokens(params["embed"], token)
+    pos = cache["pos"]
+    cache_len = cache.get("cache_len")
+
+    def group_body(carry, inp):
+        h = carry
+        gp, gc = inp
+        new_gc = []
+        for p in range(cfg.period):
+            h, nlc = _decode_layer(cfg, gp[p], gc[p], h, pos, p, cache_len)
+            new_gc.append(nlc)
+        return h, new_gc
+
+    x, new_layers = jax.lax.scan(group_body, x, (params["layers"], cache["layers"]))
+    # merge updated leaves over the untouched (read-only) ones
+    merged = [{**cache["layers"][p], **new_layers[p]} for p in range(cfg.period)]
+    new_cache = {"layers": merged, "pos": pos + 1}
+    if cache_len is not None:
+        new_cache["cache_len"] = cache_len
+    if cfg.n_tail:
+        new_tail = []
+        for p in range(cfg.n_tail):
+            x, nlc = _decode_layer(cfg, params["tail"][p], cache["tail"][p], x, pos, p,
+                                   cache_len)
+            new_tail.append({**cache["tail"][p], **nlc})
+        new_cache["tail"] = new_tail
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    logits = shard(logits, "logits_bv")
+    return logits, new_cache
+
+
+def merge_decode_buffer(cfg: ModelConfig, cache):
+    """Fold the (full) append buffer into the main cache — runs once every
+    ``decode_buffer`` tokens, amortising the sharded-dim scatter."""
+    if not cfg.decode_buffer:
+        return cache
+    cl = cache["cache_len"]
+
+    def merge_lc(lc):
+        if "bk" not in lc:
+            return lc
+        nd = lc["k"].ndim  # [G?, B, L, K, hd]
+        start = (0,) * (nd - 4) + (0, cl, 0, 0) if nd == 4 else (0, 0, cl, 0, 0)
+        k = jax.lax.dynamic_update_slice(lc["k"], lc["bk"].astype(lc["k"].dtype), start)
+        v = jax.lax.dynamic_update_slice(lc["v"], lc["bv"].astype(lc["v"].dtype), start)
+        return {**lc, "k": k, "v": v,
+                "bk": jnp.zeros_like(lc["bk"]), "bv": jnp.zeros_like(lc["bv"])}
+
+    new = dict(cache)
+    new["layers"] = [merge_lc(lc) for lc in cache["layers"]]
+    if cfg.n_tail:
+        new["tail"] = [merge_lc(lc) for lc in cache["tail"]]
+    new["cache_len"] = cl + cfg.decode_buffer
+    return new

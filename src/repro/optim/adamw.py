@@ -1,0 +1,93 @@
+"""AdamW over pytrees, with global-norm clipping, cosine schedule, and
+configurable moment/master dtypes (>=398B archs train with bf16 moments and no
+fp32 master so optimizer state fits a single pod — see DESIGN.md §5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"  # float32 | bfloat16
+    master_weights: bool = False  # keep an fp32 copy of bf16 params
+
+
+def _mdt(cfg: AdamWConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(cfg: AdamWConfig, params) -> Dict[str, Any]:
+    dt = _mdt(cfg)
+    state = {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def update(cfg: AdamWConfig, params, grads, state) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"]
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+    dt = _mdt(cfg)
+
+    new_m = jax.tree.map(lambda m, g: (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g).astype(dt),
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g).astype(dt),
+                         state["v"], grads)
+
+    base = state["master"] if cfg.master_weights else params
+
+    def step_param(p, m, v):
+        mh = m.astype(jnp.float32) / bc1
+        vh = v.astype(jnp.float32) / bc2
+        upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return p.astype(jnp.float32) - lr * upd
+
+    new_base = jax.tree.map(step_param, base, new_m, new_v)
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    if cfg.master_weights:
+        new_state["master"] = new_base
+        new_params = jax.tree.map(lambda b, p: b.astype(p.dtype), new_base, params)
+    else:
+        new_params = jax.tree.map(lambda b, p: b.astype(p.dtype), new_base, params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

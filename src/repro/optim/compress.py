@@ -1,0 +1,50 @@
+"""int8 gradient compression with error feedback.
+
+At multi-pod scale the cross-pod (DCN) gradient all-reduce is the slowest
+collective; quantising gradients to int8 with per-tensor scale cuts that
+traffic 4x (vs f32) while error feedback keeps the *accumulated* quantisation
+error bounded, preserving convergence (validated on a tiny LM in
+tests/test_optim.py).  The compressor is a pure transformation of the gradient
+pytree: q = round(g/s); decode feeds the residual (g - s*q) forward into the
+next step via a state slot in opt_state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressor:
+    enabled: bool = True
+    bits: int = 8
+
+    def init(self, params) -> Dict[str, Any]:
+        return {"ef": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def apply(self, grads, opt_state) -> Tuple[Any, Dict[str, Any]]:
+        """Quantise+dequantise grads (the collective would run on the int8
+        payload), carrying the residual via error feedback."""
+        if not self.enabled:
+            return grads, opt_state
+        ef = opt_state["compress"]["ef"]
+        qmax = 2.0 ** (self.bits - 1) - 1
+
+        def comp(g, e):
+            g = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+            q = jnp.round(g / scale).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+            return deq, g - deq
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef)
+        outs = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+        new_g = jax.tree.unflatten(tree, [o[0] for o in outs])
+        new_e = jax.tree.unflatten(tree, [o[1] for o in outs])
+        new_state = dict(opt_state)
+        new_state["compress"] = {"ef": new_e}
+        return new_g, new_state

@@ -1,0 +1,284 @@
+"""Multi-tenant serving controller: aAPP-driven placement of model work onto
+TPU cells (DESIGN.md §2 mapping).
+
+The engine *synthesises aAPP policies programmatically* (the paper's §II notes
+platforms may synthesise scripts from workflow knowledge) and evaluates them
+with the exact Listing-1 machinery:
+
+* every deployed model M contributes a residency tag ``model:M`` (a long-lived
+  pseudo-function pinned on the cells holding M's weights) — prefill/decode
+  for M are *affine* to it (code locality / cold-start avoidance);
+* a prefill for session s allocates a persistent ``kv:s`` pseudo-function on
+  the chosen cell — decodes for s are *affine* to it (the paper's session
+  locality: the KV cache is the "open DB connection");
+* latency-class isolation is *anti-affinity*: ``decode`` requests refuse cells
+  hosting ``train`` or ``heavy-prefill`` work, exactly like `divide`/`impera`
+  vs `heavy` in §II.
+
+Fault tolerance: heartbeat-based failure detection; a dead cell simply leaves
+``conf`` (Listing 1 line 19 handles the rest) and its sessions are re-prefilled
+elsewhere.  Stragglers are hedged with a duplicate request that is anti-affine
+to its own tag, so the hedge lands on a different cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import (
+    AAppScript,
+    Affinity,
+    Block,
+    ClusterState,
+    Invalidate,
+    Registry,
+    SchedulingFailure,
+    TagPolicy,
+    schedule,
+    try_schedule,
+)
+from repro.cluster.topology import CellSpec
+
+TRAIN_TAG = "train"
+PREFILL_TAG_PREFIX = "prefill"
+DECODE_TAG_PREFIX = "decode"
+
+
+@dataclasses.dataclass
+class Request:
+    model: str
+    kind: str  # prefill | decode | train
+    session: Optional[str] = None
+    payload: Any = None
+    rid: str = ""
+    submitted_at: float = 0.0
+    hedged: bool = False
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: str
+    cell: str
+    ok: bool
+    latency: float
+    result: Any = None
+    hedge_won: bool = False
+
+
+class Engine:
+    def __init__(self, cells: Dict[str, CellSpec], *,
+                 runner: Optional[Callable[[Request, str], Any]] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 hedge_after: Optional[float] = None,
+                 heartbeat_timeout: float = 10.0):
+        self.cells = dict(cells)
+        self.state = ClusterState()
+        self.reg = Registry()
+        self.clock = clock
+        self.runner = runner or (lambda req, cell: None)
+        self.hedge_after = hedge_after
+        self.heartbeat_timeout = heartbeat_timeout
+        self._ids = itertools.count()
+        self._heartbeat: Dict[str, float] = {}
+        self._sessions: Dict[str, Tuple[str, str]] = {}  # session -> (cell, kv act id)
+        self._model_cells: Dict[str, List[str]] = {}
+        self._model_acts: Dict[Tuple[str, str], str] = {}
+        self._model_mem: Dict[str, float] = {}
+        self._persistent: Dict[str, str] = {}  # rid -> activation id (train streams)
+        self.completions: List[Completion] = []
+        self.relocations: List[Tuple[str, str]] = []  # (session, reason)
+        for name, spec in cells.items():
+            self.state.add_worker(name, max_memory=spec.hbm_gb)
+            self._heartbeat[name] = self.clock()
+
+    # ------------------------------------------------------------------ #
+    # deployment: model residency tags
+    # ------------------------------------------------------------------ #
+
+    def deploy(self, model: str, cells: List[str], *, weights_gb: float,
+               kv_gb_per_session: float = 1.0, req_gb: float = 0.25) -> None:
+        """Pin model weights on cells; register request classes + pseudo-tags."""
+        mt = f"model:{model}"
+        self.reg.register(f"resident-{model}", memory=weights_gb, tag=mt)
+        self.reg.register(f"kvhold-{model}", memory=kv_gb_per_session, tag="")  # per session, retagged
+        self._model_mem[model] = kv_gb_per_session
+        self.reg.register(f"{PREFILL_TAG_PREFIX}-{model}", memory=req_gb,
+                          tag=f"{PREFILL_TAG_PREFIX}:{model}")
+        self.reg.register(f"{DECODE_TAG_PREFIX}-{model}", memory=req_gb,
+                          tag=f"{DECODE_TAG_PREFIX}:{model}")
+        self.reg.register("train-job", memory=req_gb, tag=TRAIN_TAG)
+        self._model_cells[model] = list(cells)
+        for c in cells:
+            act = self.state.allocate(f"resident-{model}", c, self.reg)
+            self._model_acts[(model, c)] = act.activation_id
+
+    # ------------------------------------------------------------------ #
+    # policy synthesis (aAPP as the placement language)
+    # ------------------------------------------------------------------ #
+
+    def _policy_for(self, req: Request, *, exclude_self: bool = False) -> AAppScript:
+        policies = []
+        mt = f"model:{req.model}" if req.model else None
+        if req.kind == "decode":
+            tag = f"{DECODE_TAG_PREFIX}:{req.model}"
+            terms = []
+            if exclude_self:
+                # a hedge cannot chase the session's KV (it lives on the slow
+                # cell) — fall back to model residency + self anti-affinity
+                if mt:
+                    terms.append(mt)
+                terms.append("!" + tag)
+            elif req.session and req.session in self._sessions:
+                terms.append(f"kv:{req.session}")  # session locality (affinity)
+            elif mt:
+                terms.append(mt)
+            terms.append("!" + TRAIN_TAG)  # SLO isolation (anti-affinity)
+            blocks = (Block(workers=("*",),
+                            affinity=Affinity.from_terms(terms)),)
+            # fallback: allow co-location with train rather than failing
+            fb = (Block(workers=("*",),
+                        affinity=Affinity.from_terms([t for t in terms
+                                                      if not t.startswith("!" + TRAIN_TAG)])),)
+            policies.append(TagPolicy(tag=tag, blocks=blocks + fb, followup="fail"))
+        elif req.kind == "prefill":
+            tag = f"{PREFILL_TAG_PREFIX}:{req.model}"
+            terms = ([mt] if mt else []) + ["!" + TRAIN_TAG]
+            blocks = (Block(workers=("*",),
+                            invalidate=Invalidate(capacity_used=95.0),
+                            affinity=Affinity.from_terms(terms)),)
+            # fallback: tolerate train co-location rather than failing
+            fb = (Block(workers=("*",),
+                        invalidate=Invalidate(capacity_used=95.0),
+                        affinity=Affinity.from_terms([mt] if mt else [])),)
+            policies.append(TagPolicy(tag=tag, blocks=blocks + fb, followup="fail"))
+        else:  # train
+            blocks = (Block(workers=("*",),
+                            affinity=Affinity.from_terms(
+                                ["!" + f"{DECODE_TAG_PREFIX}:{m}" for m in self._model_cells]
+                                or [])) if self._model_cells else
+                      Block(workers=("*",)),)
+            policies.append(TagPolicy(tag=TRAIN_TAG, blocks=blocks, followup="default"))
+        return AAppScript(policies=tuple(policies))
+
+    # ------------------------------------------------------------------ #
+    # request lifecycle
+    # ------------------------------------------------------------------ #
+
+    def submit(self, req: Request) -> Completion:
+        req.rid = req.rid or f"r{next(self._ids)}"
+        req.submitted_at = self.clock()
+        self.check_health()
+        fname = f"{req.kind}-{req.model}" if req.kind != "train" else "train-job"
+        script = self._policy_for(req)
+        cell = try_schedule(fname, self.state.conf(), script, self.reg)
+        if cell is None:
+            comp = Completion(req.rid, "<none>", False, 0.0)
+            self.completions.append(comp)
+            return comp
+        act = self.state.allocate(fname, cell, self.reg)
+        t0 = self.clock()
+        result = self.runner(req, cell)
+        latency = self.clock() - t0
+
+        if req.kind == "train":
+            # training jobs are long-lived streams: the allocation persists
+            # (and keeps exerting anti-affinity) until stop() is called
+            self._persistent[req.rid] = act.activation_id
+            comp = Completion(req.rid, cell, True, latency, result)
+            self.completions.append(comp)
+            return comp
+
+        hedge_won = False
+        if (self.hedge_after is not None and latency > self.hedge_after
+                and req.kind == "decode" and not req.hedged):
+            # straggler: hedge on a different cell (anti-affine to own tag)
+            hedge = dataclasses.replace(req, hedged=True, rid=req.rid + "-hedge")
+            script2 = self._policy_for(hedge, exclude_self=True)
+            cell2 = try_schedule(fname, self.state.conf(), script2, self.reg)
+            if cell2 is not None and cell2 != cell:
+                act2 = self.state.allocate(fname, cell2, self.reg)
+                t1 = self.clock()
+                result2 = self.runner(hedge, cell2)
+                l2 = self.clock() - t1
+                self.state.complete(act2.activation_id)
+                if l2 < latency:
+                    result, hedge_won = result2, True
+
+        self.state.complete(act.activation_id)
+        if req.kind == "prefill" and req.session:
+            self._bind_session(req.session, req.model, cell)
+        comp = Completion(req.rid, cell, True, latency, result, hedge_won)
+        self.completions.append(comp)
+        return comp
+
+    def _bind_session(self, session: str, model: str, cell: str) -> None:
+        old = self._sessions.get(session)
+        if old is not None:
+            self.state.complete(old[1])
+        kv_name = f"kv-{session}"
+        if kv_name not in self.reg:
+            self.reg.register(kv_name, memory=self._model_mem.get(model, 1.0),
+                              tag=f"kv:{session}")
+        act = self.state.allocate(kv_name, cell, self.reg)
+        self._sessions[session] = (cell, act.activation_id)
+
+    def session_cell(self, session: str) -> Optional[str]:
+        got = self._sessions.get(session)
+        return got[0] if got else None
+
+    # ------------------------------------------------------------------ #
+    # fault tolerance / elasticity
+    # ------------------------------------------------------------------ #
+
+    def stop(self, rid: str) -> None:
+        """End a persistent (train) job: completion notification semantics."""
+        act = self._persistent.pop(rid, None)
+        if act is not None:
+            self.state.complete(act)
+
+    def heartbeat(self, cell: str) -> None:
+        self._heartbeat[cell] = self.clock()
+
+    def check_health(self) -> List[str]:
+        now = self.clock()
+        dead = [c for c, t in self._heartbeat.items()
+                if now - t > self.heartbeat_timeout and c in self.state.workers()]
+        for c in dead:
+            self.fail_cell(c)
+        return dead
+
+    def fail_cell(self, cell: str) -> List[str]:
+        """Cell crash: evict state, re-home sessions (their KV is lost — they
+        need a fresh prefill, which the aAPP policy places on a surviving
+        cell), and re-pin model residency where replicas are configured."""
+        self.state.fail_worker(cell)
+        self._heartbeat.pop(cell, None)
+        moved = []
+        for session, (c, _act) in list(self._sessions.items()):
+            if c == cell:
+                model = next((m for m, cs in self._model_cells.items() if cell in cs),
+                             None)
+                del self._sessions[session]
+                self.relocations.append((session, f"cell {cell} failed"))
+                if model is not None:
+                    comp = self.submit(Request(model=model, kind="prefill",
+                                               session=session))
+                    if comp.ok:
+                        moved.append(session)
+        for (model, c), _ in list(self._model_acts.items()):
+            if c == cell:
+                self._model_acts.pop((model, c))
+                self._model_cells[model] = [x for x in self._model_cells[model]
+                                            if x != cell]
+        return moved
+
+    def add_cell(self, spec: CellSpec) -> None:
+        self.cells[spec.name] = spec
+        self.state.add_worker(spec.name, max_memory=spec.hbm_gb)
+        self._heartbeat[spec.name] = self.clock()
+
+    def drain_cell(self, cell: str) -> List[str]:
+        """Graceful removal: same re-homing path as failure."""
+        return self.fail_cell(cell)

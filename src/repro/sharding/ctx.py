@@ -1,0 +1,42 @@
+"""Logical sharding-constraint context.
+
+Model code is mesh-agnostic: it calls ``shard(x, "act_btd")`` at layer
+boundaries, and the launcher installs a rule table (logical name ->
+``NamedSharding``) before tracing.  Outside any rule context the calls are
+no-ops, so smoke tests on one CPU device run the same code path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_TLS = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, jax.sharding.NamedSharding]]:
+    return getattr(_TLS, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[Dict[str, jax.sharding.NamedSharding]]):
+    prev = current_rules()
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = prev
+
+
+def shard(x, name: str):
+    rules = current_rules()
+    if not rules:
+        return x
+    s = rules.get(name)
+    if s is None:
+        return x
+    if hasattr(x, "ndim") and x.ndim != len(s.spec):
+        return x  # rank mismatch (e.g. reduced smoke shapes): skip
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,225 @@
+"""Partition-spec rules: DP/FSDP over the data axes, TP/EP over ``model``,
+SP over ``data`` for single-sequence long-context caches.
+
+Specs are derived from the *path* of each leaf in the parameter / cache pytree
+(rules keyed on leaf names, applied to trailing dims; leading stack dims — the
+scan group axis — stay unsharded) with divisibility guards so e.g. seamless'
+vocab of 256206 silently falls back to replication instead of failing GSPMD.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class SpecBuilder:
+    def __init__(self, mesh: Mesh, *, fsdp: bool, tp2d: bool = False):
+        self.mesh = mesh
+        self.data = data_axes(mesh)
+        self.fsdp_ax = self.data if fsdp else None
+        # tp2d (decode placement): weights tensor-parallel over BOTH the data
+        # and model axes — nothing is gathered per token; activations are tiny
+        # so their partial-sum all-reduces are ~MB not ~GB (§Perf qwen32 iter)
+        self.model_ax = ("data", "model") if tp2d else "model"
+
+    def _fit(self, dim: int, axes) -> Optional[Any]:
+        """Return axes if dim divides the axes product, else None (replicate)."""
+        if axes is None:
+            return None
+        if dim % axis_size(self.mesh, axes) != 0:
+            return None
+        return axes
+
+    def trailing(self, shape: Sequence[int], rule: Sequence[Optional[str]]) -> P:
+        """Apply a trailing-dims rule, padding leading dims with None."""
+        n_lead = len(shape) - len(rule)
+        assert n_lead >= 0, (shape, rule)
+        spec = [None] * n_lead
+        for dim, r in zip(shape[n_lead:], rule):
+            ax = {"model": self.model_ax, "fsdp": self.fsdp_ax, None: None}[r]
+            spec.append(self._fit(dim, ax))
+        return P(*spec)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+# param-leaf rules: name -> trailing-dims rule (None entries replicate)
+_PARAM_RULES = [
+    (r"embed/tok$", ("model", "fsdp")),
+    (r"lm_head$", ("fsdp", "model")),
+    (r"frontend/w1$", (None, "model")),
+    (r"frontend/w2$", ("model", None)),
+    (r"frontend_proj$", (None, None)),
+    (r"(attn|cross)/w[qkv]$", ("fsdp", "model")),
+    (r"(attn|cross)/b[qkv]$", ("model",)),
+    (r"(attn|cross)/wo$", ("model", "fsdp")),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("model", "fsdp", None)),
+    (r"moe/w_down$", ("model", None, "fsdp")),
+    (r"mlp/w_(gate|up)$", ("fsdp", "model")),
+    (r"mlp/b_up$", ("model",)),
+    (r"mlp/w_down$", ("model", "fsdp")),
+    (r"mlp/b_down$", (None,)),
+    (r"ssm/in_proj$", ("fsdp", "model")),
+    (r"ssm/conv_w$", ("model", None)),
+    (r"ssm/conv_b$", ("model",)),
+    (r"ssm/x_proj$", ("model", None)),
+    (r"ssm/dt_w$", (None, "model")),
+    (r"ssm/dt_b$", ("model",)),
+    (r"ssm/a_log$", ("model", None)),
+    (r"ssm/d_skip$", ("model",)),
+    (r"ssm/out_proj$", ("model", "fsdp")),
+    (r"ln\d?/[wb]$|_norm/[wb]$", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(tree, mesh: Mesh, *, fsdp: bool, tp2d: bool = False):
+    """PartitionSpec tree matching a params (or ShapeDtypeStruct) tree."""
+    b = SpecBuilder(mesh, fsdp=False if tp2d else fsdp, tp2d=tp2d)
+
+    def leaf_spec(path, leaf) -> NamedSharding:
+        ps = _path_str(path)
+        for pat, rule in _PARAM_RULES:
+            if re.search(pat, ps):
+                return b.named(b.trailing(leaf.shape, rule))
+        return b.named(P(*([None] * len(leaf.shape))))  # replicate unmatched
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def opt_state_specs(param_spec_tree, extras: Dict[str, Any], mesh: Mesh):
+    """Optimizer state mirrors param sharding; scalars replicate."""
+    rep = NamedSharding(mesh, P())
+    out = {"m": param_spec_tree, "v": param_spec_tree, "step": rep}
+    if "master" in extras:
+        out["master"] = param_spec_tree
+    return out
+
+
+def cache_specs(cache_tree, mesh: Mesh, *, batch: int, tp2d: bool = False):
+    """Decode-cache sharding.  Batch over data when it divides; otherwise SP:
+    the sequence axis of attention caches shards over ``data``.  Head_dim (all
+    multiples of the model-axis size) carries TP for k/v; d_inner for SSM.
+    With ``tp2d`` the sequence axis shards over data and head_dim over model,
+    matching the 2D-TP weight layout (batch stays local)."""
+    b = SpecBuilder(mesh, fsdp=False)
+    dax = b.data
+    batch_ok = (not tp2d) and batch % axis_size(mesh, dax) == 0
+
+    def leaf_spec(path, leaf) -> NamedSharding:
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if ps.endswith("pos") or ps.endswith("cache_len"):
+            return b.named(P())
+        if re.search(r"(^|/)(bk|bv)$", ps):
+            # append buffer [G?, B, BUF, K, hd]: tiny, never seq-sharded
+            rule = [None] * nd
+            if batch_ok:
+                rule[nd - 4] = b._fit(shape[nd - 4], dax)
+            rule[nd - 1] = b._fit(shape[nd - 1], "model")
+            return b.named(P(*rule))
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", ps):
+            # [G?, B, L, K, hd]
+            rule = [None] * nd
+            bdim = nd - 4
+            if batch_ok:
+                rule[bdim] = b._fit(shape[bdim], dax)
+            else:
+                rule[bdim + 1] = b._fit(shape[bdim + 1], "data")
+            rule[nd - 1] = b._fit(shape[nd - 1], "model")
+            return b.named(P(*rule))
+        if re.search(r"(^|/)(conv|h)$", ps):
+            # [G?, B, di, *]
+            rule = [None] * nd
+            bdim = nd - 3
+            if batch_ok:
+                rule[bdim] = b._fit(shape[bdim], dax)
+            rule[bdim + 1] = b._fit(shape[bdim + 1], "model")
+            return b.named(P(*rule))
+        return b.named(P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh, *, batch: int) -> Dict[str, NamedSharding]:
+    """Logical-name rules consumed by repro.sharding.ctx.shard()."""
+    b = SpecBuilder(mesh, fsdp=False)
+    dax = b.data
+    moe_g = None
+    if cfg.moe is not None:
+        moe_g = dax  # dispatch groups ride the data axes
+    rules = {
+        "act_btd": b.named(P(dax, None, None)),
+        "act_bti": b.named(P(dax, None, "model")),
+        "logits": b.named(P(dax, "model" if cfg.vocab % axis_size(mesh, "model") == 0 else None)),
+        "logits_bv": b.named(P(dax if batch % axis_size(mesh, dax) == 0 else None,
+                               "model" if cfg.vocab % axis_size(mesh, "model") == 0 else None)),
+    }
+    if cfg.attn_tp == "head":
+        # q sharded over heads (GSPMD pads non-divisible head counts);
+        # k/v replicated across model — the score contraction stays local,
+        # killing the per-kv-chunk partial-sum all-reduces (§Perf arctic iter)
+        rules["attn_q"] = b.named(P(dax, None, "model", None))
+        rules["attn_out"] = b.named(P(dax, None, "model", None))
+        rules["attn_kv"] = b.named(P(dax, None, None, None))
+    if moe_g is not None:
+        rules["moe_tokens"] = b.named(P(moe_g, None, None))
+        rules["moe_dispatch"] = b.named(P(moe_g, None, "model", None))
+        rules["moe_expert_in"] = b.named(P(moe_g, "model", None, None))
+    if batch % axis_size(mesh, dax) != 0:  # single-sequence decode: no DP
+        rules["act_btd"] = b.named(P(None, None, None))
+        rules["act_bti"] = b.named(P(None, None, "model"))
+        if moe_g is not None:
+            rules["moe_tokens"] = b.named(P(None, None, None))
+            rules["moe_dispatch"] = b.named(P(None, None, "model", None))
+            rules["moe_expert_in"] = b.named(P(None, "model", None, None))
+    return rules
+
+
+def batch_specs(batch_tree, mesh: Mesh, *, batch: int):
+    """Token/frame/label inputs: batch dim over the data axes."""
+    b = SpecBuilder(mesh, fsdp=False)
+    dax = b.data if batch % axis_size(mesh, b.data) == 0 else None
+
+    def leaf_spec(_path, leaf) -> NamedSharding:
+        rule = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and dax is not None:
+            rule[0] = dax
+        return b.named(P(*rule))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)

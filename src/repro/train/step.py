@@ -1,0 +1,99 @@
+"""train_step / prefill_step / serve_step factories.
+
+All three return pure functions ready for ``jax.jit`` with explicit shardings;
+the launcher wraps tracing in the sharding-rules context so model-internal
+``shard(...)`` constraints bind to the target mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import model_decode_step, model_forward, model_loss
+from repro.models.transformer import lm_logits
+from repro.optim import adamw
+from repro.optim.compress import GradCompressor
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    impl: str = None,
+    microbatches: int = 1,
+    compressor: Optional[GradCompressor] = None,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` runs gradient accumulation via lax.scan over batch
+    splits (each microbatch re-enters the remat'd model), trading step latency
+    for activation memory.
+    """
+
+    def loss_fn(params, batch):
+        return model_loss(cfg, params, batch, impl=impl)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (B, microbatches)
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, mbatch):
+                acc_loss, acc_grads = carry
+                loss, grads = grads_of(params, mbatch)
+                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                return (acc_loss + loss, acc_grads), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        if compressor is not None:
+            grads, opt_state = compressor.apply(grads, opt_state)
+            comp_state = opt_state["compress"]
+            core = {k: v for k, v in opt_state.items() if k != "compress"}
+            params, core, metrics = adamw.update(opt_cfg, params, grads, core)
+            core["compress"] = comp_state
+            opt_state = core
+        else:
+            params, opt_state, metrics = adamw.update(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, impl: str = None) -> Callable:
+    """(params, batch) -> last-position logits [B, vocab] (f32)."""
+
+    def prefill_step(params, batch):
+        hidden = model_forward(cfg, params, batch, impl=impl)
+        last = hidden[:, -1]
+        if cfg.family == "encdec":
+            return (last @ params["lm_head"]).astype(jnp.float32)
+        return lm_logits(cfg, params, last[:, None])[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, token) -> (logits [B, vocab], new cache)."""
+
+    def serve_step(params, cache, token):
+        return model_decode_step(cfg, params, cache, token)
+
+    return serve_step

@@ -1,0 +1,8 @@
+"""Make `benchmarks/` importable regardless of how pytest is invoked."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+for p in (str(ROOT), str(ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,172 @@
+"""Serving engine (aAPP placement, failover, hedging) + §V simulator."""
+import dataclasses
+
+import pytest
+
+from repro.cluster.divide_impera import DivideImperaWorkload
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import CellSpec, paper_testbed, two_pod_cells
+from repro.core import parse, try_schedule
+from repro.serve.engine import Engine, Request
+
+
+def make_engine(latency=0.01, hedge_after=None):
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    slow_cells = set()
+
+    def runner(req, cell):
+        dt = 0.5 if cell in slow_cells else latency
+        t[0] += dt
+        return f"{req.kind}@{cell}"
+
+    eng = Engine(two_pod_cells(), runner=runner, clock=clock,
+                 heartbeat_timeout=1e9, hedge_after=hedge_after)
+    return eng, t, slow_cells
+
+
+def test_session_affinity_and_residency():
+    eng, _, _ = make_engine()
+    eng.deploy("m1", ["pod0-cell0", "pod0-cell1"], weights_gb=8)
+    c = eng.submit(Request(model="m1", kind="prefill", session="s"))
+    assert c.ok and c.cell in ("pod0-cell0", "pod0-cell1")
+    home = eng.session_cell("s")
+    for _ in range(5):
+        d = eng.submit(Request(model="m1", kind="decode", session="s"))
+        assert d.cell == home  # KV affinity pins decode
+
+
+def test_decode_anti_affine_with_train():
+    eng, _, _ = make_engine()
+    eng.deploy("m1", ["pod0-cell0", "pod0-cell1"], weights_gb=8)
+    tr = eng.submit(Request(model="", kind="train"))
+    assert tr.ok
+    p = eng.submit(Request(model="m1", kind="prefill", session="s"))
+    d = eng.submit(Request(model="m1", kind="decode", session="s"))
+    assert d.cell != tr.cell  # isolation
+
+
+def test_failover_rehomes_sessions():
+    eng, _, _ = make_engine()
+    eng.deploy("m1", ["pod0-cell0", "pod0-cell1"], weights_gb=8)
+    eng.submit(Request(model="m1", kind="prefill", session="s"))
+    home = eng.session_cell("s")
+    moved = eng.fail_cell(home)
+    assert moved == ["s"]
+    new_home = eng.session_cell("s")
+    assert new_home is not None and new_home != home
+    d = eng.submit(Request(model="m1", kind="decode", session="s"))
+    assert d.ok and d.cell == new_home
+
+
+def test_heartbeat_failure_detection():
+    eng, t, _ = make_engine()
+    eng.heartbeat_timeout = 5.0
+    eng.deploy("m1", ["pod0-cell0"], weights_gb=8)
+    eng.submit(Request(model="m1", kind="prefill", session="s"))
+    t[0] += 100.0
+    for c in eng.cells:
+        if c != "pod0-cell0":
+            eng.heartbeat(c)
+    dead = eng.check_health()
+    assert "pod0-cell0" in dead
+
+
+def test_straggler_hedging():
+    eng, t, slow = make_engine(hedge_after=0.1)
+    eng.deploy("m1", list(eng.cells)[:3], weights_gb=8)
+    eng.submit(Request(model="m1", kind="prefill", session="s"))
+    slow.add(eng.session_cell("s"))
+    d = eng.submit(Request(model="m1", kind="decode", session="s"))
+    assert d.ok and d.hedge_won  # the duplicate on another cell finished first
+
+
+def test_elastic_add_and_drain():
+    eng, _, _ = make_engine()
+    eng.deploy("m1", ["pod0-cell0"], weights_gb=8)
+    eng.submit(Request(model="m1", kind="prefill", session="s"))
+    eng.add_cell(CellSpec("pod2-cell0", "pod2", 64, 1024.0))
+    assert "pod2-cell0" in eng.state.workers()
+    eng.drain_cell("pod0-cell0")
+    assert "pod0-cell0" not in eng.state.workers()
+
+
+# --------------------------------------------------------------------------- #
+# §V simulator
+# --------------------------------------------------------------------------- #
+
+
+def _run_case(script_text, seed=0, runs=2, divides=5):
+    script = parse(script_text)
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=seed)
+    import random
+    rng = random.Random(seed)
+    wl = DivideImperaWorkload(
+        sim, lambda f: try_schedule(f, sim.state.conf(), script, sim.registry, rng=rng))
+
+    def start_run(i):
+        if i >= runs:
+            return
+        done = {"h": 0, "d": 0}
+
+        def nxt():
+            if done["h"] == 2 and done["d"] == divides:
+                start_run(i + 1)
+
+        def hd():
+            done["h"] += 1
+            nxt()
+
+        wl.submit_heavy("heavy_eu", hd)
+        wl.submit_heavy("heavy_us", hd)
+
+        def dd(_):
+            done["d"] += 1
+            if done["d"] < divides:
+                wl.submit_divide(dd)
+            else:
+                nxt()
+
+        wl.submit_divide(dd)
+
+    start_run(0)
+    sim.run()
+    return wl.results
+
+
+from benchmarks.affinity_case_study import AAPP_SCRIPT, ANTI_ONLY_SCRIPT, APP_SCRIPT
+
+
+def test_aapp_colocates_and_never_retries():
+    results = _run_case(AAPP_SCRIPT)
+    assert results, "no divides completed"
+    for r in results:
+        assert not r.failed
+        assert r.retries == 0  # same worker => same zone => no EC wait
+        assert all(w == r.worker for w in r.impera_workers)  # affinity co-location
+        assert r.worker not in ("workereu1", "workerus1")  # anti-affinity vs heavy
+
+
+def test_app_suffers_retries_or_contention():
+    import statistics
+    aapp = [r.latency for r in _run_case(AAPP_SCRIPT, seed=1, runs=3, divides=8)]
+    app_res = _run_case(APP_SCRIPT, seed=1, runs=3, divides=8)
+    app = [r.latency for r in app_res if not r.failed]
+    assert statistics.mean(app) > statistics.mean(aapp)
+    # under plain APP some functions land on the heavy (small) workers
+    assert any(r.worker in ("workereu1", "workerus1") or
+               any(w in ("workereu1", "workerus1") for w in r.impera_workers)
+               for r in app_res)
+
+
+def test_eventual_consistency_mechanism():
+    sim = ClusterSim(paper_testbed(), SimParams(sync_lag_median=10.0,
+                                                sync_lag_sigma=0.01), seed=0)
+    sim.db_write("idx", "workereu2", 50)  # written in EU
+    assert sim.db_visible("idx", "workereu3", 50)  # same zone: immediate
+    assert not sim.db_visible("idx", "workerus2", 50)  # cross-zone: lagged
+    sim.now += 1e6
+    assert sim.db_visible("idx", "workerus2", 50)  # eventually consistent

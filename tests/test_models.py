@@ -1,0 +1,148 @@
+"""Per-arch smoke tests (reduced configs): forward/train-step shapes + no
+NaNs, decode parity paths, attention-impl and SSM-path equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data.pipeline import make_batch
+from repro.models import (
+    init_cache,
+    init_model,
+    model_decode_step,
+    model_forward,
+    model_loss,
+)
+from repro.models.transformer import merge_decode_buffer
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=64):
+    return {k: jnp.asarray(v) for k, v in make_batch(cfg, B, S, 0).items()}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_loss(arch):
+    cfg = ARCHS[arch].reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    hidden = model_forward(cfg, params, batch)
+    assert hidden.ndim == 3 and hidden.shape[-1] == cfg.d_model
+    assert bool(jnp.isfinite(hidden.astype(jnp.float32)).all())
+    loss = model_loss(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step(arch):
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), remat="none")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = adamw.init(ocfg, params)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    p2, o2, metrics = step(params, opt, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                                            - b.astype(jnp.float32)))),
+                         params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_step(arch):
+    cfg = ARCHS[arch].reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B = 2
+    if cfg.family == "encdec":
+        from repro.models.encdec import encode, encdec_prefill_cache
+        batch = _batch(cfg)
+        enc_out = encode(cfg, params, batch["frames"])
+        cache = encdec_prefill_cache(cfg, params, enc_out, B, 32)
+    else:
+        cache = init_cache(cfg, B, 64)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = model_decode_step(cfg, params, cache, tok)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    logits2, _ = model_decode_step(cfg, params, cache, tok)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+def test_attention_impls_agree():
+    cfg = ARCHS["starcoder2-15b"].reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, B=1, S=128)
+    outs = {}
+    for impl in ("direct", "chunked", "chunked2d"):
+        c = dataclasses.replace(cfg, attn_impl=impl, attn_chunk=32, attn_q_block=32)
+        # force the chunked paths even for small shapes
+        from repro.models import transformer as tf
+        outs[impl] = tf.lm_forward(c, params, batch, impl=impl)
+    # direct path triggers below the size threshold; compare finite + close
+    a = outs["chunked"].astype(jnp.float32)
+    b = outs["chunked2d"].astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-2
+
+
+def test_gemma_local_global_tail():
+    full = ARCHS["gemma3-4b"]
+    assert full.n_tail == 4  # 34 = 5*6 + 4
+    # run a reduced config WITH a tail (13 layers = 2 periods + 1)
+    cfg = dataclasses.replace(full.reduced(), n_layers=13)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    assert "tail" in params and len(params["tail"]) == 1
+    batch = _batch(cfg)
+    assert np.isfinite(float(model_loss(cfg, params, batch)))
+    cache = init_cache(cfg, 2, 64)
+    logits, _ = model_decode_step(cfg, params, cache, jnp.zeros((2, 1), jnp.int32))
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_buffered_decode_equals_legacy_across_merge():
+    cfg0 = ARCHS["qwen1.5-32b"].reduced()
+    cfgB = dataclasses.replace(cfg0, decode_buffer=4)
+    params = init_model(cfg0, jax.random.PRNGKey(0))
+    B, T = 2, 9
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg0.vocab)
+    c0, cB = init_cache(cfg0, B, 32), init_cache(cfgB, B, 32)
+    for t in range(T):
+        l0, c0 = model_decode_step(cfg0, params, c0, toks[:, t:t + 1])
+        lB, cB = model_decode_step(cfgB, params, cB, toks[:, t:t + 1])
+        assert float(jnp.max(jnp.abs(l0 - lB))) < 1e-3, t
+        if (t + 1) % 4 == 0:
+            cB = merge_decode_buffer(cfgB, cB)
+
+
+def test_ssm_unchunked_equals_chunked():
+    cfg = ARCHS["falcon-mamba-7b"].reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    l_c = float(model_loss(cfg, params, batch))
+    l_u = float(model_loss(dataclasses.replace(cfg, scan_chunk=0), params, batch))
+    assert abs(l_c - l_u) < 1e-4
+
+
+def test_prefix_decode_consistency():
+    """Teacher-forced forward logits == step-by-step decode logits."""
+    cfg = ARCHS["qwen3-moe-30b-a3b"].reduced()
+    # MoE capacity drops depend on batch grouping; use the dense-ish check arch
+    cfg = ARCHS["starcoder2-15b"].reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B, T = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, cfg.vocab)
+    hidden = model_forward(cfg, params, {"tokens": toks})
+    from repro.models.transformer import lm_logits
+    full = lm_logits(cfg, params, hidden)  # [B,T,V]
+    cache = init_cache(cfg, B, T + 4)
+    for t in range(T):
+        step_logits, cache = model_decode_step(cfg, params, cache, toks[:, t:t + 1])
+        err = float(jnp.max(jnp.abs(step_logits - full[:, t])))
+        assert err < 2e-2, (t, err)

@@ -1,0 +1,98 @@
+"""aAPP parser: the paper's example scripts, round-trips, static errors."""
+import pytest
+
+from repro.core import parse, to_text
+from repro.core.ast import AAppError
+
+FIG3 = """
+f_tag:
+  - workers:
+      - local_w1
+      - local_w2
+    strategy: best_first
+    invalidate:
+      - capacity_used 80%
+    affinity: g_tag, !h_tag
+  - workers:
+      - public_w1
+  - followup: fail
+"""
+
+FIG5 = """
+d:
+  workers: *
+  strategy: random
+  affinity:
+    - !h_eu
+    - !h_us
+i:
+  workers: *
+  strategy: random
+  affinity:
+    - !h_eu
+    - !h_us
+    - d
+h_eu:
+  workers:
+    - workereu1
+h_us:
+  workers:
+    - workerus1
+"""
+
+
+def test_fig3_structure():
+    s = parse(FIG3)
+    p = s["f_tag"]
+    assert p.followup == "fail"
+    assert len(p.blocks) == 2
+    b0 = p.blocks[0]
+    assert b0.workers == ("local_w1", "local_w2")
+    assert b0.strategy == "best_first"
+    assert b0.invalidate.capacity_used == 80.0
+    assert b0.affinity.affine == ("g_tag",)
+    assert b0.affinity.anti_affine == ("h_tag",)
+    assert p.blocks[1].workers == ("public_w1",)
+
+
+def test_fig5_structure():
+    s = parse(FIG5)
+    assert s.tags == ("d", "i", "h_eu", "h_us")
+    assert s["d"].blocks[0].is_wildcard
+    assert s["d"].blocks[0].strategy == "any"  # 'random' alias
+    assert s["i"].blocks[0].affinity.affine == ("d",)
+    assert set(s["i"].blocks[0].affinity.anti_affine) == {"h_eu", "h_us"}
+    assert s["h_eu"].blocks[0].workers == ("workereu1",)
+
+
+@pytest.mark.parametrize("script", [FIG3, FIG5])
+def test_roundtrip(script):
+    s = parse(script)
+    assert parse(to_text(s)) == s
+
+
+def test_max_concurrent_invocations():
+    s = parse("t:\n  workers: *\n  invalidate:\n    - max_concurrent_invocations 5\n")
+    assert s["t"].blocks[0].invalidate.max_concurrent_invocations == 5
+
+
+@pytest.mark.parametrize("bad", [
+    "",  # empty
+    "t: 17",  # not a mapping/sequence
+    "t:\n  workers: *\n  strategy: bogus\n",
+    "t:\n  strategy: any\n",  # no workers
+    "t:\n  workers: *\n  invalidate:\n    - capacity_used 150%\n",
+    "t:\n  workers: *\n  invalidate:\n    - frobnicate 3\n",
+    "t:\n  workers: *\n  affinity: [x, !x]\n",  # unsatisfiable
+    "t:\n  workers: *\n  followup: maybe\n",
+    "t:\n  workers: [w1, '*']\n",  # wildcard mixed with ids
+])
+def test_static_errors(bad):
+    with pytest.raises(AAppError):
+        parse(bad)
+
+
+def test_inline_affinity_unquoting():
+    s = parse("t:\n  workers: *\n  affinity: a, !b, c\n")
+    a = s["t"].blocks[0].affinity
+    assert a.affine == ("a", "c") and a.anti_affine == ("b",)

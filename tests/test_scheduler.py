@@ -1,0 +1,170 @@
+"""Listing-1 semantics, case by case."""
+import random
+
+import pytest
+
+from repro.core import (
+    ClusterState,
+    Registry,
+    SchedulingFailure,
+    parse,
+    schedule,
+    schedule_vanilla,
+)
+
+
+def mk(workers=("w1", "w2", "w3"), mem=100.0):
+    st = ClusterState()
+    for w in workers:
+        st.add_worker(w, max_memory=mem)
+    return st, Registry()
+
+
+def test_best_first_takes_first_valid():
+    st, reg = mk()
+    reg.register("f", memory=10, tag="t")
+    s = parse("t:\n  workers: [w2, w1]\n  strategy: best_first\n")
+    assert schedule("f", st.conf(), s, reg) == "w2"
+
+
+def test_memory_capacity_excludes_worker():
+    st, reg = mk(mem=100)
+    reg.register("big", memory=60, tag="t")
+    s = parse("t:\n  workers: [w1, w2]\n  strategy: best_first\n")
+    st.allocate("big", "w1", reg)
+    # w1 now has 60/100 used; another 60 does not fit -> w2
+    assert schedule("big", st.conf(), s, reg) == "w2"
+
+
+def test_capacity_used_percentage():
+    st, reg = mk(mem=100)
+    reg.register("f", memory=10, tag="t")
+    s = parse("t:\n  workers: [w1, w2]\n  invalidate:\n    - capacity_used 30%\n")
+    st.allocate("f", "w1", reg)
+    st.allocate("f", "w1", reg)
+    st.allocate("f", "w1", reg)  # w1 at 30% -> invalid (threshold reached)
+    assert schedule("f", st.conf(), s, reg) == "w2"
+
+
+def test_max_concurrent_invocations():
+    st, reg = mk()
+    reg.register("f", memory=1, tag="t")
+    s = parse("t:\n  workers: [w1, w2]\n  invalidate:\n    - max_concurrent_invocations 2\n")
+    st.allocate("f", "w1", reg)
+    st.allocate("f", "w1", reg)
+    assert schedule("f", st.conf(), s, reg) == "w2"
+
+
+def test_affinity_requires_presence():
+    st, reg = mk()
+    reg.register("g", memory=1, tag="g")
+    reg.register("f", memory=1, tag="f")
+    s = parse("f:\n  workers: *\n  affinity: [g]\n  followup: fail\ng:\n  workers: *\n")
+    with pytest.raises(SchedulingFailure):
+        schedule("f", st.conf(), s, reg)
+    st.allocate("g", "w2", reg)
+    assert schedule("f", st.conf(), s, reg) == "w2"
+
+
+def test_anti_affinity_excludes():
+    st, reg = mk()
+    reg.register("h", memory=1, tag="h")
+    reg.register("f", memory=1, tag="f")
+    s = parse("f:\n  workers: *\n  affinity: [!h]\nh:\n  workers: *\n")
+    st.allocate("h", "w1", reg)
+    assert schedule("f", st.conf(), s, reg) == "w2"
+
+
+def test_directional_affinity_footnote2():
+    """init anti-affine with query; query affine with init (footnote 2)."""
+    st, reg = mk()
+    reg.register("init", memory=1, tag="init")
+    reg.register("query", memory=1, tag="query")
+    s = parse(
+        "init:\n  workers: *\n  affinity: [!query]\n  followup: fail\n"
+        "query:\n  workers: *\n  affinity: [init]\n  followup: fail\n"
+    )
+    w = schedule("init", st.conf(), s, reg)
+    st.allocate("init", w, reg)
+    wq = schedule("query", st.conf(), s, reg)
+    assert wq == w  # query must go where init runs
+    st.allocate("query", wq, reg)
+    # init is anti-affine with query: w now hosts query -> other workers only
+    w2 = schedule("init", st.conf(), s, reg)
+    assert w2 != w
+
+
+def test_followup_default_appends_default_blocks():
+    st, reg = mk()
+    reg.register("f", memory=1, tag="t")
+    s = parse(
+        "t:\n  workers: [ghost]\n"  # no such worker -> falls through
+        "default:\n  workers: [w3]\n"
+    )
+    assert schedule("f", st.conf(), s, reg) == "w3"
+
+
+def test_followup_fail_stops():
+    st, reg = mk()
+    reg.register("f", memory=1, tag="t")
+    s = parse(
+        "t:\n  - workers: [ghost]\n  - followup: fail\n"
+        "default:\n  workers: [w3]\n"
+    )
+    with pytest.raises(SchedulingFailure):
+        schedule("f", st.conf(), s, reg)
+
+
+def test_unknown_tag_uses_default_policy():
+    st, reg = mk()
+    reg.register("f", memory=1, tag="not-in-script")
+    s = parse("default:\n  workers: [w2]\n")
+    assert schedule("f", st.conf(), s, reg) == "w2"
+
+
+def test_any_strategy_is_seedable():
+    st, reg = mk()
+    reg.register("f", memory=1, tag="t")
+    s = parse("t:\n  workers: *\n  strategy: any\n")
+    picks = {schedule("f", st.conf(), s, reg, rng=random.Random(i)) for i in range(20)}
+    assert picks == {"w1", "w2", "w3"}  # all workers reachable
+    a = schedule("f", st.conf(), s, reg, rng=random.Random(7))
+    b = schedule("f", st.conf(), s, reg, rng=random.Random(7))
+    assert a == b  # deterministic under a fixed seed
+
+
+def test_vanilla_baseline_respects_capacity():
+    st, reg = mk(workers=("w1", "w2"), mem=10)
+    reg.register("f", memory=6, tag="t")
+    w = schedule_vanilla("f", st.conf(), reg)
+    st.allocate("f", w, reg)
+    w2 = schedule_vanilla("f", st.conf(), reg)
+    assert w2 != w  # first is full
+    st.allocate("f", w2, reg)
+    with pytest.raises(SchedulingFailure):
+        schedule_vanilla("f", st.conf(), reg)
+
+
+def test_state_tables_complete_and_failover():
+    st, reg = mk()
+    reg.register("f", memory=5, tag="t")
+    a1 = st.allocate("f", "w1", reg)
+    a2 = st.allocate("f", "w1", reg)
+    assert st.conf()["w1"].memory_used == 10
+    st.complete(a1.activation_id)
+    assert st.conf()["w1"].memory_used == 5
+    lost = st.fail_worker("w1")
+    assert [a.activation_id for a in lost] == [a2.activation_id]
+    assert "w1" not in st.conf()
+    assert st.complete(a2.activation_id) is None  # already evicted
+
+
+def test_optimistic_concurrency():
+    import pytest
+    from repro.core import ConcurrencyConflict
+    st, reg = mk()
+    reg.register("f", memory=1, tag="t")
+    v = st.version
+    st.allocate("f", "w1", reg)
+    with pytest.raises(ConcurrencyConflict):
+        st.allocate("f", "w2", reg, expected_version=v)

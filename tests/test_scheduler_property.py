@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) over the scheduling invariants."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AAppScript,
+    Affinity,
+    Block,
+    ClusterState,
+    CompiledPolicies,
+    Invalidate,
+    Registry,
+    TagPolicy,
+    schedule_wave,
+    try_schedule,
+)
+from repro.core.scheduler import candidate_blocks, valid
+
+TAGS = ["a", "b", "c", "d"]
+
+
+@st.composite
+def scripts(draw):
+    policies = []
+    for tag in TAGS:
+        blocks = []
+        for _ in range(draw(st.integers(1, 3))):
+            wildcard = draw(st.booleans())
+            if wildcard:
+                workers = ("*",)
+            else:
+                ids = draw(st.lists(
+                    st.sampled_from([f"w{i}" for i in range(8)] + ["ghost"]),
+                    min_size=1, max_size=4, unique=True))
+                workers = tuple(ids)
+            aff, anti = [], []
+            for t in TAGS:
+                r = draw(st.integers(0, 5))
+                if r == 0:
+                    aff.append(t)
+                elif r == 1:
+                    anti.append(t)
+            blocks.append(Block(
+                workers=workers,
+                strategy=draw(st.sampled_from(["best_first", "any"])),
+                invalidate=Invalidate(
+                    capacity_used=draw(st.sampled_from([None, 40.0, 80.0])),
+                    max_concurrent_invocations=draw(st.sampled_from([None, 1, 4])),
+                ),
+                affinity=Affinity(affine=tuple(aff), anti_affine=tuple(anti)),
+            ))
+        policies.append(TagPolicy(tag=tag, blocks=tuple(blocks),
+                                  followup=draw(st.sampled_from(["default", "fail"]))))
+    return AAppScript(policies=tuple(policies))
+
+
+@st.composite
+def cluster(draw):
+    n = draw(st.integers(1, 8))
+    state = ClusterState()
+    reg = Registry()
+    for i in range(n):
+        state.add_worker(f"w{i}", max_memory=draw(st.sampled_from([20.0, 50.0, 100.0])))
+    for t in TAGS:
+        reg.register(f"fn_{t}", memory=draw(st.sampled_from([1.0, 10.0, 30.0])), tag=t)
+    for _ in range(draw(st.integers(0, 10))):
+        w = f"w{draw(st.integers(0, n - 1))}"
+        f = f"fn_{draw(st.sampled_from(TAGS))}"
+        view = state.conf()[w]
+        if view.memory_used + reg[f].memory <= view.max_memory:
+            state.allocate(f, w, reg)
+    return state, reg
+
+
+@settings(max_examples=60, deadline=None)
+@given(scripts(), cluster(), st.integers(0, 2**31 - 1))
+def test_schedule_returns_valid_worker_or_none_exists(script, clus, seed):
+    state, reg = clus
+    conf = state.conf()
+    for t in TAGS:
+        f = f"fn_{t}"
+        w = try_schedule(f, conf, script, reg, rng=random.Random(seed))
+        blocks = candidate_blocks(t, script)
+        if w is None:
+            # failure implies NO worker is valid under ANY candidate block
+            for b in blocks:
+                ids = conf.keys() if b.is_wildcard else b.workers
+                assert not any(valid(f, x, conf, reg, b) for x in ids)
+        else:
+            # the chosen worker is valid under at least one candidate block
+            assert any(
+                valid(f, w, conf, reg, b)
+                and (b.is_wildcard or w in b.workers)
+                for b in blocks
+            )
+
+
+@settings(max_examples=40, deadline=None)
+@given(scripts(), cluster(), st.integers(0, 2**31 - 1),
+       st.lists(st.sampled_from(TAGS), min_size=1, max_size=12))
+def test_batched_wave_equals_sequential_reference(script, clus, seed, tags):
+    state, reg = clus
+    fs = [f"fn_{t}" for t in tags]
+
+    # sequential reference on a private copy of the state
+    ref_state = ClusterState()
+    for w, view in state.conf().items():
+        ref_state.add_worker(w, max_memory=view.max_memory)
+    for act in state.active_activations():
+        ref_state.allocate(act.function, act.worker, reg)
+    rng = random.Random(seed)
+    expected = []
+    for f in fs:
+        w = try_schedule(f, ref_state.conf(), script, reg, rng=rng)
+        expected.append(w)
+        if w is not None:
+            ref_state.allocate(f, w, reg)
+
+    pol = CompiledPolicies(script, reg)
+    res = schedule_wave(fs, state.conf(), pol, reg, rng=random.Random(seed),
+                        backend="ref")
+    assert res.assignments == expected

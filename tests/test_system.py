@@ -1,0 +1,74 @@
+"""End-to-end behaviour: dry-run smoke (subprocess, multi-device), and the
+benchmark entry points on reduced settings."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run_dryrun(args, devices="8"):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = devices
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("gemma3-4b", "train_4k"),
+    ("jamba-1.5-large-398b", "decode_32k"),
+    ("qwen3-moe-30b-a3b", "prefill_32k"),
+])
+def test_dryrun_reduced_single_and_multi(arch, shape, tmp_path):
+    r = _run_dryrun(["--arch", arch, "--shape", shape, "--mesh", "both",
+                     "--reduced", "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    for mesh in ("single", "multi"):
+        rec = json.loads((tmp_path / f"{arch}_{shape}_{mesh}.json").read_text())
+        assert rec["status"] == "ok", rec
+        assert rec["roofline"]["compute_s"] >= 0
+        assert rec["loop_aware"]["flops_per_device"] > 0
+
+
+def test_dryrun_records_skip(tmp_path):
+    r = _run_dryrun(["--arch", "starcoder2-15b", "--shape", "long_500k",
+                     "--reduced", "--out", str(tmp_path)])
+    assert r.returncode == 0
+    rec = json.loads((tmp_path / "starcoder2-15b_long_500k_single.json").read_text())
+    assert rec["status"] == "skipped"
+
+
+def test_overhead_benchmark_claim():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks import overhead
+    ts = overhead._run_one("aAPP", "hello-world", 256, 0.05, n=300)
+    ts2 = overhead._run_one("APP", "hello-world", 256, 0.05, n=300)
+    import statistics
+    gap = abs(statistics.mean(ts) - statistics.mean(ts2))
+    assert gap < 1.0  # sub-millisecond (Fig. 8)
+
+
+def test_scheduler_scale_linearity():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.scheduler_scale import _setup
+    import time
+    from repro.core import parse, try_schedule
+    import random
+    script = parse("t:\n  workers: *\n  strategy: best_first\n")
+    times = {}
+    for W in (64, 512):
+        st, reg = _setup(W, occupancy=0.3, seed=0)
+        reg.register("f", memory=1.0, tag="t")
+        conf = st.conf()
+        t0 = time.perf_counter()
+        for _ in range(50):
+            try_schedule("f", conf, script, reg, rng=random.Random(0))
+        times[W] = time.perf_counter() - t0
+    assert times[512] / times[64] < 8 * 4  # ~linear in W, generous bound
