@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows plus the per-benchmark tables.
   fig6_case_study       §V latency/retries reproduction (simulated testbed)
   fig8_overhead         §VI scheduling-time overhead, 7 workloads x 3 schedulers
   sec7_scheduler_scale  linear-time claim + batched data plane
+  coldstart             warm-pool keep-alive policies x workload scenarios
   roofline              §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -14,6 +15,7 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 
 def main() -> None:
@@ -54,6 +56,27 @@ def main() -> None:
     big = srows[-1]
     rows.append(("sec7_scheduler_scale", big["scalar_us_per_decision"],
                  f"batched_speedup_at_{big['workers']}w={big['speedup']:.1f}x"))
+
+    # ---- cold starts (warm-pool keep-alive) ----------------------------------- #
+    from benchmarks import coldstart as cst
+    ctable = cst.run(seeds=(0,))
+    print("\n== cold starts: keep-alive policy x scenario (cold-start rate) ==")
+    for scen, per_policy in ctable.items():
+        cells = " ".join(f"{p}={m['cold_start_rate']*100:.1f}%"
+                         for p, m in per_policy.items())
+        print(f"  {scen:10s} {cells}")
+    aff_rates = [per_policy["affinity"]["cold_start_rate"]
+                 for per_policy in ctable.values()]
+    ttl_rates = [per_policy["fixed_ttl"]["cold_start_rate"]
+                 for per_policy in ctable.values()]
+    # us_per_call column: container-start overhead per invocation (affinity)
+    start_us = statistics.mean(
+        per_policy["affinity"]["start_seconds"]
+        / per_policy["affinity"]["invocations"] * 1e6
+        for per_policy in ctable.values())
+    rows.append(("coldstart", start_us,
+                 f"affinity_vs_ttl_coldrate={statistics.mean(aff_rates):.3f}/"
+                 f"{statistics.mean(ttl_rates):.3f}"))
 
     # ---- roofline (reads artifacts if the dry-run has been run) --------------- #
     art = Path("artifacts/dryrun")

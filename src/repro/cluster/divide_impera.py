@@ -52,12 +52,14 @@ class DivideImperaWorkload:
             on_done()
             return
         act = sim.state.allocate(variant, w, sim.registry)
+        start = sim.container_start(variant, w, act.activation_id)
 
         def finish():
+            sim.container_release(act.activation_id)
             sim.state.complete(act.activation_id)
             on_done()
 
-        sim.after(sim.overhead(w), lambda: sim.compute(
+        sim.after(sim.overhead(w) + start, lambda: sim.compute(
             variant, w, sim.p.heavy_compute, act.activation_id, finish))
 
     # ---- impera ------------------------------------------------------------- #
@@ -70,19 +72,21 @@ class DivideImperaWorkload:
             on_done("<unschedulable>")
             return
         act = sim.state.allocate("impera", w, sim.registry)
+        start = sim.container_start("impera", w, act.activation_id)
 
         def after_compute():
             conn = sim.db_connect(w)
 
             def write_and_finish():
                 sim.db_write(index, w, sim.p.docs_per_impera)
+                sim.container_release(act.activation_id)
                 sim.state.complete(act.activation_id)
                 # completion ack travels through the control plane
                 sim.after(sim.p.notify_delay, lambda: on_done(w))
 
             sim.after(conn, write_and_finish)
 
-        sim.after(sim.overhead(w), lambda: sim.compute(
+        sim.after(sim.overhead(w) + start, lambda: sim.compute(
             "impera", w, sim.p.impera_compute, act.activation_id, after_compute))
 
     # ---- divide ------------------------------------------------------------- #
@@ -99,10 +103,12 @@ class DivideImperaWorkload:
             on_done(res)
             return
         act = sim.state.allocate("divide", w, sim.registry)
+        start = sim.container_start("divide", w, act.activation_id)
         impera_workers: List[str] = []
         retries = [0]
 
         def finish(failed: bool):
+            sim.container_release(act.activation_id)
             sim.state.complete(act.activation_id)
             res = DivideResult(
                 latency=sim.now - t0, retries=retries[0], failed=failed, worker=w,
@@ -137,5 +143,5 @@ class DivideImperaWorkload:
             for _ in range(2):
                 self._submit_impera(index, impera_done)
 
-        sim.after(sim.overhead(w), lambda: sim.compute(
+        sim.after(sim.overhead(w) + start, lambda: sim.compute(
             "divide", w, sim.p.divide_compute, act.activation_id, after_compute))

@@ -14,7 +14,14 @@ to:
   with exponential back-off (1 s base, doubling — §V) and counts retries;
 * **control-plane asymmetry**: OpenWhisk core components live in the EU zone,
   so invocations on US workers pay an extra overhead (the paper's observed
-  EU/US latency gap).
+  EU/US latency gap);
+* **container lifecycle** (optional): when a :class:`repro.pool.WarmPool` is
+  attached, every invocation is charged its cold/warm/hot start latency via
+  ``container_start`` and returns its container to the pool via
+  ``container_release``; the pool's janitor runs as events on the simulator's
+  heap, firing exactly when the keep-alive policy can next expire a
+  container.  Without a pool the simulator behaves as before (zero start
+  cost) — the seed's §V experiments are unchanged.
 
 Scheduling decisions are delegated to a pluggable ``scheduler_fn`` driven by
 the *real* aAPP machinery (`repro.core`): the simulator maintains a
@@ -31,6 +38,7 @@ import random
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.state import ClusterState, Registry
+from repro.pool import WarmPool
 from .topology import WorkerSpec
 
 
@@ -72,7 +80,8 @@ class _Task:
 class ClusterSim:
     """Event loop + processor-sharing workers + 2-zone eventually-consistent DB."""
 
-    def __init__(self, workers: Dict[str, WorkerSpec], params: SimParams, seed: int = 0):
+    def __init__(self, workers: Dict[str, WorkerSpec], params: SimParams, seed: int = 0,
+                 *, pool: Optional[WarmPool] = None):
         self.workers = workers
         self.p = params
         self.rng = random.Random(seed)
@@ -90,6 +99,11 @@ class ClusterSim:
         self._docs: Dict[str, List[Dict[str, float]]] = {}
         self._connections: Dict[Tuple[str, str], bool] = {}
         self.failures: List[str] = []
+        # container lifecycle (optional)
+        self.pool = pool
+        self.last_start_kind: Optional[str] = None
+        self._containers: Dict[str, str] = {}  # activation_id -> container id
+        self._janitor_at: Optional[float] = None
 
     # ---- event machinery -------------------------------------------------- #
 
@@ -154,6 +168,50 @@ class ClusterSim:
         task.remaining = work
         self._running[worker].append(task)
         self._reschedule_completions()
+
+    # ---- container lifecycle (warm pool) ------------------------------------ #
+
+    def container_start(self, fname: str, worker: str, activation_id: str) -> float:
+        """Acquire a container for the invocation; returns its start latency
+        (0.0 when no pool is attached).  The kind of the last start is kept in
+        ``last_start_kind`` for workload bookkeeping."""
+        if self.pool is None:
+            self.last_start_kind = None
+            return 0.0
+        spec = self.registry[fname]
+        c, kind, cost = self.pool.acquire(fname, worker, self.now,
+                                          memory=spec.memory, tag=spec.tag)
+        self._containers[activation_id] = c.cid
+        self.last_start_kind = kind
+        return cost
+
+    def container_release(self, activation_id: str) -> None:
+        """Park the invocation's container back in the warm pool and (re)arm
+        the janitor for its eventual expiry."""
+        if self.pool is None:
+            return
+        cid = self._containers.pop(activation_id, None)
+        if cid is not None:
+            self.pool.release(cid, self.now)
+        self._kick_janitor()
+
+    def _kick_janitor(self) -> None:
+        if self.pool is None:
+            return
+        nxt = self.pool.next_event(self.now)
+        if nxt is None:
+            return
+        if self._janitor_at is not None and self._janitor_at <= nxt:
+            return  # an equally-early sweep is already on the heap
+        self._janitor_at = nxt
+        self.at(nxt, self._janitor_tick)
+
+    def _janitor_tick(self) -> None:
+        self._janitor_at = None
+        if self.pool is None:
+            return
+        self.pool.sweep(self.now)
+        self._kick_janitor()
 
     # ---- DB ----------------------------------------------------------------- #
 

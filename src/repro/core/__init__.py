@@ -10,7 +10,7 @@ from .ast import (
     default_policy,
 )
 from .parser import parse, parse_file, to_text
-from .scheduler import schedule, try_schedule, valid, candidate_blocks
+from .scheduler import schedule, try_schedule, valid, candidate_blocks, Warmth
 from .state import Activation, ClusterState, Conf, Registry, WorkerView, ConcurrencyConflict
 from .baseline import schedule_vanilla, try_schedule_vanilla
 from .batched import CompiledPolicies, TagIndex, StateTensors, schedule_wave, WaveResult
@@ -21,5 +21,5 @@ __all__ = [
     "try_schedule", "valid", "candidate_blocks", "Activation", "ClusterState", "Conf",
     "Registry", "WorkerView", "ConcurrencyConflict", "schedule_vanilla",
     "try_schedule_vanilla", "CompiledPolicies", "TagIndex", "StateTensors",
-    "schedule_wave", "WaveResult",
+    "schedule_wave", "WaveResult", "Warmth",
 ]

@@ -20,6 +20,12 @@ workers whose state changed inside the wave (typically a handful) are
 re-checked scalarly.  ``schedule_wave(...)`` is therefore bit-identical to
 calling :func:`repro.core.scheduler.schedule` in a loop with the same RNG —
 property-tested in ``tests/test_batched_equivalence.py``.
+
+Warmth.  When a ``warmth`` callable is supplied (container-pool residency:
+0 cold / 1 warm / 2 hot), a ``warm_rank[F, W]`` column is materialised at
+wave start and each block's valid candidates are narrowed to the
+highest-rank tier before the strategy applies — the same rule the scalar
+reference implements, so equivalence (and the property test) covers it.
 """
 from __future__ import annotations
 
@@ -35,7 +41,7 @@ from .ast import (
     STRATEGY_ANY,
     STRATEGY_BEST_FIRST,
 )
-from .scheduler import candidate_blocks
+from .scheduler import Warmth, candidate_blocks
 from .state import ClusterState, Conf, Registry
 from repro.kernels.affinity import NO_CAP, NO_CONC, affinity_valid_np
 
@@ -202,6 +208,7 @@ def schedule_wave(
     rng: Optional[random.Random] = None,
     backend: str = "auto",
     apply_to: Optional[ClusterState] = None,
+    warmth: Optional[Warmth] = None,
 ) -> WaveResult:
     """Schedule ``fs`` in order with exact Listing-1 semantics.
 
@@ -212,6 +219,12 @@ def schedule_wave(
     tag_index = policies.tag_index
     snap = StateTensors.from_conf(conf, tag_index)
     W = len(snap.workers)
+    # warmth-rank column: container-pool residency per (function, worker)
+    warm_rank: Optional[np.ndarray] = None
+    if warmth is not None and W:
+        warm_rank = np.array(
+            [[warmth(f, w) for w in snap.workers] for f in fs], np.int32
+        )  # [F, W]
 
     # ---- build rows -------------------------------------------------------- #
     rows: List[Tuple[int, CompiledBlock]] = []  # (function position, block)
@@ -294,11 +307,20 @@ def schedule_wave(
                 else:
                     ok = bool(valid[r, j])
                 if ok:
-                    if cb.strategy == STRATEGY_BEST_FIRST:
+                    # best_first can stop at the first valid worker — with a
+                    # warmth column only once the top (hot = 2) tier is hit,
+                    # since no later worker can outrank it
+                    if cb.strategy == STRATEGY_BEST_FIRST and (
+                            warm_rank is None or warm_rank[fi, j] >= 2):
                         candidates = [j]
                         break
                     candidates.append(j)
             if candidates:
+                if warm_rank is not None:
+                    # narrow to the warmest tier (same rule as the scalar ref)
+                    best_rank = max(int(warm_rank[fi, j]) for j in candidates)
+                    candidates = [j for j in candidates
+                                  if int(warm_rank[fi, j]) == best_rank]
                 if cb.strategy == STRATEGY_BEST_FIRST:
                     jj = candidates[0]
                 else:

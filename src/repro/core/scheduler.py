@@ -12,13 +12,22 @@
   ``any`` a uniformly random one;
 * if no block yields a valid worker the scheduling fails.
 
+``warmth`` (optional) plugs the container pool in: a callable
+``(function, worker) -> rank`` (e.g. 0 cold / 1 warm / 2 hot from
+:meth:`repro.pool.WarmPool.warmth`).  A block's valid workers are first
+narrowed to the highest-rank tier present, then the strategy applies — so
+placement prefers warm containers without ever overriding validity.  The
+batched path implements the identical rule vectorially.
+
 Complexity: O(#blocks × #workers × script size) per call — linear, as claimed
 in §VII.  The vectorized/batched fast path lives in :mod:`repro.core.batched`.
 """
 from __future__ import annotations
 
 import random
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
+
+Warmth = Callable[[str, str], int]  # (function, worker) -> rank in {0 cold, 1 warm, 2 hot}
 
 from .ast import (
     AAppScript,
@@ -93,6 +102,7 @@ def schedule(
     reg: Registry,
     *,
     rng: Optional[random.Random] = None,
+    warmth: Optional[Warmth] = None,
 ) -> str:
     """Listing 1, lines 1-15.  Returns the selected worker id or raises
     :class:`SchedulingFailure`."""
@@ -103,6 +113,10 @@ def schedule(
     for block in blocks:  # line 6
         workers = valid_workers_for_block(f, block, conf, reg)  # lines 7-9
         if workers:  # line 10
+            if warmth is not None:
+                ranks = [warmth(f, w) for w in workers]
+                best = max(ranks)
+                workers = [w for w, r in zip(workers, ranks) if r == best]
             if block.strategy == STRATEGY_BEST_FIRST:  # lines 11-12
                 return workers[0]
             assert block.strategy == STRATEGY_ANY  # lines 13-14
@@ -117,8 +131,9 @@ def try_schedule(
     reg: Registry,
     *,
     rng: Optional[random.Random] = None,
+    warmth: Optional[Warmth] = None,
 ) -> Optional[str]:
     try:
-        return schedule(f, conf, aapp, reg, rng=rng)
+        return schedule(f, conf, aapp, reg, rng=rng, warmth=warmth)
     except SchedulingFailure:
         return None

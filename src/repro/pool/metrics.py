@@ -1,0 +1,60 @@
+"""Pool observability: start-kind and eviction counters.
+
+Every acquire is exactly one of cold/warm/hot; evictions are split by cause
+(janitor TTL expiry vs. memory-pressure eviction to make room for a cold
+start).  ``snapshot()`` is what ``benchmarks/coldstart.py`` serialises into
+``BENCH_coldstart.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class PoolMetrics:
+    cold_starts: int = 0
+    warm_hits: int = 0
+    hot_hits: int = 0
+    evictions_ttl: int = 0
+    evictions_pressure: int = 0
+    unpooled_starts: int = 0  # cold starts that could not be admitted to the pool
+    start_seconds: float = 0.0  # total start latency charged
+
+    @property
+    def total_starts(self) -> int:
+        return self.cold_starts + self.warm_hits + self.hot_hits
+
+    @property
+    def cold_start_rate(self) -> float:
+        n = self.total_starts
+        return self.cold_starts / n if n else 0.0
+
+    @property
+    def warm_hit_rate(self) -> float:
+        n = self.total_starts
+        return (self.warm_hits + self.hot_hits) / n if n else 0.0
+
+    def count(self, kind: str) -> None:
+        if kind == "cold":
+            self.cold_starts += 1
+        elif kind == "warm":
+            self.warm_hits += 1
+        elif kind == "hot":
+            self.hot_hits += 1
+        else:
+            raise ValueError(f"unknown start kind {kind!r}")
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "cold_starts": self.cold_starts,
+            "warm_hits": self.warm_hits,
+            "hot_hits": self.hot_hits,
+            "total_starts": self.total_starts,
+            "cold_start_rate": round(self.cold_start_rate, 6),
+            "warm_hit_rate": round(self.warm_hit_rate, 6),
+            "evictions_ttl": self.evictions_ttl,
+            "evictions_pressure": self.evictions_pressure,
+            "unpooled_starts": self.unpooled_starts,
+            "start_seconds": round(self.start_seconds, 6),
+        }

@@ -1,0 +1,277 @@
+"""Per-(worker, function) warm-container pools.
+
+``WarmPool`` is the single source of truth for container residency:
+
+* ``acquire`` answers "what does it cost to start ``f`` on ``w`` *now*" —
+  hot (idle container inside the pre-pause grace window), warm (paused idle
+  container: unpause) or cold (create; may first evict idle containers under
+  the worker's memory budget, in the keep-alive policy's order);
+* ``release`` parks the container back in the idle pool (where the janitor
+  and the budget can reclaim it) — or destroys it if it was admitted
+  over-budget;
+* ``sweep`` is the janitor pass: retire every idle container the policy
+  declares expired; ``next_event`` tells the event loop when the next expiry
+  can happen so the simulator needn't poll;
+* ``warmth`` ranks (function, worker) pairs 0/1/2 (cold/warm/hot) — the
+  scheduler-facing view that `core.batched` consumes as its warmth-rank
+  column and `serve.Engine` republishes as ``warm:<function>`` residency
+  tags via the ``on_warm``/``on_cooled`` callbacks (fired on the 0↔1 idle
+  transitions per (worker, function)).
+
+Pending-demand bookkeeping (``pending_add``/``pending_done`` refcounts per
+tag) feeds :class:`repro.pool.policy.AffinityAwareKeepAlive`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple, Union
+
+from .container import Container, ContainerState
+from .metrics import PoolMetrics
+from .policy import KeepAlivePolicy
+
+# start kinds
+COLD, WARM, HOT = "cold", "warm", "hot"
+
+ResidencyHook = Callable[[str, str, str], None]  # (worker, function, tag)
+
+
+@dataclasses.dataclass(frozen=True)
+class StartCosts:
+    """Latency charged per start kind, seconds.  Defaults approximate the
+    OpenWhisk numbers the cold-start literature reports: ~½ s container
+    create, ~⅒ s unpause, free reuse of a still-running container."""
+
+    cold: float = 0.5
+    warm: float = 0.1
+    hot: float = 0.0
+
+    def of(self, kind: str) -> float:
+        return {COLD: self.cold, WARM: self.warm, HOT: self.hot}[kind]
+
+
+class WarmPool:
+    def __init__(
+        self,
+        policy: KeepAlivePolicy,
+        *,
+        costs: StartCosts = StartCosts(),
+        budget_mb: Union[None, float, Mapping[str, float]] = None,
+        hot_window: float = 2.0,
+        on_warm: Optional[ResidencyHook] = None,
+        on_cooled: Optional[ResidencyHook] = None,
+    ):
+        self.policy = policy
+        self.costs = costs
+        self._budget = budget_mb
+        self.hot_window = float(hot_window)
+        self.on_warm = on_warm
+        self.on_cooled = on_cooled
+        self.metrics = PoolMetrics()
+        self._idle: Dict[Tuple[str, str], List[Container]] = {}
+        self._busy: Dict[str, Container] = {}
+        self._unpooled: set = set()  # cids destroyed on release
+        self._pending: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # pending affinity demand
+    # ------------------------------------------------------------------ #
+
+    def pending_add(self, tags: Iterable[str]) -> None:
+        for t in tags:
+            self._pending[t] = self._pending.get(t, 0) + 1
+
+    def pending_done(self, tags: Iterable[str]) -> None:
+        for t in tags:
+            n = self._pending.get(t, 0) - 1
+            if n <= 0:
+                self._pending.pop(t, None)
+            else:
+                self._pending[t] = n
+
+    def pending_tags(self) -> frozenset:
+        return frozenset(self._pending)
+
+    # ------------------------------------------------------------------ #
+    # budget accounting
+    # ------------------------------------------------------------------ #
+
+    def budget_of(self, worker: str) -> Optional[float]:
+        if self._budget is None:
+            return None
+        if isinstance(self._budget, Mapping):
+            return self._budget.get(worker)
+        return float(self._budget)
+
+    def used_mb(self, worker: str) -> float:
+        used = sum(c.memory for c in self._busy.values() if c.worker == worker)
+        for (w, _f), lst in self._idle.items():
+            if w == worker:
+                used += sum(c.memory for c in lst)
+        return used
+
+    # ------------------------------------------------------------------ #
+    # idle-set maintenance (residency-tag transitions live here)
+    # ------------------------------------------------------------------ #
+
+    def _park(self, c: Container, now: float) -> None:
+        c.state = ContainerState.IDLE
+        c.last_used = now
+        lst = self._idle.setdefault((c.worker, c.function), [])
+        lst.append(c)
+        if len(lst) == 1 and self.on_warm is not None:
+            self.on_warm(c.worker, c.function, c.tag)
+
+    def _unpark(self, c: Container) -> None:
+        key = (c.worker, c.function)
+        lst = self._idle[key]
+        lst.remove(c)
+        if not lst:
+            del self._idle[key]
+            if self.on_cooled is not None:
+                self.on_cooled(c.worker, c.function, c.tag)
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+
+    def acquire(self, function: str, worker: str, now: float, *,
+                memory: float, tag: str = "") -> Tuple[Container, str, float]:
+        """Hand out a container for one invocation.  Returns
+        ``(container, kind, start_cost_seconds)``."""
+        idle = self._idle.get((worker, function))
+        if idle:
+            c = self.policy.select(idle, now)
+            kind = HOT if c.idle_for(now) <= self.hot_window else WARM
+            self._unpark(c)
+            c.state = ContainerState.BUSY
+            c.uses += 1
+            self._busy[c.cid] = c
+            cost = self.costs.of(kind)
+            self.metrics.count(kind)
+            self.metrics.start_seconds += cost
+            return c, kind, cost
+
+        # cold path: make room under the worker's budget first
+        admitted = self._make_room(worker, memory, now)
+        c = Container(function=function, tag=tag, worker=worker,
+                      memory=memory, created_at=now, last_used=now)
+        c.uses = 1
+        self._busy[c.cid] = c
+        if not admitted:
+            self._unpooled.add(c.cid)
+            self.metrics.unpooled_starts += 1
+        cost = self.costs.of(COLD)
+        self.metrics.count(COLD)
+        self.metrics.start_seconds += cost
+        return c, COLD, cost
+
+    def _make_room(self, worker: str, memory: float, now: float) -> bool:
+        budget = self.budget_of(worker)
+        if budget is None:
+            return True
+        busy_used = sum(c.memory for c in self._busy.values()
+                        if c.worker == worker)
+        if busy_used + memory > budget:
+            # even evicting every idle container cannot make this fit:
+            # run unpooled instead of flushing the warm pool for nothing
+            return False
+        idle_here = [c for (w, _f), lst in self._idle.items() if w == worker
+                     for c in lst]
+        order = self.policy.evict_order(idle_here, now, self.pending_tags())
+        i = 0
+        while self.used_mb(worker) + memory > budget and i < len(order):
+            self._retire(order[i], pressure=True)
+            i += 1
+        return self.used_mb(worker) + memory <= budget
+
+    def release(self, cid: str, now: float) -> Optional[Container]:
+        """Invocation finished: park the container (or destroy if unpooled).
+        Returns the container if it went idle, else None."""
+        c = self._busy.pop(cid, None)
+        if c is None:
+            return None
+        if cid in self._unpooled:
+            self._unpooled.discard(cid)
+            c.state = ContainerState.DEAD
+            return None
+        self._park(c, now)
+        return c
+
+    def destroy(self, cid: str) -> None:
+        """Forcibly retire a busy container (worker failure)."""
+        c = self._busy.pop(cid, None)
+        if c is not None:
+            self._unpooled.discard(cid)
+            c.state = ContainerState.DEAD
+
+    def _retire(self, c: Container, *, pressure: bool) -> None:
+        self._unpark(c)
+        c.state = ContainerState.DEAD
+        if pressure:
+            self.metrics.evictions_pressure += 1
+        else:
+            self.metrics.evictions_ttl += 1
+
+    def evict_worker(self, worker: str) -> int:
+        """Worker disappeared: retire all its idle containers.  Not counted
+        as evictions in metrics, but ``on_cooled`` hooks fire — consumers
+        (e.g. ``serve.Engine``) rely on them to withdraw residency tags."""
+        n = 0
+        for (w, _f) in [k for k in self._idle if k[0] == worker]:
+            for c in list(self._idle.get((w, _f), ())):
+                self._unpark(c)
+                c.state = ContainerState.DEAD
+                n += 1
+        return n
+
+    # ------------------------------------------------------------------ #
+    # janitor
+    # ------------------------------------------------------------------ #
+
+    def sweep(self, now: float) -> List[Container]:
+        """Retire every idle container the policy declares expired."""
+        pending = self.pending_tags()
+        out: List[Container] = []
+        for key in list(self._idle):
+            for c in list(self._idle.get(key, ())):
+                if self.policy.expired(c, now, pending):
+                    self._retire(c, pressure=False)
+                    out.append(c)
+        return out
+
+    def next_event(self, now: float) -> Optional[float]:
+        """Earliest future time an idle container can expire (None if the
+        pool is empty or nothing can ever expire without new information)."""
+        pending = self.pending_tags()
+        best: Optional[float] = None
+        for lst in self._idle.values():
+            for c in lst:
+                t = self.policy.next_expiry(c, now, pending)
+                if t != float("inf") and (best is None or t < best):
+                    best = t
+        if best is None:
+            return None
+        return max(best, now)
+
+    # ------------------------------------------------------------------ #
+    # scheduler-facing views
+    # ------------------------------------------------------------------ #
+
+    def has_idle(self) -> bool:
+        return bool(self._idle)
+
+    def idle_count(self, worker: Optional[str] = None) -> int:
+        if worker is None:
+            return sum(len(v) for v in self._idle.values())
+        return sum(len(v) for (w, _f), v in self._idle.items() if w == worker)
+
+    def warmth(self, function: str, worker: str, now: float) -> int:
+        """0 = cold, 1 = warm, 2 = hot — the batched path's warmth rank.
+        Ranks the container the keep-alive policy would actually serve, so
+        the advertised tier matches what ``acquire`` will charge."""
+        idle = self._idle.get((worker, function))
+        if not idle:
+            return 0
+        c = self.policy.select(idle, now)
+        return 2 if c.idle_for(now) <= self.hot_window else 1

@@ -17,8 +17,16 @@ with the exact Listing-1 machinery:
 
 Fault tolerance: heartbeat-based failure detection; a dead cell simply leaves
 ``conf`` (Listing 1 line 19 handles the rest) and its sessions are re-prefilled
-elsewhere.  Stragglers are hedged with a duplicate request that is anti-affine
-to its own tag, so the hedge lands on a different cell.
+elsewhere.  Stragglers are hedged with a duplicate request whose policy block
+explicitly lists every cell *except* the straggler's, so the hedge lands on a
+different cell without anti-affining against unrelated decode traffic.
+
+Container warmth (optional): with a :class:`repro.pool.WarmPool` attached the
+engine (a) charges each request its cold/warm/hot container start, (b)
+publishes ``warm:<function>`` residency tags into ``conf`` whenever a
+(cell, function) pool goes non-empty — so synthesised (or hand-written)
+Listing-1 policies can steer toward warm cells — and (c) passes the pool's
+warmth rank to the scheduler as a tie-breaker among otherwise-valid cells.
 """
 from __future__ import annotations
 
@@ -40,10 +48,23 @@ from repro.core import (
     try_schedule,
 )
 from repro.cluster.topology import CellSpec
+from repro.pool import WarmPool
 
 TRAIN_TAG = "train"
 PREFILL_TAG_PREFIX = "prefill"
 DECODE_TAG_PREFIX = "decode"
+
+
+def _chain(first: Callable[[str, str, str], None],
+           second: Optional[Callable[[str, str, str], None]]):
+    if second is None:
+        return first
+
+    def hook(worker: str, fname: str, tag: str) -> None:
+        first(worker, fname, tag)
+        second(worker, fname, tag)
+
+    return hook
 
 
 @dataclasses.dataclass
@@ -72,7 +93,8 @@ class Engine:
                  runner: Optional[Callable[[Request, str], Any]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  hedge_after: Optional[float] = None,
-                 heartbeat_timeout: float = 10.0):
+                 heartbeat_timeout: float = 10.0,
+                 pool: Optional[WarmPool] = None):
         self.cells = dict(cells)
         self.state = ClusterState()
         self.reg = Registry()
@@ -80,6 +102,15 @@ class Engine:
         self.runner = runner or (lambda req, cell: None)
         self.hedge_after = hedge_after
         self.heartbeat_timeout = heartbeat_timeout
+        self.pool = pool
+        self._warm_acts: Dict[Tuple[str, str], str] = {}  # (cell, fname) -> act id
+        self._containers: Dict[str, str] = {}  # activation id -> container id
+        if pool is not None:
+            # residency tags: warm pools surface as `warm:<fname>` pseudo-
+            # functions in conf, visible to every Listing-1 policy; hooks the
+            # caller already installed on the pool keep firing afterwards
+            pool.on_warm = _chain(self._on_warm, pool.on_warm)
+            pool.on_cooled = _chain(self._on_cooled, pool.on_cooled)
         self._ids = itertools.count()
         self._heartbeat: Dict[str, float] = {}
         self._sessions: Dict[str, Tuple[str, str]] = {}  # session -> (cell, kv act id)
@@ -115,30 +146,85 @@ class Engine:
             self._model_acts[(model, c)] = act.activation_id
 
     # ------------------------------------------------------------------ #
+    # warm-pool residency tags
+    # ------------------------------------------------------------------ #
+
+    def _on_warm(self, cell: str, fname: str, tag: str) -> None:
+        pseudo = f"warm-{fname}"
+        if pseudo not in self.reg:
+            self.reg.register(pseudo, memory=0.0, tag=f"warm:{fname}")
+        if cell in self.state.workers():
+            act = self.state.allocate(pseudo, cell, self.reg)
+            self._warm_acts[(cell, fname)] = act.activation_id
+
+    def _on_cooled(self, cell: str, fname: str, tag: str) -> None:
+        act = self._warm_acts.pop((cell, fname), None)
+        if act is not None:
+            self.state.complete(act)
+
+    def _warmth(self, fname: str, cell: str) -> int:
+        assert self.pool is not None
+        return self.pool.warmth(fname, cell, self.clock())
+
+    def _container_acquire(self, fname: str, req: Request, cell: str,
+                           activation_id: str) -> float:
+        """Charge the container start for this invocation (0.0 without a pool
+        or for long-lived train streams)."""
+        if self.pool is None or req.kind == "train":
+            return 0.0
+        spec = self.reg[fname]
+        c, _kind, cost = self.pool.acquire(fname, cell, self.clock(),
+                                           memory=spec.memory, tag=spec.tag)
+        self._containers[activation_id] = c.cid
+        return cost
+
+    def _container_release(self, activation_id: str) -> None:
+        if self.pool is None:
+            return
+        cid = self._containers.pop(activation_id, None)
+        if cid is not None:
+            self.pool.release(cid, self.clock())
+
+    # ------------------------------------------------------------------ #
     # policy synthesis (aAPP as the placement language)
     # ------------------------------------------------------------------ #
 
-    def _policy_for(self, req: Request, *, exclude_self: bool = False) -> AAppScript:
+    def _policy_for(self, req: Request, *,
+                    exclude_cell: Optional[str] = None) -> AAppScript:
         policies = []
         mt = f"model:{req.model}" if req.model else None
+        fname = f"{req.kind}-{req.model}" if req.kind != "train" else "train-job"
         if req.kind == "decode":
             tag = f"{DECODE_TAG_PREFIX}:{req.model}"
             terms = []
-            if exclude_self:
+            if exclude_cell is not None:
                 # a hedge cannot chase the session's KV (it lives on the slow
-                # cell) — fall back to model residency + self anti-affinity
+                # cell) — fall back to model residency on any *other* cell.
+                # Only the straggler's cell is excluded: anti-affining the
+                # decode tag itself would rule out every cell serving decode
+                # traffic for this model, not just the straggler.
                 if mt:
                     terms.append(mt)
-                terms.append("!" + tag)
             elif req.session and req.session in self._sessions:
                 terms.append(f"kv:{req.session}")  # session locality (affinity)
             elif mt:
                 terms.append(mt)
             terms.append("!" + TRAIN_TAG)  # SLO isolation (anti-affinity)
-            blocks = (Block(workers=("*",),
+            workers = ("*",) if exclude_cell is None else tuple(
+                c for c in self.state.workers() if c != exclude_cell)
+            if not workers:
+                # no other cell alive: the wildcard can only re-pick the
+                # straggler, which submit() discards (cell2 == cell)
+                workers = ("*",)
+            blocks = (Block(workers=workers,
                             affinity=Affinity.from_terms(terms)),)
+            if self.pool is not None:
+                # steer toward cells holding a warm container for this class
+                blocks = (Block(workers=workers,
+                                affinity=Affinity.from_terms(
+                                    terms + [f"warm:{fname}"])),) + blocks
             # fallback: allow co-location with train rather than failing
-            fb = (Block(workers=("*",),
+            fb = (Block(workers=workers,
                         affinity=Affinity.from_terms([t for t in terms
                                                       if not t.startswith("!" + TRAIN_TAG)])),)
             policies.append(TagPolicy(tag=tag, blocks=blocks + fb, followup="fail"))
@@ -148,6 +234,11 @@ class Engine:
             blocks = (Block(workers=("*",),
                             invalidate=Invalidate(capacity_used=95.0),
                             affinity=Affinity.from_terms(terms)),)
+            if self.pool is not None:
+                blocks = (Block(workers=("*",),
+                                invalidate=Invalidate(capacity_used=95.0),
+                                affinity=Affinity.from_terms(
+                                    terms + [f"warm:{fname}"])),) + blocks
             # fallback: tolerate train co-location rather than failing
             fb = (Block(workers=("*",),
                         invalidate=Invalidate(capacity_used=95.0),
@@ -172,15 +263,21 @@ class Engine:
         self.check_health()
         fname = f"{req.kind}-{req.model}" if req.kind != "train" else "train-job"
         script = self._policy_for(req)
-        cell = try_schedule(fname, self.state.conf(), script, self.reg)
+        warmth = None
+        if self.pool is not None and req.kind != "train":
+            warmth = self._warmth
+        cell = try_schedule(fname, self.state.conf(), script, self.reg,
+                            warmth=warmth)
         if cell is None:
             comp = Completion(req.rid, "<none>", False, 0.0)
             self.completions.append(comp)
             return comp
         act = self.state.allocate(fname, cell, self.reg)
+        start_cost = self._container_acquire(fname, req, cell, act.activation_id)
         t0 = self.clock()
         result = self.runner(req, cell)
-        latency = self.clock() - t0
+        run_latency = self.clock() - t0
+        latency = run_latency + start_cost
 
         if req.kind == "train":
             # training jobs are long-lived streams: the allocation persists
@@ -191,21 +288,28 @@ class Engine:
             return comp
 
         hedge_won = False
-        if (self.hedge_after is not None and latency > self.hedge_after
+        # hedge on the runner time only: a cold start inflates latency in a
+        # way no hedge can beat (it pays its own container start elsewhere)
+        if (self.hedge_after is not None and run_latency > self.hedge_after
                 and req.kind == "decode" and not req.hedged):
-            # straggler: hedge on a different cell (anti-affine to own tag)
+            # straggler: hedge on any cell but the straggler's own
             hedge = dataclasses.replace(req, hedged=True, rid=req.rid + "-hedge")
-            script2 = self._policy_for(hedge, exclude_self=True)
-            cell2 = try_schedule(fname, self.state.conf(), script2, self.reg)
+            script2 = self._policy_for(hedge, exclude_cell=cell)
+            cell2 = try_schedule(fname, self.state.conf(), script2, self.reg,
+                                 warmth=warmth)
             if cell2 is not None and cell2 != cell:
                 act2 = self.state.allocate(fname, cell2, self.reg)
+                start2 = self._container_acquire(fname, hedge, cell2,
+                                                 act2.activation_id)
                 t1 = self.clock()
                 result2 = self.runner(hedge, cell2)
-                l2 = self.clock() - t1
+                l2 = self.clock() - t1 + start2
+                self._container_release(act2.activation_id)
                 self.state.complete(act2.activation_id)
                 if l2 < latency:
                     result, hedge_won = result2, True
 
+        self._container_release(act.activation_id)
         self.state.complete(act.activation_id)
         if req.kind == "prefill" and req.session:
             self._bind_session(req.session, req.model, cell)
@@ -243,6 +347,8 @@ class Engine:
 
     def check_health(self) -> List[str]:
         now = self.clock()
+        if self.pool is not None:
+            self.pool.sweep(now)  # piggyback the janitor on the health tick
         dead = [c for c, t in self._heartbeat.items()
                 if now - t > self.heartbeat_timeout and c in self.state.workers()]
         for c in dead:
@@ -255,6 +361,10 @@ class Engine:
         cell), and re-pin model residency where replicas are configured."""
         self.state.fail_worker(cell)
         self._heartbeat.pop(cell, None)
+        if self.pool is not None:
+            # evict_worker drains every idle list for the cell; the on_cooled
+            # callbacks retire the matching warm:<fn> residency activations
+            self.pool.evict_worker(cell)
         moved = []
         for session, (c, _act) in list(self._sessions.items()):
             if c == cell:

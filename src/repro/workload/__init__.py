@@ -1,0 +1,24 @@
+"""Trace-driven workload scenarios (Poisson / bursty / diurnal / chained DAG)
+and the open-loop driver that replays them onto the cluster simulator."""
+from .traces import (
+    Arrival,
+    bursty_trace,
+    chained_trace,
+    diurnal_trace,
+    poisson_trace,
+)
+from .driver import InvocationRecord, TraceWorkload, affine_terms_of
+from .scenarios import (
+    COMPUTE_S,
+    FUNCTION_MIX,
+    SCENARIOS,
+    build_trace,
+    register_functions,
+)
+
+__all__ = [
+    "Arrival", "poisson_trace", "bursty_trace", "diurnal_trace",
+    "chained_trace", "InvocationRecord", "TraceWorkload", "affine_terms_of",
+    "SCENARIOS", "FUNCTION_MIX", "COMPUTE_S", "build_trace",
+    "register_functions",
+]

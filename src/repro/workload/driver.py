@@ -1,0 +1,114 @@
+"""Replay an arrival trace onto :class:`repro.cluster.simulator.ClusterSim`.
+
+``TraceWorkload`` is the open-loop counterpart of the closed-loop
+divide-et-impera workload: every :class:`repro.workload.traces.Arrival` is
+submitted at its trace time, scheduled through the real aAPP machinery,
+charged its container start (cold/warm/hot via the simulator's warm pool,
+when one is attached), computed under processor sharing, and recorded.
+
+DAG children declared on an arrival are spawned when the parent's compute
+finishes — the moment a running ``divide`` invokes its ``impera``s.
+
+Pending-demand plumbing: while an invocation is in flight the pool's pending
+set holds its own tag, every tag its aAPP policy is affine to, and its
+children's tags — the signal :class:`AffinityAwareKeepAlive` retains warm
+containers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.ast import AAppScript
+from repro.core.scheduler import candidate_blocks
+
+from .traces import Arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class InvocationRecord:
+    function: str
+    worker: str
+    t_submit: float
+    latency: float
+    start_kind: str  # cold | warm | hot | none (no pool) | failed
+    failed: bool
+
+
+def affine_terms_of(script: Optional[AAppScript], tag: str) -> List[str]:
+    """Tags the policy for ``tag`` is affine to (across candidate blocks)."""
+    if script is None:
+        return []
+    out: List[str] = []
+    for b in candidate_blocks(tag, script):
+        for t in b.affinity.affine:
+            if t not in out:
+                out.append(t)
+    return out
+
+
+class TraceWorkload:
+    """Drives ``sim`` from a trace.  Functions must be pre-registered in
+    ``sim.registry``; ``compute`` maps function name -> single-vCPU seconds."""
+
+    def __init__(
+        self,
+        sim,
+        scheduler_fn: Callable[[str], Optional[str]],
+        compute: Dict[str, float],
+        *,
+        script: Optional[AAppScript] = None,
+    ):
+        self.sim = sim
+        self.schedule = scheduler_fn
+        self.compute = dict(compute)
+        self.script = script
+        self.records: List[InvocationRecord] = []
+
+    def load(self, trace: Sequence[Arrival]) -> None:
+        for a in trace:
+            self.sim.at(a.t, lambda a=a: self.submit(a))
+
+    # ------------------------------------------------------------------ #
+
+    def _pending_tags(self, arrival: Arrival) -> List[str]:
+        tag = self.sim.registry[arrival.function].tag
+        tags = [tag] + affine_terms_of(self.script, tag)
+        for child, _n in arrival.children:
+            ct = self.sim.registry[child].tag
+            if ct not in tags:
+                tags.append(ct)
+        return tags
+
+    def submit(self, arrival: Arrival) -> None:
+        sim = self.sim
+        f = arrival.function
+        t0 = sim.now
+        w = self.schedule(f)
+        if w is None:
+            sim.failures.append(f)
+            self.records.append(InvocationRecord(f, "<unschedulable>", t0,
+                                                 float("nan"), "failed", True))
+            return
+        act = sim.state.allocate(f, w, sim.registry)
+        start = sim.container_start(f, w, act.activation_id)
+        kind = sim.last_start_kind if sim.pool is not None else "none"
+        pending = self._pending_tags(arrival)
+        if sim.pool is not None:
+            sim.pool.pending_add(pending)
+
+        def finish():
+            # children first, so their tags take over the pending demand
+            # before the parent's refcounts drop
+            for child, n in arrival.children:
+                for _ in range(n):
+                    self.submit(Arrival(t=sim.now, function=child))
+            if sim.pool is not None:
+                sim.pool.pending_done(pending)
+            sim.container_release(act.activation_id)
+            sim.state.complete(act.activation_id)
+            self.records.append(InvocationRecord(
+                f, w, t0, sim.now - t0, kind, False))
+
+        sim.after(sim.overhead(w) + start, lambda: sim.compute(
+            f, w, self.compute.get(f, 0.0), act.activation_id, finish))

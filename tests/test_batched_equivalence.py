@@ -1,0 +1,146 @@
+"""`schedule_wave` is bit-identical to a scalar `schedule` loop — the promise
+`repro.core.batched`'s docstring makes, including the warmth-rank column.
+
+Property-style but hypothesis-free: scripts / clusters / waves / warmth maps
+are generated from seeded ``random.Random`` instances so the sweep runs in the
+minimal environment and is perfectly reproducible.
+"""
+import random
+
+from repro.core import (
+    AAppScript,
+    Affinity,
+    Block,
+    ClusterState,
+    CompiledPolicies,
+    Invalidate,
+    Registry,
+    TagPolicy,
+    schedule_wave,
+    try_schedule,
+)
+
+TAGS = ["a", "b", "c", "d"]
+WORKERS = [f"w{i}" for i in range(8)]
+
+
+def random_script(rng: random.Random) -> AAppScript:
+    policies = []
+    for tag in TAGS:
+        blocks = []
+        for _ in range(rng.randint(1, 3)):
+            if rng.random() < 0.5:
+                workers = ("*",)
+            else:
+                k = rng.randint(1, 4)
+                workers = tuple(rng.sample(WORKERS + ["ghost"], k))
+            aff, anti = [], []
+            for t in TAGS:
+                r = rng.randint(0, 5)
+                if r == 0:
+                    aff.append(t)
+                elif r == 1:
+                    anti.append(t)
+            blocks.append(Block(
+                workers=workers,
+                strategy=rng.choice(["best_first", "any"]),
+                invalidate=Invalidate(
+                    capacity_used=rng.choice([None, 40.0, 80.0]),
+                    max_concurrent_invocations=rng.choice([None, 1, 4]),
+                ),
+                affinity=Affinity(affine=tuple(aff), anti_affine=tuple(anti)),
+            ))
+        policies.append(TagPolicy(tag=tag, blocks=tuple(blocks),
+                                  followup=rng.choice(["default", "fail"])))
+    return AAppScript(policies=tuple(policies))
+
+
+def random_cluster(rng: random.Random):
+    n = rng.randint(1, 8)
+    state = ClusterState()
+    reg = Registry()
+    for i in range(n):
+        state.add_worker(f"w{i}", max_memory=rng.choice([20.0, 50.0, 100.0]))
+    for t in TAGS:
+        reg.register(f"fn_{t}", memory=rng.choice([1.0, 10.0, 30.0]), tag=t)
+    for _ in range(rng.randint(0, 10)):
+        w = f"w{rng.randrange(n)}"
+        f = f"fn_{rng.choice(TAGS)}"
+        view = state.conf()[w]
+        if view.memory_used + reg[f].memory <= view.max_memory:
+            state.allocate(f, w, reg)
+    return state, reg
+
+
+def clone_state(state: ClusterState, reg: Registry) -> ClusterState:
+    out = ClusterState()
+    for w, view in state.conf().items():
+        out.add_worker(w, max_memory=view.max_memory)
+    for act in state.active_activations():
+        out.allocate(act.function, act.worker, reg)
+    return out
+
+
+def random_warmth(rng: random.Random):
+    table = {(f"fn_{t}", w): rng.randint(0, 2) for t in TAGS for w in WORKERS}
+    return lambda f, w: table.get((f, w), 0)
+
+
+def _check_seed(seed: int, with_warmth: bool) -> None:
+    rng = random.Random(seed)
+    script = random_script(rng)
+    state, reg = random_cluster(rng)
+    fs = [f"fn_{rng.choice(TAGS)}" for _ in range(rng.randint(1, 12))]
+    warmth = random_warmth(rng) if with_warmth else None
+
+    ref_state = clone_state(state, reg)
+    ref_rng = random.Random(seed * 7 + 1)
+    expected = []
+    for f in fs:
+        w = try_schedule(f, ref_state.conf(), script, reg, rng=ref_rng,
+                         warmth=warmth)
+        expected.append(w)
+        if w is not None:
+            ref_state.allocate(f, w, reg)
+
+    pol = CompiledPolicies(script, reg)
+    res = schedule_wave(fs, state.conf(), pol, reg,
+                        rng=random.Random(seed * 7 + 1), backend="ref",
+                        warmth=warmth)
+    assert res.assignments == expected, (
+        f"seed={seed} warmth={with_warmth}: {res.assignments} != {expected}")
+
+
+def test_wave_equals_scalar_loop():
+    for seed in range(60):
+        _check_seed(seed, with_warmth=False)
+
+
+def test_wave_equals_scalar_loop_with_warmth_rank():
+    for seed in range(60):
+        _check_seed(seed, with_warmth=True)
+
+
+def test_warmth_narrows_to_hottest_tier():
+    """Deterministic: both paths pick the warm worker over the conf-first one."""
+    state = ClusterState()
+    reg = Registry()
+    for w in ("w0", "w1", "w2"):
+        state.add_worker(w, max_memory=100.0)
+    reg.register("fn_a", memory=1.0, tag="a")
+    script = AAppScript(policies=(
+        TagPolicy(tag="a", blocks=(Block(workers=("*",)),)),))
+    warmth = lambda f, w: {"w1": 2}.get(w, 0)
+
+    chosen = try_schedule("fn_a", state.conf(), script, reg, warmth=warmth)
+    assert chosen == "w1"  # best_first alone would pick w0
+
+    res = schedule_wave(["fn_a"], state.conf(), CompiledPolicies(script, reg),
+                        reg, backend="ref", warmth=warmth)
+    assert res.assignments == ["w1"]
+
+    # without warmth both fall back to conf order
+    assert try_schedule("fn_a", state.conf(), script, reg) == "w0"
+    res = schedule_wave(["fn_a"], state.conf(), CompiledPolicies(script, reg),
+                        reg, backend="ref")
+    assert res.assignments == ["w0"]

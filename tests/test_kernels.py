@@ -1,8 +1,11 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs ref.py."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.affinity import affinity_valid

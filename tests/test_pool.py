@@ -1,0 +1,305 @@
+"""Warm-pool subsystem: keep-alive policies, janitor, budget eviction,
+simulator cold-start accounting, and the engine's warmth integration."""
+import random
+
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import paper_testbed, two_pod_cells
+from repro.core import parse, try_schedule
+from repro.pool import (
+    AffinityAwareKeepAlive,
+    FixedTTLKeepAlive,
+    LCSKeepAlive,
+    MRUKeepAlive,
+    StartCosts,
+    WarmPool,
+    make_policy,
+)
+from repro.serve.engine import Engine, Request
+from repro.workload import (
+    COMPUTE_S,
+    TraceWorkload,
+    build_trace,
+    register_functions,
+)
+
+
+def _pool(policy, **kw):
+    kw.setdefault("costs", StartCosts(cold=0.5, warm=0.1, hot=0.0))
+    return WarmPool(policy, **kw)
+
+
+def _cycle(pool, fname, worker, t_acquire, t_release, mem=100.0, tag="x"):
+    c, kind, cost = pool.acquire(fname, worker, t_acquire, memory=mem, tag=tag)
+    pool.release(c.cid, t_release)
+    return c, kind, cost
+
+
+# --------------------------------------------------------------------------- #
+# start kinds
+# --------------------------------------------------------------------------- #
+
+
+def test_cold_then_hot_then_warm():
+    pool = _pool(FixedTTLKeepAlive(ttl=60.0), hot_window=2.0)
+    _c, kind, cost = _cycle(pool, "f", "w", 0.0, 1.0)
+    assert kind == "cold" and cost == 0.5
+    # reacquired inside the hot window: free
+    _c, kind, cost = _cycle(pool, "f", "w", 2.5, 3.0)
+    assert kind == "hot" and cost == 0.0
+    # reacquired after the grace window: paused -> unpause
+    _c, kind, cost = _cycle(pool, "f", "w", 50.0, 51.0)
+    assert kind == "warm" and cost == 0.1
+    m = pool.metrics
+    assert (m.cold_starts, m.hot_hits, m.warm_hits) == (1, 1, 1)
+    assert m.total_starts == 3 and abs(m.cold_start_rate - 1 / 3) < 1e-9
+
+
+def test_pool_is_per_worker_and_per_function():
+    pool = _pool(FixedTTLKeepAlive(ttl=60.0))
+    _cycle(pool, "f", "w1", 0.0, 1.0)
+    assert pool.acquire("f", "w2", 2.0, memory=1.0)[1] == "cold"  # other worker
+    assert pool.acquire("g", "w1", 2.0, memory=1.0)[1] == "cold"  # other fn
+    assert pool.acquire("f", "w1", 2.0, memory=1.0)[1] == "hot"
+
+
+# --------------------------------------------------------------------------- #
+# LCS vs MRU vs TTL: selection and eviction order
+# --------------------------------------------------------------------------- #
+
+
+def _three_idle(pool):
+    """Three idle containers on one (worker, function), released at 1 < 2 < 3."""
+    cs = [pool.acquire("f", "w", 0.0, memory=1.0)[0] for _ in range(3)]
+    for i, c in enumerate(cs):
+        pool.release(c.cid, float(i + 1))
+    return cs
+
+
+def test_lcs_selects_oldest_idle():
+    pool = _pool(LCSKeepAlive(ttl=100.0))
+    c1, _c2, _c3 = _three_idle(pool)
+    got, _, _ = pool.acquire("f", "w", 5.0, memory=1.0)
+    assert got.cid == c1.cid  # least-currently-served = last_used min
+
+
+def test_mru_selects_newest_idle():
+    pool = _pool(MRUKeepAlive(ttl=100.0))
+    _c1, _c2, c3 = _three_idle(pool)
+    got, _, _ = pool.acquire("f", "w", 5.0, memory=1.0)
+    assert got.cid == c3.cid
+
+
+def test_ttl_eviction_order_under_pressure():
+    # budget fits 3 idle + nothing: a cold start for a second function evicts
+    # the least-recently-used first
+    pool = _pool(FixedTTLKeepAlive(ttl=100.0), budget_mb=3.0)
+    c1, _c2, _c3 = _three_idle(pool)
+    got, kind, _ = pool.acquire("g", "w", 5.0, memory=1.0)
+    assert kind == "cold"
+    assert pool.metrics.evictions_pressure == 1
+    assert c1.state.value == "dead"  # oldest idle died first
+
+
+def test_oversized_function_does_not_flush_pool():
+    # a function that can never fit the budget must not evict warm containers
+    pool = _pool(FixedTTLKeepAlive(ttl=100.0), budget_mb=3.0)
+    _three_idle(pool)
+    _got, kind, _ = pool.acquire("huge", "w", 5.0, memory=10.0)
+    assert kind == "cold"
+    assert pool.metrics.unpooled_starts == 1
+    assert pool.metrics.evictions_pressure == 0 and pool.idle_count("w") == 3
+
+
+def test_warmth_rank_matches_policy_selection():
+    # LCS serves the *oldest* idle container: a hot newcomer must not make
+    # the pool advertise a free start it will not deliver
+    pool = _pool(LCSKeepAlive(ttl=1000.0), hot_window=2.0)
+    _three_idle(pool)  # oldest released at t=1
+    assert pool.warmth("f", "w", 4.0) == 1  # oldest idle 3.0s > hot_window
+    mru = _pool(MRUKeepAlive(ttl=1000.0), hot_window=2.0)
+    cs = [mru.acquire("f", "w", 0.0, memory=1.0)[0] for _ in range(3)]
+    for i, c in enumerate(cs):
+        mru.release(c.cid, float(i + 1))
+    assert mru.warmth("f", "w", 4.0) == 2  # MRU serves the t=3 container
+
+
+def test_janitor_ttl_expiry_and_next_event():
+    pool = _pool(FixedTTLKeepAlive(ttl=10.0))
+    c, _, _ = pool.acquire("f", "w", 0.0, memory=1.0)
+    pool.release(c.cid, 3.0)
+    assert pool.next_event(4.0) == 13.0  # last_used + ttl
+    assert pool.sweep(12.9) == []  # not yet
+    gone = pool.sweep(13.0)
+    assert [g.cid for g in gone] == [c.cid]
+    assert pool.metrics.evictions_ttl == 1
+    assert not pool.has_idle() and pool.next_event(14.0) is None
+
+
+# --------------------------------------------------------------------------- #
+# affinity-aware retention
+# --------------------------------------------------------------------------- #
+
+
+def test_affinity_policy_retains_pending_tags_past_ttl():
+    pool = _pool(AffinityAwareKeepAlive(ttl=10.0))
+    _cycle(pool, "f", "w", 0.0, 0.0, tag="i")
+    pool.pending_add(["i"])
+    assert pool.next_event(1.0) is None  # cannot expire while demand pends
+    assert pool.sweep(100.0) == []  # far past ttl, still retained
+    c, kind, _ = pool.acquire("f", "w", 100.0, memory=100.0)
+    assert kind == "warm"  # the retained container pays off
+    pool.release(c.cid, 100.0)
+    pool.pending_done(["i"])
+    assert pool.next_event(100.0) == 110.0
+    assert len(pool.sweep(110.0)) == 1  # demand drained: ttl applies again
+
+
+def test_affinity_pressure_eviction_spares_pending_tags():
+    pool = _pool(AffinityAwareKeepAlive(ttl=100.0), budget_mb=2.0)
+    ci, _, _ = pool.acquire("fi", "w", 0.0, memory=1.0, tag="i")
+    cj, _, _ = pool.acquire("fj", "w", 0.0, memory=1.0, tag="j")
+    pool.release(ci.cid, 5.0)
+    pool.release(cj.cid, 1.0)  # j is *older* idle -> LRU would evict it first
+    pool.pending_add(["j"])
+    pool.acquire("fk", "w", 6.0, memory=1.0, tag="k")
+    # demand-free i was sacrificed even though j was least recently used
+    assert ci.state.value == "dead" and cj.state.value == "idle"
+
+
+# --------------------------------------------------------------------------- #
+# residency hooks
+# --------------------------------------------------------------------------- #
+
+
+def test_residency_hooks_fire_on_idle_transitions():
+    events = []
+    pool = _pool(FixedTTLKeepAlive(ttl=10.0),
+                 on_warm=lambda w, f, t: events.append(("warm", w, f)),
+                 on_cooled=lambda w, f, t: events.append(("cooled", w, f)))
+    c, _, _ = pool.acquire("f", "w", 0.0, memory=1.0)
+    assert events == []  # busy container is not warm residency
+    pool.release(c.cid, 1.0)
+    assert events == [("warm", "w", "f")]
+    c2, _, _ = pool.acquire("f", "w", 2.0, memory=1.0)
+    assert events[-1] == ("cooled", "w", "f")
+    pool.release(c2.cid, 3.0)
+    pool.sweep(13.0)  # ttl eviction also cools
+    assert events[-1] == ("cooled", "w", "f") and len(events) == 4
+
+
+# --------------------------------------------------------------------------- #
+# ClusterSim accounting under a bursty trace
+# --------------------------------------------------------------------------- #
+
+SIMPLE_SCRIPT = """
+default:
+  workers: *
+  strategy: random
+"""
+
+
+def _run_sim(policy, *, seed=0, duration=90.0):
+    pool = _pool(policy, budget_mb=512.0)
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=seed, pool=pool)
+    register_functions(sim.registry)
+    script = parse(SIMPLE_SCRIPT)
+    rng = random.Random(seed)
+    wl = TraceWorkload(
+        sim,
+        lambda f: try_schedule(f, sim.state.conf(), script, sim.registry,
+                               rng=rng,
+                               warmth=lambda fn, w: pool.warmth(fn, w, sim.now)),
+        COMPUTE_S,
+        script=script,
+    )
+    trace = build_trace("bursty", duration=duration, rate=2.0, seed=seed)
+    wl.load(trace)
+    sim.run()
+    return pool, wl, trace
+
+
+def test_sim_cold_start_accounting_bursty():
+    pool, wl, trace = _run_sim(FixedTTLKeepAlive(ttl=3.0))
+    ok = [r for r in wl.records if not r.failed]
+    m = pool.metrics
+    # every successful invocation was exactly one start of some kind
+    assert len(ok) == len(trace) and m.total_starts == len(ok)
+    assert m.cold_starts + m.warm_hits + m.hot_hits == m.total_starts
+    kinds = {r.start_kind for r in ok}
+    assert "cold" in kinds and kinds <= {"cold", "warm", "hot"}
+    # the burst gaps exceed the ttl: the janitor must have fired
+    assert m.evictions_ttl > 0
+    # charged start latency shows up in end-to-end latencies
+    assert m.start_seconds > 0
+    # the heap fully drained: no idle containers survive the last expiry
+    assert not pool.has_idle()
+
+
+def test_sim_pending_retention_reduces_cold_starts():
+    base, _, _ = _run_sim(FixedTTLKeepAlive(ttl=3.0))
+    aff, _, _ = _run_sim(AffinityAwareKeepAlive(ttl=3.0))
+    assert aff.metrics.cold_starts <= base.metrics.cold_starts
+
+
+def test_sim_without_pool_charges_nothing():
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=0)
+    assert sim.container_start("divide", "workereu2", "act-x") == 0.0
+    sim.container_release("act-x")  # no-op
+
+
+# --------------------------------------------------------------------------- #
+# engine integration: warmth steering, start costs, hedge exclusion fix
+# --------------------------------------------------------------------------- #
+
+
+def make_engine(latency=0.01, hedge_after=None, pool=None):
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    slow_cells = set()
+
+    def runner(req, cell):
+        dt = 0.5 if cell in slow_cells else latency
+        t[0] += dt
+        return f"{req.kind}@{cell}"
+
+    eng = Engine(two_pod_cells(), runner=runner, clock=clock,
+                 heartbeat_timeout=1e9, hedge_after=hedge_after, pool=pool)
+    return eng, t, slow_cells
+
+
+def test_engine_charges_and_reuses_containers():
+    pool = _pool(MRUKeepAlive(ttl=1e6), hot_window=1e6)
+    eng, _, _ = make_engine(pool=pool)
+    eng.deploy("m1", ["pod0-cell0", "pod0-cell1", "pod0-cell2"], weights_gb=8)
+    d1 = eng.submit(Request(model="m1", kind="decode"))
+    assert d1.ok and abs(d1.latency - (0.01 + 0.5)) < 1e-9  # cold start charged
+    d2 = eng.submit(Request(model="m1", kind="decode"))
+    # warm residency tag + warmth rank steer the second decode onto the
+    # container left behind by the first — a free hot start
+    assert d2.cell == d1.cell
+    assert abs(d2.latency - 0.01) < 1e-9
+    assert pool.metrics.hot_hits == 1 and pool.metrics.cold_starts == 1
+    # the warm residency tag is visible in conf while the container idles
+    tags = eng.state.conf()[d1.cell].tags
+    assert "warm:decode-m1" in tags
+
+
+def test_engine_hedge_excludes_only_straggler_cell():
+    # model on exactly two cells; the OTHER cell hosts concurrent decode
+    # traffic for the same model.  The old `!decode:<model>` hedge policy
+    # anti-affined against it and the hedge failed; excluding just the
+    # straggler's cell lets the hedge land there.
+    eng, _, slow = make_engine(hedge_after=0.1)
+    eng.deploy("m1", ["pod0-cell0", "pod0-cell1"], weights_gb=8)
+    eng.submit(Request(model="m1", kind="prefill", session="s"))
+    home = eng.session_cell("s")
+    other = next(c for c in ("pod0-cell0", "pod0-cell1") if c != home)
+    slow.add(home)
+    # a long-running decode resident on the only other model cell
+    eng.state.allocate("decode-m1", other, eng.reg)
+    d = eng.submit(Request(model="m1", kind="decode", session="s"))
+    assert d.ok and d.hedge_won
+    assert eng.completions[-1].cell == home  # original cell recorded

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) over the scheduling invariants."""
 import random
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
