@@ -1,32 +1,46 @@
 """Cold-start benchmark: keep-alive policies x workload scenarios.
 
 For every scenario in {poisson, bursty, diurnal, chained} and every keep-alive
-policy in {fixed_ttl, lcs, mru, affinity}, replay the same trace (same seeds)
-through the cluster simulator with a warm pool at an *equal per-worker memory
-budget*, and record pool metrics plus end-to-end latency percentiles.
+policy in {fixed_ttl, lcs, mru, affinity, predictive}, replay the same trace
+(same seeds) through the cluster simulator with a warm pool at an *equal
+per-worker memory budget*, and record pool metrics plus end-to-end latency
+percentiles.
+
+The ``predictive`` column runs the full forecast subsystem: an
+:class:`repro.forecast.ArrivalForecast` fed by the workload driver (EWMA
+rates, learned DAG-successor edges seeded from the aAPP affinity terms, and a
+Holt-Winters seasonal profile for the diurnal trace), a
+:class:`repro.forecast.ForecastPlanner` epoching on the simulator's event
+heap (prewarm / migrate / retire actions), and the ``predictive`` keep-alive
+policy retaining containers whose functions have predicted demand.
 
 Writes ``BENCH_coldstart.json`` at the repo root — the perf trajectory every
-future PR measures against.  The headline criterion: the affinity-aware
-keep-alive (which retains containers whose tags still have pending affinity
-demand and sacrifices demand-free ones first) must achieve a lower cold-start
-rate than fixed-TTL in every scenario.
+future PR measures against.  Headline criteria: the affinity-aware keep-alive
+must beat fixed-TTL's cold-start rate in every scenario (PR 1), and the
+predictive policy must beat affinity in at least 3 of the 4 scenarios at the
+same memory budget (PR 2); ``prewarm_wasted / prewarm_starts`` is reported
+per scenario.
 
-Usage: ``PYTHONPATH=src python benchmarks/coldstart.py [--quick]``
+Usage: ``PYTHONPATH=src python benchmarks/coldstart.py [--quick]
+[--policies predictive,affinity]``  (the JSON is only rewritten when the full
+policy set runs; a ``--policies`` subset prints the table without persisting).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import random
 import statistics
 import sys
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cluster.simulator import ClusterSim, SimParams
 from repro.cluster.topology import paper_testbed
 from repro.core import parse, try_schedule
+from repro.forecast import ArrivalForecast, ForecastPlanner, PlanConfig
 from repro.pool import StartCosts, WarmPool, make_policy
 from repro.workload import (
     COMPUTE_S,
@@ -58,21 +72,37 @@ i:
   affinity: [d]
 """
 
-POLICY_NAMES = ("fixed_ttl", "lcs", "mru", "affinity")
+POLICY_NAMES = ("fixed_ttl", "lcs", "mru", "affinity", "predictive")
 TTL = 3.0
 BUDGET_MB = 512.0  # equal per-worker pool budget for every policy
 COSTS = StartCosts(cold=0.5, warm=0.1, hot=0.0)
 DURATION = 150.0
 RATE = 2.0
 SEEDS = (0, 1, 2)
+# forecast subsystem knobs (predictive policy only)
+EWMA_TAU = 20.0
+PLAN_INTERVAL = 1.0
+MIGRATE_COST = 0.25  # transfer charge: between warm (0.1) and cold (0.5)
 
 
 def run_one(scenario: str, policy_name: str, seed: int) -> Dict:
-    pool = WarmPool(make_policy(policy_name, ttl=TTL), costs=COSTS,
-                    budget_mb=BUDGET_MB, hot_window=1.0)
-    sim = ClusterSim(paper_testbed(), SimParams(), seed=seed, pool=pool)
+    policy = make_policy(policy_name, ttl=TTL)
+    pool = WarmPool(policy, costs=COSTS, budget_mb=BUDGET_MB, hot_window=1.0)
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=seed, pool=pool,
+                     plan_interval=PLAN_INTERVAL, migrate_cost=MIGRATE_COST)
     register_functions(sim.registry)
     script = parse(SCRIPT)
+    forecast = None
+    if policy_name == "predictive":
+        # the diurnal trace's period is known to operators (a day); the other
+        # regimes carry no usable seasonality
+        forecast = ArrivalForecast(
+            tau=EWMA_TAU,
+            seasonal_period=DURATION / 2.0 if scenario == "diurnal" else None)
+        forecast.seed_affinity(script, sim.registry)
+        policy.bind(forecast)
+        sim.planner = ForecastPlanner(forecast, script, sim.registry,
+                                      PlanConfig())
     rng = random.Random(seed + 1)
 
     def scheduler(f: str):
@@ -80,7 +110,8 @@ def run_one(scenario: str, policy_name: str, seed: int) -> Dict:
             f, sim.state.conf(), script, sim.registry, rng=rng,
             warmth=lambda fn, w: pool.warmth(fn, w, sim.now))
 
-    wl = TraceWorkload(sim, scheduler, COMPUTE_S, script=script)
+    wl = TraceWorkload(sim, scheduler, COMPUTE_S, script=script,
+                       forecast=forecast)
     wl.load(build_trace(scenario, duration=DURATION, rate=RATE, seed=seed))
     sim.run()
 
@@ -99,16 +130,19 @@ def _merge(per_seed: List[Dict]) -> Dict:
     """Sum counters across seeds; recompute the derived rates."""
     out: Dict = {}
     counters = ("cold_starts", "warm_hits", "hot_hits", "total_starts",
-                "evictions_ttl", "evictions_pressure", "unpooled_starts",
-                "invocations", "failures")
+                "evictions_ttl", "evictions_pressure", "evictions_planned",
+                "unpooled_starts", "prewarm_starts", "prewarm_hits",
+                "prewarm_wasted", "migrations", "invocations", "failures")
     for k in counters:
         out[k] = sum(m[k] for m in per_seed)
-    out["start_seconds"] = round(
-        sum(m["start_seconds"] for m in per_seed), 4)
+    for k in ("start_seconds", "prewarm_seconds", "migration_seconds"):
+        out[k] = round(sum(m[k] for m in per_seed), 4)
     n = out["total_starts"]
     out["cold_start_rate"] = round(out["cold_starts"] / n, 6) if n else 0.0
     out["warm_hit_rate"] = round(
         (out["warm_hits"] + out["hot_hits"]) / n, 6) if n else 0.0
+    p = out["prewarm_starts"]
+    out["prewarm_waste_ratio"] = round(out["prewarm_wasted"] / p, 6) if p else 0.0
     means = [m["latency_mean_s"] for m in per_seed if m["latency_mean_s"]]
     p95s = [m["latency_p95_s"] for m in per_seed if m["latency_p95_s"]]
     out["latency_mean_s"] = round(statistics.mean(means), 4) if means else None
@@ -117,56 +151,105 @@ def _merge(per_seed: List[Dict]) -> Dict:
     return out
 
 
-def run(seeds=SEEDS) -> Dict:
+def run(seeds: Sequence[int] = SEEDS,
+        policies: Sequence[str] = POLICY_NAMES) -> Dict:
     table: Dict[str, Dict[str, Dict]] = {}
     for scenario in SCENARIOS:
         table[scenario] = {}
-        for policy in POLICY_NAMES:
+        for policy in policies:
             table[scenario][policy] = _merge(
                 [run_one(scenario, policy, s) for s in seeds])
     return table
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    table = run(seeds=(0,) if quick else SEEDS)
-
-    criteria = {}
+def evaluate(table: Dict) -> Dict:
+    """The acceptance criteria over a full-policy-set table."""
+    criteria: Dict[str, Dict] = {}
     for scenario, per_policy in table.items():
         aff = per_policy["affinity"]["cold_start_rate"]
         ttl = per_policy["fixed_ttl"]["cold_start_rate"]
+        pred = per_policy["predictive"]["cold_start_rate"]
         criteria[scenario] = {
             "affinity_cold_start_rate": aff,
             "fixed_ttl_cold_start_rate": ttl,
+            "predictive_cold_start_rate": pred,
             "affinity_beats_fixed_ttl": aff < ttl,
+            "predictive_beats_affinity": pred < aff,
+            "prewarm_waste_ratio":
+                per_policy["predictive"]["prewarm_waste_ratio"],
         }
-
-    out = {
-        "bench": "coldstart",
-        "params": {
-            "ttl_s": TTL, "budget_mb_per_worker": BUDGET_MB,
-            "costs": {"cold": COSTS.cold, "warm": COSTS.warm, "hot": COSTS.hot},
-            "duration_s": DURATION, "rate_rps": RATE,
-            "seeds": list((0,) if quick else SEEDS),
-        },
-        "scenarios": table,
+    wins = sum(c["predictive_beats_affinity"] for c in criteria.values())
+    return {
         "criteria": criteria,
-        "all_criteria_pass": all(c["affinity_beats_fixed_ttl"]
-                                 for c in criteria.values()),
+        "predictive_wins": wins,
+        "all_criteria_pass": (
+            all(c["affinity_beats_fixed_ttl"] for c in criteria.values())
+            and wins >= 3),
     }
-    path = Path(__file__).resolve().parent.parent / "BENCH_coldstart.json"
-    path.write_text(json.dumps(out, indent=2) + "\n")
+
+
+def parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="single seed (no JSON rewrite)")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated policy subset (no JSON rewrite)")
+    return ap.parse_args(argv)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    args = parse_args(argv)
+    policies = POLICY_NAMES
+    if args.policies:
+        policies = tuple(p.strip() for p in args.policies.split(",") if p.strip())
+        unknown = [p for p in policies if p not in POLICY_NAMES]
+        if unknown:
+            raise SystemExit(f"unknown policies {unknown}; have {POLICY_NAMES}")
+    seeds = (0,) if args.quick else SEEDS
+    full = set(policies) == set(POLICY_NAMES) and not args.quick
+
+    table = run(seeds=seeds, policies=policies)
 
     print(f"== cold-start benchmark (ttl={TTL}s, budget={BUDGET_MB:.0f}MB/worker) ==")
     for scenario, per_policy in table.items():
         print(f"\n  {scenario}")
         for policy, m in per_policy.items():
+            extra = ""
+            if policy == "predictive":
+                extra = (f" prewarm={m['prewarm_starts']}"
+                         f"(waste {m['prewarm_waste_ratio']*100:.0f}%)"
+                         f" mig={m['migrations']}")
             print(f"    {policy:10s} cold={m['cold_start_rate']*100:5.1f}% "
                   f"warm={m['warm_hit_rate']*100:5.1f}% "
-                  f"evict(ttl/mem)={m['evictions_ttl']}/{m['evictions_pressure']} "
-                  f"mean={m['latency_mean_s']}s p95max={m['latency_p95_max_s']}s")
-    print(f"\naffinity < fixed_ttl cold-start rate in all scenarios: "
-          f"{out['all_criteria_pass']}")
+                  f"evict(ttl/mem/plan)={m['evictions_ttl']}/"
+                  f"{m['evictions_pressure']}/{m['evictions_planned']} "
+                  f"mean={m['latency_mean_s']}s p95max={m['latency_p95_max_s']}s"
+                  f"{extra}")
+
+    if not full:
+        print("\n(policy subset / quick run: BENCH_coldstart.json not rewritten)")
+        return
+
+    verdict = evaluate(table)
+    out = {
+        "bench": "coldstart",
+        "params": {
+            "ttl_s": TTL, "budget_mb_per_worker": BUDGET_MB,
+            "costs": {"cold": COSTS.cold, "warm": COSTS.warm, "hot": COSTS.hot},
+            "duration_s": DURATION, "rate_rps": RATE, "seeds": list(seeds),
+            "ewma_tau_s": EWMA_TAU, "plan_interval_s": PLAN_INTERVAL,
+            "migrate_cost_s": MIGRATE_COST,
+        },
+        "scenarios": table,
+        "criteria": verdict["criteria"],
+        "predictive_wins": verdict["predictive_wins"],
+        "all_criteria_pass": verdict["all_criteria_pass"],
+    }
+    path = Path(__file__).resolve().parent.parent / "BENCH_coldstart.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"\naffinity < fixed_ttl everywhere and predictive < affinity in "
+          f">=3/4 scenarios: {out['all_criteria_pass']} "
+          f"(predictive wins {verdict['predictive_wins']}/4)")
     print(f"wrote {path}")
 
 

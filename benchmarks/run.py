@@ -7,9 +7,16 @@ Prints ``name,us_per_call,derived`` CSV rows plus the per-benchmark tables.
   sec7_scheduler_scale  linear-time claim + batched data plane
   coldstart             warm-pool keep-alive policies x workload scenarios
   roofline              §Roofline terms from the dry-run artifacts (if present)
+
+The *full* cold-start benchmark (all seeds, rewrites ``BENCH_coldstart.json``)
+is registered behind ``--coldstart``; combine with ``--policies`` to run a
+policy subset (e.g. ``--coldstart --policies predictive`` — prints only, no
+JSON rewrite) and ``--quick`` for a single seed.  Without the flag the
+orchestrator runs every benchmark's quick overview as before.
 """
 from __future__ import annotations
 
+import argparse
 import statistics
 import sys
 from pathlib import Path
@@ -18,7 +25,28 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="benchmark orchestrator")
+    ap.add_argument("--coldstart", action="store_true",
+                    help="run the full cold-start benchmark (writes "
+                         "BENCH_coldstart.json) instead of the overview")
+    ap.add_argument("--policies", default=None,
+                    help="with --coldstart: comma-separated keep-alive "
+                         "policy filter (e.g. 'predictive,affinity')")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --coldstart: single seed")
+    args = ap.parse_args(argv)
+
+    if args.coldstart:
+        from benchmarks import coldstart as cst
+        sub = []
+        if args.quick:
+            sub.append("--quick")
+        if args.policies:
+            sub += ["--policies", args.policies]
+        cst.main(sub)
+        return
+
     rows = []
 
     # ---- Fig. 6 (§V) ------------------------------------------------------- #

@@ -21,7 +21,16 @@ to:
   ``container_release``; the pool's janitor runs as events on the simulator's
   heap, firing exactly when the keep-alive policy can next expire a
   container.  Without a pool the simulator behaves as before (zero start
-  cost) — the seed's §V experiments are unchanged.
+  cost) — the seed's §V experiments are unchanged;
+* **predictive control plane** (optional): with a
+  :class:`repro.forecast.ForecastPlanner` attached alongside the pool, a
+  planning epoch fires every ``plan_interval`` simulated seconds on the same
+  event heap.  Prewarm actions boot in the background and park their idle
+  container a full cold-start latency later; migrations detach the container
+  from its source immediately and re-attach it at the destination after
+  ``migrate_cost`` (between a warm unpause and a cold create); planner
+  retirements apply instantly.  Epochs stop re-arming once no other events
+  or compute remain, so ``run()`` still terminates.
 
 Scheduling decisions are delegated to a pluggable ``scheduler_fn`` driven by
 the *real* aAPP machinery (`repro.core`): the simulator maintains a
@@ -81,7 +90,8 @@ class ClusterSim:
     """Event loop + processor-sharing workers + 2-zone eventually-consistent DB."""
 
     def __init__(self, workers: Dict[str, WorkerSpec], params: SimParams, seed: int = 0,
-                 *, pool: Optional[WarmPool] = None):
+                 *, pool: Optional[WarmPool] = None, planner=None,
+                 plan_interval: float = 2.0, migrate_cost: float = 0.25):
         self.workers = workers
         self.p = params
         self.rng = random.Random(seed)
@@ -104,6 +114,11 @@ class ClusterSim:
         self.last_start_kind: Optional[str] = None
         self._containers: Dict[str, str] = {}  # activation_id -> container id
         self._janitor_at: Optional[float] = None
+        # predictive control plane (optional; requires a pool)
+        self.planner = planner
+        self.plan_interval = float(plan_interval)
+        self.migrate_cost = float(migrate_cost)
+        self._planner_armed = False
 
     # ---- event machinery -------------------------------------------------- #
 
@@ -114,6 +129,10 @@ class ClusterSim:
         self.at(self.now + dt, fn)
 
     def run(self) -> None:
+        if (self.planner is not None and self.pool is not None
+                and not self._planner_armed):
+            self._planner_armed = True
+            self.at(self.now + self.plan_interval, self._planner_tick)
         while self._heap:
             t, _, fn = heapq.heappop(self._heap)
             self._advance_compute(t)
@@ -211,6 +230,41 @@ class ClusterSim:
         if self.pool is None:
             return
         self.pool.sweep(self.now)
+        self._kick_janitor()
+
+    # ---- predictive control plane (forecast planner epochs) ------------------ #
+
+    def _planner_tick(self) -> None:
+        pool = self.pool
+        for a in self.planner.plan(self.state.conf(), pool, self.now):
+            kind = type(a).__name__
+            if kind == "Prewarm":
+                # booting happens in the background: the idle container only
+                # becomes available a full cold-start latency from now
+                pool.metrics.prewarm_seconds += pool.costs.cold
+                self.after(pool.costs.cold, lambda a=a: self._finish_prewarm(a))
+            elif kind == "Migrate":
+                c = pool.migrate_out(a.function, a.src, self.now)
+                if c is not None:
+                    pool.metrics.migration_seconds += self.migrate_cost
+                    self.after(self.migrate_cost,
+                               lambda c=c, a=a: self._finish_migrate(c, a.dst))
+            else:  # Retire
+                pool.retire_idle(a.function, a.worker, self.now)
+        # keep epoching only while the simulation still has work: arrivals or
+        # in-flight actions on the heap, or compute in progress
+        if self._heap or any(self._running.values()):
+            self.at(self.now + self.plan_interval, self._planner_tick)
+
+    def _finish_prewarm(self, a) -> None:
+        # budget re-checked at park time: demand may have filled the worker
+        # while the container booted (prewarm refuses rather than evicts)
+        self.pool.prewarm(a.function, a.worker, self.now,
+                          memory=a.memory, tag=a.tag)
+        self._kick_janitor()
+
+    def _finish_migrate(self, c, dst: str) -> None:
+        self.pool.migrate_in(c, dst, self.now)
         self._kick_janitor()
 
     # ---- DB ----------------------------------------------------------------- #

@@ -60,6 +60,9 @@ class Registry:
     def __contains__(self, name: str) -> bool:
         return name in self._entries
 
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._entries)
+
     def tags(self) -> Tuple[str, ...]:
         return tuple(sorted({s.tag for s in self._entries.values()}))
 

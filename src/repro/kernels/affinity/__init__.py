@@ -1,4 +1,10 @@
-from .ops import affinity_valid, affinity_valid_np
-from .ref import NO_CAP, NO_CONC, affinity_valid_ref
+from .ops import HAS_JAX, affinity_valid, affinity_valid_np
+from .ref_np import NO_CAP, NO_CONC, affinity_valid_ref_np
 
-__all__ = ["affinity_valid", "affinity_valid_np", "affinity_valid_ref", "NO_CAP", "NO_CONC"]
+if HAS_JAX:
+    from .ref import affinity_valid_ref
+else:  # minimal environment: the numpy twin stands in
+    affinity_valid_ref = affinity_valid_ref_np
+
+__all__ = ["affinity_valid", "affinity_valid_np", "affinity_valid_ref",
+           "affinity_valid_ref_np", "NO_CAP", "NO_CONC", "HAS_JAX"]

@@ -1,15 +1,26 @@
 """jit'd public wrapper around the affinity kernel: padding, backend pick,
 unpadding.  On non-TPU platforms the Pallas body runs in ``interpret`` mode
 (for tests) or falls back to the pure-jnp reference (production CPU path).
+Without JAX installed at all (minimal CI environments), ``affinity_valid_np``
+degrades to the pure-numpy reference so the batched scheduling data plane
+stays fully functional; only the accelerated paths require JAX.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .kernel import BF, BW, T_ALIGN, affinity_valid_kernel
-from .ref import NO_CAP, NO_CONC, affinity_valid_ref
+from .ref_np import NO_CAP, NO_CONC, affinity_valid_ref_np
+
+try:
+    import jax
+    import jax.numpy as jnp
+
+    from .kernel import BF, BW, T_ALIGN, affinity_valid_kernel
+    from .ref import affinity_valid_ref
+
+    HAS_JAX = True
+except ImportError:  # minimal environment: numpy reference only
+    HAS_JAX = False
 
 
 def _round_up(x: int, m: int) -> int:
@@ -34,6 +45,10 @@ def affinity_valid(
     ``backend``: ``auto`` (pallas on TPU, ref elsewhere), ``pallas``
     (interpret-mode off-TPU — used by tests), or ``ref``.
     """
+    if not HAS_JAX:
+        raise ImportError(
+            "affinity_valid requires JAX; use affinity_valid_np for the "
+            "numpy fallback")
     occ = jnp.asarray(occ, jnp.int32)
     aff = jnp.asarray(aff, jnp.int8)
     W, T = occ.shape
@@ -75,6 +90,31 @@ def affinity_valid(
     return valid[:F, :W].astype(bool)
 
 
-def affinity_valid_np(*args, **kwargs) -> np.ndarray:
-    """Host-side convenience: numpy in/out."""
-    return np.asarray(affinity_valid(*args, **kwargs))
+def affinity_valid_np(
+    occ,
+    aff,
+    wmask,
+    mem_used,
+    max_mem,
+    n_funcs,
+    f_mem,
+    cap_pct=None,
+    max_conc=None,
+    *,
+    backend: str = "auto",
+) -> np.ndarray:
+    """Host-side convenience: numpy in/out.  Runs the pure-numpy reference
+    when JAX is unavailable (``auto``/``ref`` backends only)."""
+    if HAS_JAX:
+        return np.asarray(affinity_valid(
+            occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem,
+            cap_pct, max_conc, backend=backend))
+    if backend not in ("auto", "ref"):
+        raise ImportError(f"backend {backend!r} requires JAX")
+    F = np.asarray(aff).shape[0]
+    if cap_pct is None:
+        cap_pct = np.full((F,), NO_CAP, np.float32)
+    if max_conc is None:
+        max_conc = np.full((F,), NO_CONC, np.int32)
+    return affinity_valid_ref_np(
+        occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem, cap_pct, max_conc)

@@ -20,8 +20,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-NO_CAP = 1e9  # sentinel: no capacity_used rule
-NO_CONC = 2**30  # sentinel: no max_concurrent_invocations rule
+from .ref_np import NO_CAP, NO_CONC  # shared sentinels (numpy twin)
 
 
 def affinity_valid_ref(occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem, cap_pct, max_conc):

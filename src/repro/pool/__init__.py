@@ -10,6 +10,7 @@ from .policy import (
     LCSKeepAlive,
     MRUKeepAlive,
     POLICIES,
+    PredictiveKeepAlive,
     make_policy,
 )
 from .pool import COLD, HOT, StartCosts, WARM, WarmPool
@@ -17,6 +18,6 @@ from .pool import COLD, HOT, StartCosts, WARM, WarmPool
 __all__ = [
     "Container", "ContainerState", "PoolMetrics", "KeepAlivePolicy",
     "FixedTTLKeepAlive", "LCSKeepAlive", "MRUKeepAlive",
-    "AffinityAwareKeepAlive", "POLICIES", "make_policy",
-    "WarmPool", "StartCosts", "COLD", "WARM", "HOT",
+    "AffinityAwareKeepAlive", "PredictiveKeepAlive", "POLICIES",
+    "make_policy", "WarmPool", "StartCosts", "COLD", "WARM", "HOT",
 ]

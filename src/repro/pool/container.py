@@ -25,6 +25,7 @@ import itertools
 class ContainerState(enum.Enum):
     IDLE = "idle"
     BUSY = "busy"
+    MIGRATING = "migrating"  # detached from its source worker, in transfer
     DEAD = "dead"
 
 
@@ -44,6 +45,7 @@ class Container:
     state: ContainerState = ContainerState.BUSY
     last_used: float = 0.0  # when it last went idle
     uses: int = 0  # invocations served
+    prewarmed: bool = False  # started speculatively; cleared on first hit
 
     def idle_for(self, now: float) -> float:
         return max(0.0, now - self.last_used)

@@ -1,9 +1,17 @@
-"""Pool observability: start-kind and eviction counters.
+"""Pool observability: start-kind, eviction and forecast-action counters.
 
-Every acquire is exactly one of cold/warm/hot; evictions are split by cause
-(janitor TTL expiry vs. memory-pressure eviction to make room for a cold
-start).  ``snapshot()`` is what ``benchmarks/coldstart.py`` serialises into
-``BENCH_coldstart.json``.
+Every acquire is exactly one of cold/warm/hot.  ``cold_starts`` counts *every*
+cold start, including the ``unpooled_starts`` subset whose container could not
+be admitted under the worker's budget — an unpooled start is still a cold
+start, so ``total_starts`` and ``cold_start_rate`` include them (pinned by a
+unit test in ``tests/test_pool.py``).  Evictions are split by cause (janitor
+TTL expiry, memory-pressure eviction, planner-ordered retirement).
+
+The forecast subsystem adds its own counters: ``prewarm_starts`` containers
+started speculatively, of which ``prewarm_hits`` served at least one
+invocation and ``prewarm_wasted`` died unused; ``migrations`` counts idle
+containers moved across workers.  ``snapshot()`` is what
+``benchmarks/coldstart.py`` serialises into ``BENCH_coldstart.json``.
 """
 from __future__ import annotations
 
@@ -13,16 +21,26 @@ from typing import Dict
 
 @dataclasses.dataclass
 class PoolMetrics:
-    cold_starts: int = 0
+    cold_starts: int = 0  # ALL cold starts (the unpooled subset included)
     warm_hits: int = 0
     hot_hits: int = 0
     evictions_ttl: int = 0
     evictions_pressure: int = 0
+    evictions_planned: int = 0  # planner-ordered proactive retirements
     unpooled_starts: int = 0  # cold starts that could not be admitted to the pool
     start_seconds: float = 0.0  # total start latency charged
+    # forecast subsystem
+    prewarm_starts: int = 0
+    prewarm_hits: int = 0
+    prewarm_wasted: int = 0  # prewarmed containers that died unused
+    migrations: int = 0
+    prewarm_seconds: float = 0.0  # background boot time spent on prewarms
+    migration_seconds: float = 0.0  # background transfer time spent migrating
 
     @property
     def total_starts(self) -> int:
+        """Every invocation start, unpooled cold starts included (they are a
+        subset of ``cold_starts``, not an extra term)."""
         return self.cold_starts + self.warm_hits + self.hot_hits
 
     @property
@@ -34,6 +52,11 @@ class PoolMetrics:
     def warm_hit_rate(self) -> float:
         n = self.total_starts
         return (self.warm_hits + self.hot_hits) / n if n else 0.0
+
+    @property
+    def prewarm_waste_ratio(self) -> float:
+        n = self.prewarm_starts
+        return self.prewarm_wasted / n if n else 0.0
 
     def count(self, kind: str) -> None:
         if kind == "cold":
@@ -55,6 +78,14 @@ class PoolMetrics:
             "warm_hit_rate": round(self.warm_hit_rate, 6),
             "evictions_ttl": self.evictions_ttl,
             "evictions_pressure": self.evictions_pressure,
+            "evictions_planned": self.evictions_planned,
             "unpooled_starts": self.unpooled_starts,
             "start_seconds": round(self.start_seconds, 6),
+            "prewarm_starts": self.prewarm_starts,
+            "prewarm_hits": self.prewarm_hits,
+            "prewarm_wasted": self.prewarm_wasted,
+            "prewarm_waste_ratio": round(self.prewarm_waste_ratio, 6),
+            "migrations": self.migrations,
+            "prewarm_seconds": round(self.prewarm_seconds, 6),
+            "migration_seconds": round(self.migration_seconds, 6),
         }

@@ -126,9 +126,72 @@ class AffinityAwareKeepAlive(FixedTTLKeepAlive):
         return c.last_used + self.idle_ttl
 
 
+class PredictiveKeepAlive(AffinityAwareKeepAlive):
+    """Affinity-aware retention + forecast-driven retention.
+
+    Composes the PR 1 affinity rule (never expire a container whose tag has
+    pending in-flight demand) with the forecast subsystem: a container whose
+    *function* is predicted to see at least ``keep_threshold`` arrivals
+    within ``horizon`` seconds is also retained, and under memory pressure
+    demand-free *and* unpredicted containers die first.
+
+    The forecast is attached after construction via :meth:`bind` (policies
+    are built by name through ``make_policy``); unbound, the policy behaves
+    exactly like :class:`AffinityAwareKeepAlive`.  ``next_expiry`` stays
+    finite: ``ArrivalForecast.keep_until`` computes the instant the decayed
+    prediction can first drop below the threshold, so the janitor schedules
+    a firm re-examination instead of polling.
+    """
+
+    name = "predictive"
+
+    def __init__(self, ttl: float = 20.0, idle_ttl: float = None,
+                 horizon: float = None, keep_threshold: float = 0.5):
+        super().__init__(ttl, idle_ttl)
+        self.horizon = float(horizon) if horizon is not None else 2.0 * self.ttl
+        self.keep_threshold = float(keep_threshold)
+        self.forecast = None
+
+    def bind(self, forecast) -> "PredictiveKeepAlive":
+        self.forecast = forecast
+        return self
+
+    def _predicted(self, c: Container, now: float) -> bool:
+        if self.forecast is None:
+            return False
+        return (self.forecast.expected_arrivals(c.function, now, self.horizon)
+                >= self.keep_threshold)
+
+    def expired(self, c: Container, now: float,
+                pending: AbstractSet[str] = _EMPTY) -> bool:
+        if c.tag in pending:
+            return False
+        if self._predicted(c, now):
+            return False
+        return c.idle_for(now) >= self.idle_ttl - _EPS
+
+    def evict_order(self, idle: Sequence[Container], now: float,
+                    pending: AbstractSet[str] = _EMPTY) -> List[Container]:
+        return sorted(idle, key=lambda c: (c.tag in pending,
+                                           self._predicted(c, now),
+                                           c.last_used))
+
+    def next_expiry(self, c: Container, now: float,
+                    pending: AbstractSet[str] = _EMPTY) -> float:
+        if c.tag in pending:
+            return float("inf")  # re-examined when demand drains
+        ttl_at = c.last_used + self.idle_ttl
+        if self.forecast is None:
+            return ttl_at
+        keep = self.forecast.keep_until(c.function, now, self.horizon,
+                                        self.keep_threshold)
+        return max(ttl_at, keep)
+
+
 POLICIES = {
     p.name: p
-    for p in (FixedTTLKeepAlive, LCSKeepAlive, MRUKeepAlive, AffinityAwareKeepAlive)
+    for p in (FixedTTLKeepAlive, LCSKeepAlive, MRUKeepAlive,
+              AffinityAwareKeepAlive, PredictiveKeepAlive)
 }
 
 

@@ -16,7 +16,15 @@
   scheduler-facing view that `core.batched` consumes as its warmth-rank
   column and `serve.Engine` republishes as ``warm:<function>`` residency
   tags via the ``on_warm``/``on_cooled`` callbacks (fired on the 0↔1 idle
-  transitions per (worker, function)).
+  transitions per (worker, function));
+* ``prewarm``/``migrate`` are the forecast subsystem's entry points:
+  ``prewarm`` parks a speculatively-started idle container (refused, never
+  evicting, when the worker's budget has no room) whose first use is a warm
+  hit; ``migrate`` (or the ``migrate_out``/``migrate_in`` pair, letting the
+  simulator charge a transfer latency in between) moves an idle container
+  to a worker with predicted demand; ``retire_idle`` executes a planner
+  retirement.  Prewarmed containers that die unused count as
+  ``prewarm_wasted``.
 
 Pending-demand bookkeeping (``pending_add``/``pending_done`` refcounts per
 tag) feeds :class:`repro.pool.policy.AffinityAwareKeepAlive`.
@@ -143,6 +151,12 @@ class WarmPool:
         if idle:
             c = self.policy.select(idle, now)
             kind = HOT if c.idle_for(now) <= self.hot_window else WARM
+            if c.prewarmed:
+                # first use of a speculative start: the runtime still injects
+                # the function (an unpause-class cost), never a free hot hit
+                kind = WARM
+                c.prewarmed = False
+                self.metrics.prewarm_hits += 1
             self._unpark(c)
             c.state = ContainerState.BUSY
             c.uses += 1
@@ -181,7 +195,7 @@ class WarmPool:
         order = self.policy.evict_order(idle_here, now, self.pending_tags())
         i = 0
         while self.used_mb(worker) + memory > budget and i < len(order):
-            self._retire(order[i], pressure=True)
+            self._retire(order[i], cause="pressure")
             i += 1
         return self.used_mb(worker) + memory <= budget
 
@@ -205,13 +219,21 @@ class WarmPool:
             self._unpooled.discard(cid)
             c.state = ContainerState.DEAD
 
-    def _retire(self, c: Container, *, pressure: bool) -> None:
+    def _retire(self, c: Container, *, cause: str) -> None:
         self._unpark(c)
-        c.state = ContainerState.DEAD
-        if pressure:
+        self._mark_dead(c)
+        if cause == "pressure":
             self.metrics.evictions_pressure += 1
+        elif cause == "planned":
+            self.metrics.evictions_planned += 1
         else:
             self.metrics.evictions_ttl += 1
+
+    def _mark_dead(self, c: Container) -> None:
+        c.state = ContainerState.DEAD
+        if c.prewarmed:
+            c.prewarmed = False
+            self.metrics.prewarm_wasted += 1
 
     def evict_worker(self, worker: str) -> int:
         """Worker disappeared: retire all its idle containers.  Not counted
@@ -221,9 +243,82 @@ class WarmPool:
         for (w, _f) in [k for k in self._idle if k[0] == worker]:
             for c in list(self._idle.get((w, _f), ())):
                 self._unpark(c)
-                c.state = ContainerState.DEAD
+                self._mark_dead(c)
                 n += 1
         return n
+
+    # ------------------------------------------------------------------ #
+    # forecast-plan actions: prewarm / migrate / retire
+    # ------------------------------------------------------------------ #
+
+    def prewarm(self, function: str, worker: str, now: float, *,
+                memory: float, tag: str = "") -> Optional[Container]:
+        """Park a speculatively-started idle container.  Refused (returns
+        ``None``) when the worker's budget has no headroom — a speculative
+        start must never evict state that demand already earned.  A refusal
+        still counts as a started-and-wasted prewarm: the boot happened in
+        the background before the park was rejected, and hiding it would
+        understate ``prewarm_waste_ratio`` exactly under memory pressure."""
+        self.metrics.prewarm_starts += 1
+        budget = self.budget_of(worker)
+        if budget is not None and self.used_mb(worker) + memory > budget:
+            self.metrics.prewarm_wasted += 1
+            return None
+        c = Container(function=function, tag=tag, worker=worker,
+                      memory=memory, created_at=now, last_used=now,
+                      prewarmed=True)
+        self._park(c, now)
+        return c
+
+    def migrate_out(self, function: str, worker: str, now: float
+                    ) -> Optional[Container]:
+        """Detach the most expendable idle container of ``function`` from
+        ``worker`` for transfer (``None`` if no idle container exists).  The
+        container is in ``MIGRATING`` state until ``migrate_in`` parks it."""
+        idle = self._idle.get((worker, function))
+        if not idle:
+            return None
+        c = self.policy.evict_order(idle, now, self.pending_tags())[0]
+        self._unpark(c)
+        c.state = ContainerState.MIGRATING
+        return c
+
+    def migrate_in(self, c: Container, worker: str, now: float) -> bool:
+        """Attach a migrating container to its destination worker.  Refused
+        (the container dies, counting ``prewarm_wasted`` if it never served)
+        when the destination budget filled up during the transfer."""
+        budget = self.budget_of(worker)
+        if budget is not None and self.used_mb(worker) + c.memory > budget:
+            self._mark_dead(c)
+            return False
+        c.worker = worker
+        self.metrics.migrations += 1
+        self._park(c, now)
+        return True
+
+    def migrate(self, function: str, src: str, dst: str, now: float
+                ) -> Optional[Container]:
+        """Instantaneous migrate (callers that model transfer latency use the
+        ``migrate_out``/``migrate_in`` pair instead)."""
+        c = self.migrate_out(function, src, now)
+        if c is not None and not self.migrate_in(c, dst, now):
+            return None
+        return c
+
+    def retire_idle(self, function: str, worker: str, now: float
+                    ) -> Optional[Container]:
+        """Planner-ordered retirement: retire the most expendable idle
+        container of ``function`` on ``worker`` whose tag has no pending
+        affinity demand."""
+        idle = self._idle.get((worker, function))
+        if not idle:
+            return None
+        pending = self.pending_tags()
+        for c in self.policy.evict_order(idle, now, pending):
+            if c.tag not in pending:
+                self._retire(c, cause="planned")
+                return c
+        return None
 
     # ------------------------------------------------------------------ #
     # janitor
@@ -236,7 +331,7 @@ class WarmPool:
         for key in list(self._idle):
             for c in list(self._idle.get(key, ())):
                 if self.policy.expired(c, now, pending):
-                    self._retire(c, pressure=False)
+                    self._retire(c, cause="ttl")
                     out.append(c)
         return out
 
@@ -266,12 +361,37 @@ class WarmPool:
             return sum(len(v) for v in self._idle.values())
         return sum(len(v) for (w, _f), v in self._idle.items() if w == worker)
 
+    def residency_counts(self) -> Dict[Tuple[str, str], int]:
+        """Idle-container counts per (worker, function) — the planner's
+        ``residency[W, F]`` matrix source."""
+        return {key: len(lst) for key, lst in self._idle.items() if lst}
+
+    def busy_counts(self) -> Dict[str, int]:
+        """In-flight invocation counts per function — the planner's supply
+        term and the DAG-successor predictor's parent set."""
+        out: Dict[str, int] = {}
+        for c in self._busy.values():
+            out[c.function] = out.get(c.function, 0) + 1
+        return out
+
+    def busy_residency_counts(self) -> Dict[Tuple[str, str], int]:
+        """Busy-container counts per (worker, function): where in-flight
+        containers will park when they release."""
+        out: Dict[Tuple[str, str], int] = {}
+        for c in self._busy.values():
+            key = (c.worker, c.function)
+            out[key] = out.get(key, 0) + 1
+        return out
+
     def warmth(self, function: str, worker: str, now: float) -> int:
         """0 = cold, 1 = warm, 2 = hot — the batched path's warmth rank.
         Ranks the container the keep-alive policy would actually serve, so
-        the advertised tier matches what ``acquire`` will charge."""
+        the advertised tier matches what ``acquire`` will charge (a never-used
+        prewarmed container serves at warm, not hot: function injection)."""
         idle = self._idle.get((worker, function))
         if not idle:
             return 0
         c = self.policy.select(idle, now)
+        if c.prewarmed:
+            return 1
         return 2 if c.idle_for(now) <= self.hot_window else 1

@@ -27,6 +27,12 @@ publishes ``warm:<function>`` residency tags into ``conf`` whenever a
 (cell, function) pool goes non-empty — so synthesised (or hand-written)
 Listing-1 policies can steer toward warm cells — and (c) passes the pool's
 warmth rank to the scheduler as a tie-breaker among otherwise-valid cells.
+
+Forecasting (optional): with an :class:`repro.forecast.ArrivalForecast`
+attached the engine reports every request-class arrival and its service time
+to the estimator, and ``forecast_stats()`` exposes the per-class forecast
+state (rates, expected arrivals, learned service times and DAG successors)
+for dashboards and external planners.
 """
 from __future__ import annotations
 
@@ -94,7 +100,8 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  hedge_after: Optional[float] = None,
                  heartbeat_timeout: float = 10.0,
-                 pool: Optional[WarmPool] = None):
+                 pool: Optional[WarmPool] = None,
+                 forecast=None):
         self.cells = dict(cells)
         self.state = ClusterState()
         self.reg = Registry()
@@ -103,6 +110,7 @@ class Engine:
         self.hedge_after = hedge_after
         self.heartbeat_timeout = heartbeat_timeout
         self.pool = pool
+        self.forecast = forecast
         self._warm_acts: Dict[Tuple[str, str], str] = {}  # (cell, fname) -> act id
         self._containers: Dict[str, str] = {}  # activation id -> container id
         if pool is not None:
@@ -262,6 +270,8 @@ class Engine:
         req.submitted_at = self.clock()
         self.check_health()
         fname = f"{req.kind}-{req.model}" if req.kind != "train" else "train-job"
+        if self.forecast is not None and req.kind != "train" and not req.hedged:
+            self.forecast.observe(fname, req.submitted_at)
         script = self._policy_for(req)
         warmth = None
         if self.pool is not None and req.kind != "train":
@@ -278,6 +288,8 @@ class Engine:
         result = self.runner(req, cell)
         run_latency = self.clock() - t0
         latency = run_latency + start_cost
+        if self.forecast is not None and req.kind != "train":
+            self.forecast.observe_service(fname, run_latency)
 
         if req.kind == "train":
             # training jobs are long-lived streams: the allocation persists
@@ -331,6 +343,12 @@ class Engine:
     def session_cell(self, session: str) -> Optional[str]:
         got = self._sessions.get(session)
         return got[0] if got else None
+
+    def forecast_stats(self, horizon: float = 1.0) -> Dict[str, Dict]:
+        """Per-request-class forecast state (empty without an estimator)."""
+        if self.forecast is None:
+            return {}
+        return self.forecast.state(self.clock(), horizon)
 
     # ------------------------------------------------------------------ #
     # fault tolerance / elasticity

@@ -13,6 +13,13 @@ Pending-demand plumbing: while an invocation is in flight the pool's pending
 set holds its own tag, every tag its aAPP policy is affine to, and its
 children's tags — the signal :class:`AffinityAwareKeepAlive` retains warm
 containers against.
+
+Forecast plumbing (optional): with an
+:class:`repro.forecast.ArrivalForecast` attached, every submission is
+reported to the estimator (``observe``), every completion reports its busy
+time (``observe_service``), and every DAG spawn reports the
+``parent -> (child, count, lag)`` edge (``observe_edge``) — the observation
+stream the predictive planner and keep-alive policy run on.
 """
 from __future__ import annotations
 
@@ -58,11 +65,13 @@ class TraceWorkload:
         compute: Dict[str, float],
         *,
         script: Optional[AAppScript] = None,
+        forecast=None,
     ):
         self.sim = sim
         self.schedule = scheduler_fn
         self.compute = dict(compute)
         self.script = script
+        self.forecast = forecast
         self.records: List[InvocationRecord] = []
 
     def load(self, trace: Sequence[Arrival]) -> None:
@@ -84,6 +93,8 @@ class TraceWorkload:
         sim = self.sim
         f = arrival.function
         t0 = sim.now
+        if self.forecast is not None:
+            self.forecast.observe(f, t0)
         w = self.schedule(f)
         if w is None:
             sim.failures.append(f)
@@ -98,9 +109,16 @@ class TraceWorkload:
             sim.pool.pending_add(pending)
 
         def finish():
+            if self.forecast is not None:
+                # container-held time on the *warm* path: the start cost is
+                # excluded (a prewarmed replacement never pays it — keeping
+                # it in would double-count startup in the planner's sizing)
+                self.forecast.observe_service(f, sim.now - t0 - start)
             # children first, so their tags take over the pending demand
             # before the parent's refcounts drop
             for child, n in arrival.children:
+                if self.forecast is not None:
+                    self.forecast.observe_edge(f, child, n, sim.now - t0)
                 for _ in range(n):
                     self.submit(Arrival(t=sim.now, function=child))
             if sim.pool is not None:

@@ -1,0 +1,83 @@
+"""Trace generators (`repro.workload.traces`): determinism, time-sortedness,
+rate bounds, and DAG-children round-trips through the driver."""
+import math
+import random
+
+import pytest
+
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import paper_testbed
+from repro.core import parse, try_schedule
+from repro.workload import (
+    COMPUTE_S,
+    SCENARIOS,
+    TraceWorkload,
+    build_trace,
+    register_functions,
+)
+from repro.workload.traces import chained_trace, diurnal_trace
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_same_seed_same_trace(scenario):
+    a = build_trace(scenario, duration=60.0, rate=2.0, seed=7)
+    b = build_trace(scenario, duration=60.0, rate=2.0, seed=7)
+    assert a == b
+    c = build_trace(scenario, duration=60.0, rate=2.0, seed=8)
+    assert a != c  # a different seed produces a different trace
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_traces_are_time_sorted_within_duration(scenario):
+    trace = build_trace(scenario, duration=60.0, rate=2.0, seed=3)
+    assert trace, "empty trace"
+    times = [a.t for a in trace]
+    assert times == sorted(times)
+    assert 0.0 <= times[0] and times[-1] < 60.0
+
+
+def test_diurnal_rate_stays_within_base_and_peak():
+    base, peak, duration, period = 1.0, 6.0, 4000.0, 100.0
+    trace = diurnal_trace(base, peak, duration, [("f", 1.0)],
+                          random.Random(0), period=period)
+    # empirical rate over each quarter-period window stays within the
+    # modulation envelope [base, peak] (3-sigma Poisson slack)
+    win = period / 4.0
+    for k in range(int(duration / win)):
+        n = sum(1 for a in trace if k * win <= a.t < (k + 1) * win)
+        lo = base * win - 3.0 * math.sqrt(base * win)
+        hi = peak * win + 3.0 * math.sqrt(peak * win)
+        assert lo <= n <= hi, f"window {k}: {n} outside [{lo:.1f}, {hi:.1f}]"
+    # and the modulation is real: peak windows see far more than troughs
+    on = sum(1 for a in trace if (a.t % period) < period / 2.0)
+    off = len(trace) - on
+    assert on > 1.5 * off
+
+
+def test_chained_children_round_trip_through_driver():
+    trace = chained_trace(1.0, 30.0, random.Random(5), parent="divide",
+                          children=(("impera", 2),))
+    assert all(a.function == "divide" and a.children == (("impera", 2),)
+               for a in trace)
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=0)
+    register_functions(sim.registry)
+    script = parse("default:\n  workers: *\n  strategy: random\n")
+    rng = random.Random(0)
+    wl = TraceWorkload(
+        sim,
+        lambda f: try_schedule(f, sim.state.conf(), script, sim.registry,
+                               rng=rng),
+        COMPUTE_S, script=script)
+    wl.load(trace)
+    sim.run()
+    ok = [r for r in wl.records if not r.failed]
+    divides = [r for r in ok if r.function == "divide"]
+    imperas = [r for r in ok if r.function == "impera"]
+    # every declared child was spawned exactly once, after its parent
+    assert len(divides) == len(trace)
+    assert len(imperas) == 2 * len(divides)
+    assert len(ok) == len(wl.records)  # nothing unschedulable
+    # children spawn when a parent's compute finishes, never before the
+    # earliest possible parent completion
+    first_divide_done = min(r.t_submit + r.latency for r in divides)
+    assert min(r.t_submit for r in imperas) >= first_divide_done

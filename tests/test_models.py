@@ -2,10 +2,11 @@
 NaNs, decode parity paths, attention-impl and SSM-path equivalences."""
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
 
 from repro.configs import ARCHS
 from repro.data.pipeline import make_batch

@@ -100,6 +100,27 @@ def test_ttl_eviction_order_under_pressure():
     assert c1.state.value == "dead"  # oldest idle died first
 
 
+def test_unpooled_start_counts_as_cold_start():
+    # admission failure still pays a full container create: unpooled starts
+    # are a *subset* of cold_starts, and total_starts / cold_start_rate
+    # include them — the rate must never be understated when the budget
+    # rejects admissions
+    pool = _pool(FixedTTLKeepAlive(ttl=100.0), budget_mb=1.0)
+    c, kind, cost = pool.acquire("f", "w", 0.0, memory=1.0)
+    pool.release(c.cid, 1.0)
+    got, kind, cost = pool.acquire("huge", "w", 2.0, memory=5.0)  # over budget
+    assert kind == "cold" and cost == 0.5
+    m = pool.metrics
+    assert m.unpooled_starts == 1
+    assert m.cold_starts == 2  # the unpooled start is included
+    assert m.total_starts == 2
+    assert m.cold_start_rate == 1.0
+    assert m.snapshot()["cold_starts"] == 2
+    # ...and an unpooled container never parks back into the pool
+    pool.release(got.cid, 3.0)
+    assert pool.idle_count("w") == 1
+
+
 def test_oversized_function_does_not_flush_pool():
     # a function that can never fit the budget must not evict warm containers
     pool = _pool(FixedTTLKeepAlive(ttl=100.0), budget_mb=3.0)

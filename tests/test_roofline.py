@@ -1,8 +1,9 @@
 """Loop-aware HLO cost model: validated against XLA on loop-free programs and
 against analytic trip counts on scans; collective parser on real lowered HLO."""
-import jax
-import jax.numpy as jnp
 import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
 
 from repro.roofline.flops import analyze
 from repro.roofline.hlo import (

@@ -12,6 +12,7 @@ ROOT = Path(__file__).resolve().parent.parent
 
 
 def _run_dryrun(args, devices="8"):
+    pytest.importorskip("jax")  # the dry-run subprocess needs a real JAX
     env = dict(os.environ)
     env["REPRO_DRYRUN_DEVICES"] = devices
     env["PYTHONPATH"] = str(ROOT / "src")

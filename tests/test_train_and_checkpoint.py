@@ -1,10 +1,11 @@
 """Training loop, checkpoint/restart, gradient compression."""
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS
