@@ -39,7 +39,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cluster.simulator import ClusterSim, SimParams
 from repro.cluster.topology import paper_testbed
-from repro.core import parse, try_schedule
+from repro.core import SchedulerSession, parse
 from repro.forecast import ArrivalForecast, ForecastPlanner, PlanConfig
 from repro.pool import StartCosts, WarmPool, make_policy
 from repro.workload import (
@@ -104,11 +104,13 @@ def run_one(scenario: str, policy_name: str, seed: int) -> Dict:
         sim.planner = ForecastPlanner(forecast, script, sim.registry,
                                       PlanConfig())
     rng = random.Random(seed + 1)
+    # incremental data plane: compiled rows + delta-maintained state tensors
+    # (bit-identical decisions to the scalar try_schedule reference)
+    session = SchedulerSession(sim.state, sim.registry, script,
+                               pool=pool, clock=lambda: sim.now)
 
     def scheduler(f: str):
-        return try_schedule(
-            f, sim.state.conf(), script, sim.registry, rng=rng,
-            warmth=lambda fn, w: pool.warmth(fn, w, sim.now))
+        return session.try_schedule(f, rng=rng)
 
     wl = TraceWorkload(sim, scheduler, COMPUTE_S, script=script,
                        forecast=forecast)

@@ -11,8 +11,14 @@ Prints ``name,us_per_call,derived`` CSV rows plus the per-benchmark tables.
 The *full* cold-start benchmark (all seeds, rewrites ``BENCH_coldstart.json``)
 is registered behind ``--coldstart``; combine with ``--policies`` to run a
 policy subset (e.g. ``--coldstart --policies predictive`` — prints only, no
-JSON rewrite) and ``--quick`` for a single seed.  Without the flag the
-orchestrator runs every benchmark's quick overview as before.
+JSON rewrite) and ``--quick`` for a single seed.  ``--scale`` runs the
+scheduler scaling benchmark (rewrites ``BENCH_scheduler.json``) and
+``--simperf`` the simulator-engine throughput benchmark (rewrites
+``BENCH_simperf.json``); both honour ``--quick`` (smaller sizes, no JSON
+rewrite) and *assert* their perf criteria, so CI's quick smoke fails loudly
+on a scheduling-data-plane or simulator-engine regression instead of
+letting it rot in ``artifacts/``.  Without flags the orchestrator runs every
+benchmark's quick overview as before.
 """
 from __future__ import annotations
 
@@ -33,8 +39,15 @@ def main(argv=None) -> None:
     ap.add_argument("--policies", default=None,
                     help="with --coldstart: comma-separated keep-alive "
                          "policy filter (e.g. 'predictive,affinity')")
+    ap.add_argument("--scale", action="store_true",
+                    help="run the scheduler scaling benchmark (writes "
+                         "BENCH_scheduler.json; asserts perf criteria)")
+    ap.add_argument("--simperf", action="store_true",
+                    help="run the simulator-engine throughput benchmark "
+                         "(writes BENCH_simperf.json; asserts perf criteria)")
     ap.add_argument("--quick", action="store_true",
-                    help="with --coldstart: single seed")
+                    help="with --coldstart/--scale/--simperf: reduced size, "
+                         "no BENCH json rewrite")
     args = ap.parse_args(argv)
 
     if args.coldstart:
@@ -45,6 +58,15 @@ def main(argv=None) -> None:
         if args.policies:
             sub += ["--policies", args.policies]
         cst.main(sub)
+        return
+    if args.scale or args.simperf:
+        sub = ["--quick"] if args.quick else []
+        if args.scale:
+            from benchmarks import scheduler_scale as sc
+            sc.main(sub)
+        if args.simperf:
+            from benchmarks import simperf as sp
+            sp.main(sub)
         return
 
     rows = []
@@ -76,14 +98,16 @@ def main(argv=None) -> None:
 
     # ---- §VII scale ---------------------------------------------------------- #
     from benchmarks import scheduler_scale as sc
-    srows = sc.run()
+    srows = sc.run(sizes=(64, 256, 1024), wave=256)  # overview sizes
     print("\n== scheduler scale ==")
     for r in srows:
         print(f"  W={r['workers']:5d} scalar={r['scalar_us_per_decision']:.1f}us "
-              f"batched={r['batched_us_per_decision']:.1f}us")
+              f"batched={r['batched_us_per_decision']:.1f}us "
+              f"session={r['session_us_per_decision']:.1f}us")
     big = srows[-1]
     rows.append(("sec7_scheduler_scale", big["scalar_us_per_decision"],
-                 f"batched_speedup_at_{big['workers']}w={big['speedup']:.1f}x"))
+                 f"session_speedup_at_{big['workers']}w="
+                 f"{big['session_speedup_vs_scalar']:.1f}x"))
 
     # ---- cold starts (warm-pool keep-alive) ----------------------------------- #
     from benchmarks import coldstart as cst

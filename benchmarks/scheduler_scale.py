@@ -1,24 +1,41 @@
 """Beyond-paper: scheduler scaling (§VII linear-time claim + data plane).
 
-Measures (a) the scalar Listing-1 scheduler's per-decision latency as workers
-grow — confirming the paper's O(workers x script) claim — and (b) the batched
-wave scheduler (policies compiled to tensors; the Pallas `affinity_valid`
-kernel's jnp reference path on CPU) that amortises a whole pending wave into
-one masked-matmul evaluation, which is what lets the controller reschedule
-thousands of invocations after a cell failure at cluster scale.
+Measures per-decision scheduling latency as workers grow, three ways:
+
+* **scalar** — the Listing-1 reference (`repro.core.scheduler`), confirming
+  the paper's O(workers x script) claim;
+* **batched** — the one-shot wave scheduler (`schedule_wave`): policies
+  compiled to tensors, one batched ``valid`` evaluation per wave against a
+  fresh ``StateTensors.from_conf`` snapshot, scalar corrections for workers
+  dirtied inside the wave.  Timed warm (an untimed same-shape call first):
+  the historical 0.07x-at-64-workers number in ``artifacts/`` conflated a
+  jit compile in the timed region with steady-state cost;
+* **session** — the incremental data plane (`SchedulerSession`): state
+  tensors maintained by deltas off the ClusterState change feed, compiled
+  rows cached per tag, each decision one pure-numpy batched ``valid`` against
+  the live tensors.  Reported twice: decisions against a fixed state
+  (comparable to the scalar column) and under allocate/release churn between
+  decisions (delta upkeep included).
+
+Writes ``BENCH_scheduler.json`` at the repo root (plus the historical
+``artifacts/scheduler_scale.json`` rows).  Headline criteria: the session
+path must beat the scalar reference at *every* measured W — including W=64,
+where the wave path loses — and beat the wave path everywhere.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import random
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 from repro.core import (
     ClusterState,
     CompiledPolicies,
     Registry,
+    SchedulerSession,
     parse,
     schedule_wave,
     try_schedule,
@@ -40,6 +57,9 @@ batch:
   strategy: best_first
 """
 
+WORKER_SIZES = (64, 256, 1024, 4096)
+WAVE = 512
+
 
 def _setup(W: int, occupancy: float, seed: int):
     st = ClusterState()
@@ -60,48 +80,166 @@ def _setup(W: int, occupancy: float, seed: int):
     return st, reg
 
 
-def run(out: str = "artifacts/scheduler_scale.json") -> List[Dict]:
+WARM_FRAC = 0.05  # sparse container residency: ~5% of (function, worker) warm
+
+
+class _SparseResidency:
+    """Synthetic warm-pool residency — the same ``warmth``/``warmth_row``
+    views :class:`repro.pool.WarmPool` exposes, over a fixed sparse table.
+    The data plane always runs with a pool attached (coldstart, serve,
+    simulator), so the benchmark charges every path its warmth cost: the
+    wave path materialises the F x W python warmth matrix it always did;
+    the session reads the sparse per-function row."""
+
+    def __init__(self, functions, workers, frac: float, seed: int):
+        rng = random.Random(seed)
+        self.rows: Dict[str, Dict[str, int]] = {}
+        for f in functions:
+            row = {w: rng.choice((1, 2)) for w in workers
+                   if rng.random() < frac}
+            if row:
+                self.rows[f] = row
+
+    def warmth(self, function: str, worker: str, now: float = 0.0) -> int:
+        return self.rows.get(function, {}).get(worker, 0)
+
+    def warmth_row(self, function: str, now: float) -> Dict[str, int]:
+        return self.rows.get(function, {})
+
+
+def _bench_one(W: int, wave: int) -> Dict:
     script = parse(SCRIPT_TMPL)
-    rows = []
-    for W in (64, 256, 1024, 4096):
-        st, reg = _setup(W, occupancy=0.5, seed=1)
-        conf = st.conf()
-        fs = [random.Random(2).choice(["f_lat", "f_train", "f_batch"]) for _ in range(512)]
+    st, reg = _setup(W, occupancy=0.5, seed=1)
+    conf = st.conf()
+    fs = [random.Random(2).choice(["f_lat", "f_train", "f_batch"])
+          for _ in range(wave)]
+    res = _SparseResidency(("f_lat", "f_train", "f_batch"),
+                           tuple(conf), WARM_FRAC, seed=4)
+    warmth = res.warmth
 
-        # scalar reference
-        rng = random.Random(3)
-        t0 = time.perf_counter()
-        for f in fs:
-            try_schedule(f, conf, script, reg, rng=rng)
-        scalar_us = (time.perf_counter() - t0) / len(fs) * 1e6
+    # scalar reference (fixed conf, like the session's fixed-state column)
+    rng = random.Random(3)
+    t0 = time.perf_counter()
+    for f in fs:
+        try_schedule(f, conf, script, reg, rng=rng, warmth=warmth)
+    scalar_us = (time.perf_counter() - t0) / len(fs) * 1e6
 
-        # batched wave (jnp ref backend = CPU production path of the kernel)
-        pol = CompiledPolicies(script, reg)
-        schedule_wave(fs[:8], conf, pol, reg, rng=random.Random(3), backend="ref")  # warm
-        t0 = time.perf_counter()
-        schedule_wave(fs, conf, pol, reg, rng=random.Random(3), backend="ref")
-        batched_us = (time.perf_counter() - t0) / len(fs) * 1e6
+    # batched wave (jnp ref backend = the kernel's CPU production path);
+    # warmed with an identical call so jit compilation stays untimed
+    pol = CompiledPolicies(script, reg)
+    schedule_wave(fs, conf, pol, reg, rng=random.Random(3), backend="ref",
+                  warmth=warmth)
+    t0 = time.perf_counter()
+    schedule_wave(fs, conf, pol, reg, rng=random.Random(3), backend="ref",
+                  warmth=warmth)
+    batched_us = (time.perf_counter() - t0) / len(fs) * 1e6
 
-        rows.append({"workers": W, "scalar_us_per_decision": scalar_us,
-                     "batched_us_per_decision": batched_us,
-                     "speedup": scalar_us / max(batched_us, 1e-9)})
-    Path(out).parent.mkdir(parents=True, exist_ok=True)
-    Path(out).write_text(json.dumps(rows, indent=1))
+    # session-incremental: fixed-state decisions (scalar-comparable)
+    session = SchedulerSession(st, reg, script, pool=res)
+    for f in fs[:8]:
+        session.try_schedule(f, rng=random.Random(3))  # warm row/tensor caches
+    rng = random.Random(3)
+    t0 = time.perf_counter()
+    for f in fs:
+        session.try_schedule(f, rng=rng)
+    session_us = (time.perf_counter() - t0) / len(fs) * 1e6
+
+    # session under churn: every decision is recorded in the state (delta
+    # upkeep timed), then the whole wave is released (also timed)
+    rng = random.Random(3)
+    t0 = time.perf_counter()
+    acts = []
+    for f in fs:
+        w = session.try_schedule(f, rng=rng)
+        if w is not None:
+            acts.append(st.allocate(f, w, reg).activation_id)
+    for a in acts:
+        st.complete(a)
+    churn_us = (time.perf_counter() - t0) / len(fs) * 1e6
+    session.close()
+
+    return {
+        "workers": W,
+        "scalar_us_per_decision": scalar_us,
+        "batched_us_per_decision": batched_us,
+        "session_us_per_decision": session_us,
+        "session_churn_us_per_decision": churn_us,
+        "speedup": scalar_us / max(batched_us, 1e-9),  # historical column
+        "session_speedup_vs_scalar": scalar_us / max(session_us, 1e-9),
+        "session_speedup_vs_batched": batched_us / max(session_us, 1e-9),
+    }
+
+
+def run(out: str = "artifacts/scheduler_scale.json",
+        sizes: Sequence[int] = WORKER_SIZES, wave: int = WAVE) -> List[Dict]:
+    rows = [_bench_one(W, wave) for W in sizes]
+    # only a full-fidelity run may overwrite the historical artifact —
+    # quick smokes and the reduced run.py overview must not clobber it
+    if tuple(sizes) == WORKER_SIZES and wave == WAVE:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(json.dumps(rows, indent=1))
     return rows
 
 
-def main() -> None:
-    rows = run()
-    print(f"{'workers':>8} {'scalar us/dec':>14} {'batched us/dec':>15} {'speedup':>8}")
+def evaluate(rows: Sequence[Dict]) -> Dict:
+    return {
+        "session_beats_scalar_everywhere": all(
+            r["session_us_per_decision"] < r["scalar_us_per_decision"]
+            for r in rows),
+        "session_beats_batched_everywhere": all(
+            r["session_us_per_decision"] < r["batched_us_per_decision"]
+            for r in rows),
+    }
+
+
+def write_bench(rows: Sequence[Dict], path: Optional[Path] = None) -> Path:
+    path = path or Path(__file__).resolve().parent.parent / "BENCH_scheduler.json"
+    out = {
+        "bench": "scheduler_scale",
+        "params": {"wave": WAVE, "occupancy": 0.5, "warm_frac": WARM_FRAC,
+                   "batched_backend": "ref", "session_backend": "np"},
+        "rows": rows,
+        "criteria": evaluate(rows),
+    }
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    return path
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes / wave; no BENCH_scheduler.json rewrite")
+    args = ap.parse_args(argv)
+    sizes = (64, 256) if args.quick else WORKER_SIZES
+    wave = 256 if args.quick else WAVE
+
+    rows = run(sizes=sizes, wave=wave)
+    print(f"{'workers':>8} {'scalar':>10} {'batched':>10} {'session':>10} "
+          f"{'churn':>10}   (us/decision)")
     for r in rows:
-        print(f"{r['workers']:8d} {r['scalar_us_per_decision']:14.1f} "
-              f"{r['batched_us_per_decision']:15.1f} {r['speedup']:8.1f}x")
+        print(f"{r['workers']:8d} {r['scalar_us_per_decision']:10.1f} "
+              f"{r['batched_us_per_decision']:10.1f} "
+              f"{r['session_us_per_decision']:10.1f} "
+              f"{r['session_churn_us_per_decision']:10.1f}")
+
     # linear-time check: scalar cost grows ~linearly (not quadratically) in W
     r0, r1 = rows[0], rows[-1]
     growth = (r1["scalar_us_per_decision"] / r0["scalar_us_per_decision"])
     ratio_w = r1["workers"] / r0["workers"]
     assert growth < ratio_w * 3, f"scalar scheduler superlinear: {growth} vs W ratio {ratio_w}"
     print(f"scalar growth {growth:.1f}x for {ratio_w:.0f}x workers — linear-time claim holds")
+
+    # perf criteria fail loudly (CI runs this in --quick mode)
+    verdict = evaluate(rows)
+    assert verdict["session_beats_scalar_everywhere"], rows
+    print("session-incremental beats the scalar reference at every W "
+          f"(incl. W={rows[0]['workers']}: "
+          f"{rows[0]['session_speedup_vs_scalar']:.1f}x)")
+
+    if not args.quick:
+        assert verdict["session_beats_batched_everywhere"], rows
+        path = write_bench(rows)
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,19 @@ to:
 * **processor-sharing contention**: a worker's vCPUs are shared equally among
   resident compute phases — co-location with `heavy` slows `divide`/`impera`
   down (the anti-affinity motivation);
+
+  Two interchangeable compute cores implement it.  The default ``virtual``
+  core runs on *per-worker virtual time*: each worker keeps a virtual
+  work clock that advances at the current per-task service rate, a task's
+  completion is a fixed point on that clock (``vclock_at_add + work``), and
+  completions live in a per-worker heap keyed by virtual finish time.  Task
+  progress is advanced lazily, only for workers actually touched by an
+  event, and completion events are armed per worker with a freshness token —
+  per-event cost is O(log n) instead of the ``legacy`` core's O(workers x
+  tasks) full-cluster scan (kept, selectable via ``engine="legacy"``, as the
+  reference for the ``benchmarks/simperf.py`` before/after comparison).
+  Both cores integrate delivered compute per worker (``delivered_work``) so
+  conservation — total delivered equals total task work — is testable;
 * **session locality**: the first connection a worker opens to its zone's
   storage replica costs ``conn_setup``; later functions on the same worker
   reuse it (the affinity motivation, §II);
@@ -75,6 +88,8 @@ class SimParams:
 
 class _Task:
     _ids = itertools.count()
+    __slots__ = ("id", "fname", "worker", "on_done", "activation_id",
+                 "work", "remaining", "vfinish", "eta_token")
 
     def __init__(self, fname: str, worker: str, on_done: Callable, activation_id: str):
         self.id = next(self._ids)
@@ -82,8 +97,48 @@ class _Task:
         self.worker = worker
         self.on_done = on_done
         self.activation_id = activation_id
-        self.remaining = 0.0  # single-cpu seconds of compute left
-        self.last_update = 0.0
+        self.work = 0.0  # single-cpu seconds of compute total
+        self.remaining = 0.0  # legacy core: compute left
+        self.vfinish = 0.0  # virtual core: finish point on the worker vclock
+        self.eta_token = 0  # legacy core: freshness of the armed completion
+
+
+class _VirtualWorker:
+    """Per-worker virtual-time processor-sharing state (the O(log n) core).
+
+    ``vclock`` measures *per-task service received*: it advances at rate
+    ``min(1, vcpus/n)`` in real time, so a task entering at ``vclock = v``
+    with ``work`` cpu-seconds finishes exactly when ``vclock`` reaches
+    ``v + work`` — a fixed point, unaffected by later membership changes.
+    Membership changes only bend the real-time slope, which is handled by
+    re-arming the worker's next completion event (token-guarded)."""
+
+    __slots__ = ("name", "vcpus", "n", "vclock", "last_t", "heap", "token",
+                 "delivered")
+
+    def __init__(self, name: str, vcpus: float):
+        self.name = name
+        self.vcpus = vcpus
+        self.n = 0
+        self.vclock = 0.0
+        self.last_t = 0.0
+        self.heap: List[Tuple[float, int, _Task]] = []  # (vfinish, id, task)
+        self.token = 0
+        self.delivered = 0.0  # cpu-seconds actually served (conservation)
+
+    def rate(self) -> float:
+        if self.n == 0:
+            return 0.0
+        return min(1.0, self.vcpus / self.n)
+
+    def touch(self, t: float) -> None:
+        dt = t - self.last_t
+        if dt > 0.0:
+            r = self.rate()
+            if r > 0.0:
+                self.vclock += r * dt
+                self.delivered += self.n * r * dt
+        self.last_t = t
 
 
 class ClusterSim:
@@ -91,7 +146,11 @@ class ClusterSim:
 
     def __init__(self, workers: Dict[str, WorkerSpec], params: SimParams, seed: int = 0,
                  *, pool: Optional[WarmPool] = None, planner=None,
-                 plan_interval: float = 2.0, migrate_cost: float = 0.25):
+                 plan_interval: float = 2.0, migrate_cost: float = 0.25,
+                 engine: str = "virtual"):
+        if engine not in ("virtual", "legacy"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
         self.workers = workers
         self.p = params
         self.rng = random.Random(seed)
@@ -102,9 +161,19 @@ class ClusterSim:
         for w in workers.values():
             self.state.add_worker(w.name, max_memory=w.memory_mb)
         self.registry = Registry()
-        # compute tasks per worker (processor sharing)
-        self._running: Dict[str, List[_Task]] = {w: [] for w in workers}
-        self._next_completion_scheduled = False
+        # compute cores (processor sharing)
+        self._running: Dict[str, List[_Task]] = {w: [] for w in workers}  # legacy
+        self._vw: Dict[str, _VirtualWorker] = {
+            w: _VirtualWorker(w, spec.vcpus) for w, spec in workers.items()}
+        self._n_active = 0  # tasks in flight, both cores
+        self._small_pressure = 0  # non-heavy tasks on the 1-vCPU node class
+        self._submitted_work: Dict[str, float] = {w: 0.0 for w in workers}
+        self._delivered_legacy: Dict[str, float] = {w: 0.0 for w in workers}
+        self.stats: Dict[str, int] = {
+            "events": 0,  # heap events processed by run()
+            "completion_pushes": 0,  # completion events armed
+            "stale_completions": 0,  # armed events dropped by token/liveness
+        }
         # DB: (index) -> list of (zone, visible_at: {zone: t})
         self._docs: Dict[str, List[Dict[str, float]]] = {}
         self._connections: Dict[Tuple[str, str], bool] = {}
@@ -133,13 +202,104 @@ class ClusterSim:
                 and not self._planner_armed):
             self._planner_armed = True
             self.at(self.now + self.plan_interval, self._planner_tick)
+        legacy = self.engine == "legacy"
         while self._heap:
             t, _, fn = heapq.heappop(self._heap)
-            self._advance_compute(t)
+            self.stats["events"] += 1
+            if legacy:
+                self._advance_compute(t)
             self.now = t
             fn()
 
-    # ---- processor-sharing compute ----------------------------------------- #
+    # ---- processor-sharing compute: shared bookkeeping ---------------------- #
+
+    def _is_small_pressure(self, fname: str, worker: str) -> bool:
+        return (self.workers[worker].vcpus <= 1
+                and not fname.startswith("heavy"))
+
+    def _task_added(self, task: _Task) -> None:
+        self._n_active += 1
+        if self._is_small_pressure(task.fname, task.worker):
+            self._small_pressure += 1
+
+    def _task_removed(self, task: _Task) -> None:
+        self._n_active -= 1
+        if self._is_small_pressure(task.fname, task.worker):
+            self._small_pressure -= 1
+
+    def has_compute(self) -> bool:
+        return self._n_active > 0
+
+    def delivered_work(self, worker: str) -> float:
+        """CPU-seconds actually served on ``worker`` so far (both cores
+        integrate it lazily; conservation-tested against submitted work)."""
+        if self.engine == "legacy":
+            return self._delivered_legacy.get(worker, 0.0)
+        vw = self._vw[worker]
+        return vw.delivered + (max(self.now - vw.last_t, 0.0)
+                               * vw.rate() * vw.n)
+
+    def submitted_work(self, worker: str) -> float:
+        return self._submitted_work.get(worker, 0.0)
+
+    def compute(self, fname: str, worker: str, work: float, activation_id: str,
+                on_done: Callable) -> None:
+        task = _Task(fname, worker, on_done, activation_id)
+        task.work = work
+        self._submitted_work[worker] = self._submitted_work.get(worker, 0.0) + work
+        if self.engine == "legacy":
+            task.remaining = work
+            self._running[worker].append(task)
+            self._task_added(task)
+            self._reschedule_completions()
+            return
+        vw = self._vw[worker]
+        vw.touch(self.now)
+        task.vfinish = vw.vclock + work
+        heapq.heappush(vw.heap, (task.vfinish, task.id, task))
+        vw.n += 1
+        self._task_added(task)
+        self._arm_worker(vw)
+
+    # ---- virtual-time core (default): O(log n) per event -------------------- #
+
+    def _arm_worker(self, vw: _VirtualWorker) -> None:
+        """(Re)arm the worker's next-completion event.  The token invalidates
+        any previously armed event for this worker, so membership changes
+        never leave duplicate live completions on the heap."""
+        if not vw.heap:
+            return
+        r = vw.rate()
+        eta = vw.last_t + max(vw.heap[0][0] - vw.vclock, 0.0) / r
+        vw.token += 1
+        token = vw.token
+        self.stats["completion_pushes"] += 1
+        self.at(eta, lambda: self._fire_worker(vw, token))
+
+    def _fire_worker(self, vw: _VirtualWorker, token: int) -> None:
+        if token != vw.token:
+            self.stats["stale_completions"] += 1
+            return
+        vw.touch(self.now)
+        done: List[_Task] = []
+        while vw.heap and vw.heap[0][0] <= vw.vclock + 1e-9:
+            _, _, task = heapq.heappop(vw.heap)
+            vw.n -= 1
+            self._task_removed(task)
+            done.append(task)
+        self._arm_worker(vw)  # next completion (or float under-run retry)
+        for task in done:  # virtual-finish order
+            task.on_done()
+
+    # ---- legacy core (reference): O(workers x tasks) full scans -------------- #
+    #
+    # Kept selectable (``engine="legacy"``) as the before/after baseline for
+    # ``benchmarks/simperf.py``.  Fixed relative to its original form: a
+    # completion event now carries a per-task scheduled-ETA token, so an
+    # event made stale by a rate change is dropped on firing instead of
+    # re-entering ``_reschedule_completions`` and pushing yet another
+    # duplicate event for the same task (the churn cascade pinned in
+    # ``tests/test_simulator_engines.py``).
 
     def _rates(self, worker: str) -> float:
         n = len(self._running[worker])
@@ -153,11 +313,15 @@ class ClusterSim:
             return
         for w, tasks in self._running.items():
             r = self._rates(w)
+            if r <= 0:
+                continue
+            self._delivered_legacy[w] = (self._delivered_legacy.get(w, 0.0)
+                                         + len(tasks) * r * dt)
             for task in tasks:
                 task.remaining -= r * dt
 
     def _reschedule_completions(self) -> None:
-        """(Re)compute the earliest completion; events re-validate on firing."""
+        """(Re)arm the earliest completion; the token drops superseded events."""
         best: Optional[Tuple[float, _Task]] = None
         for w, tasks in self._running.items():
             r = self._rates(w)
@@ -169,24 +333,23 @@ class ClusterSim:
                     best = (eta, task)
         if best is not None:
             t, task = best
-            self.at(t, lambda task=task: self._maybe_complete(task))
+            task.eta_token += 1
+            token = task.eta_token
+            self.stats["completion_pushes"] += 1
+            self.at(t, lambda: self._maybe_complete(task, token))
 
-    def _maybe_complete(self, task: _Task) -> None:
-        if task not in self._running[task.worker]:
-            return  # stale event
+    def _maybe_complete(self, task: _Task, token: int) -> None:
+        if (token != task.eta_token
+                or task not in self._running[task.worker]):
+            self.stats["stale_completions"] += 1
+            return  # superseded by a later reschedule (rates changed)
         if task.remaining > 1e-9:
-            self._reschedule_completions()  # rates changed since scheduling
+            self._reschedule_completions()  # float under-run: rearm
             return
         self._running[task.worker].remove(task)
+        self._task_removed(task)
         self._reschedule_completions()
         task.on_done()
-
-    def compute(self, fname: str, worker: str, work: float, activation_id: str,
-                on_done: Callable) -> None:
-        task = _Task(fname, worker, on_done, activation_id)
-        task.remaining = work
-        self._running[worker].append(task)
-        self._reschedule_completions()
 
     # ---- container lifecycle (warm pool) ------------------------------------ #
 
@@ -253,7 +416,7 @@ class ClusterSim:
                 pool.retire_idle(a.function, a.worker, self.now)
         # keep epoching only while the simulation still has work: arrivals or
         # in-flight actions on the heap, or compute in progress
-        if self._heap or any(self._running.values()):
+        if self._heap or self.has_compute():
             self.at(self.now + self.plan_interval, self._planner_tick)
 
     def _finish_prewarm(self, a) -> None:
@@ -269,10 +432,18 @@ class ClusterSim:
 
     # ---- DB ----------------------------------------------------------------- #
 
-    def db_connect(self, worker: str) -> float:
-        """Returns connection cost (session locality: reuse is free)."""
-        zone = self.workers[worker].zone
-        key = (worker, zone)
+    def db_connect(self, worker: str, replica_zone: Optional[str] = None) -> float:
+        """Connection cost for ``worker`` talking to a zone's storage replica
+        (session locality, §II: the first connection per *(worker, replica)*
+        pays ``conn_setup``; reuse of that same session is free).
+
+        ``replica_zone`` defaults to the worker's local replica.  Keying by
+        the *replica* zone — not the worker's own zone, which is a constant
+        per worker and would collapse the table to per-worker — means a
+        worker that later polls the remote replica pays a fresh setup, as
+        the paper's session-locality model states."""
+        replica = replica_zone if replica_zone is not None else self.workers[worker].zone
+        key = (worker, replica)
         if self._connections.get(key):
             return 0.0
         self._connections[key] = True
@@ -280,12 +451,9 @@ class ClusterSim:
 
     def _small_node_pressure(self) -> int:
         """Non-heavy functions currently computing on the 1-vCPU node class
-        (the class the DB replicas share)."""
-        n = 0
-        for w, tasks in self._running.items():
-            if self.workers[w].vcpus <= 1:
-                n += sum(1 for t in tasks if not t.fname.startswith("heavy"))
-        return n
+        (the class the DB replicas share).  O(1): a counter maintained on
+        task add/remove rather than a full-cluster scan per ``db_write``."""
+        return self._small_pressure
 
     def db_write(self, index: str, worker: str, n_docs: int) -> None:
         zone = self.workers[worker].zone

@@ -13,13 +13,21 @@ from .parser import parse, parse_file, to_text
 from .scheduler import schedule, try_schedule, valid, candidate_blocks, Warmth
 from .state import Activation, ClusterState, Conf, Registry, WorkerView, ConcurrencyConflict
 from .baseline import schedule_vanilla, try_schedule_vanilla
-from .batched import CompiledPolicies, TagIndex, StateTensors, schedule_wave, WaveResult
+from .batched import (
+    CompiledPolicies,
+    SchedulerSession,
+    StateTensors,
+    TagIndex,
+    TagRows,
+    WaveResult,
+    schedule_wave,
+)
 
 __all__ = [
     "AAppError", "AAppScript", "Affinity", "Block", "Invalidate", "SchedulingFailure",
     "TagPolicy", "default_policy", "parse", "parse_file", "to_text", "schedule",
     "try_schedule", "valid", "candidate_blocks", "Activation", "ClusterState", "Conf",
     "Registry", "WorkerView", "ConcurrencyConflict", "schedule_vanilla",
-    "try_schedule_vanilla", "CompiledPolicies", "TagIndex", "StateTensors",
-    "schedule_wave", "WaveResult", "Warmth",
+    "try_schedule_vanilla", "CompiledPolicies", "SchedulerSession", "TagIndex",
+    "TagRows", "StateTensors", "schedule_wave", "WaveResult", "Warmth",
 ]

@@ -26,12 +26,24 @@ Warmth.  When a ``warmth`` callable is supplied (container-pool residency:
 wave start and each block's valid candidates are narrowed to the
 highest-rank tier before the strategy applies — the same rule the scalar
 reference implements, so equivalence (and the property test) covers it.
+
+Incremental data plane.  :func:`schedule_wave` is one-shot: it rebuilds the
+``StateTensors`` snapshot and its row tensors from scratch every call, which
+at small W costs more than it saves.  :class:`SchedulerSession` is the
+persistent form — tensors maintained by deltas off the
+:class:`~repro.core.state.ClusterState` change feed, per-tag row banks cached
+across waves, decisions evaluated against the *live* tensors (no snapshot
+corrections), warmth read from the pool's sparse residency index.  It is the
+production path: ``serve.Engine`` and the simulator workloads schedule
+through it.  Same bit-exact contract, property-tested in
+``tests/test_session_property.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +64,12 @@ from repro.kernels.affinity import NO_CAP, NO_CONC, affinity_valid_np
 
 
 class TagIndex:
+    """Append-only tag -> column map.  ``ensure`` grows the universe in place
+    (existing columns never move), which is what lets a long-lived
+    :class:`SchedulerSession` absorb dynamically registered tags — session
+    KV tags, ``warm:<fn>`` residency tags — without recompiling old rows:
+    an old affinity vector is still exact after zero-padding to the new T."""
+
     def __init__(self, tags: Sequence[str]):
         self.tags: Tuple[str, ...] = tuple(dict.fromkeys(tags))
         self.index: Dict[str, int] = {t: i for i, t in enumerate(self.tags)}
@@ -62,6 +80,28 @@ class TagIndex:
         for _, refs in script.referenced_tags().items():
             tags.extend(refs)
         return TagIndex(tags)
+
+    def ensure(self, tag: str) -> int:
+        """Column of ``tag``, appending a fresh one if unknown."""
+        got = self.index.get(tag)
+        if got is None:
+            got = len(self.tags)
+            self.tags = self.tags + (tag,)
+            self.index[tag] = got
+        return got
+
+    def ensure_script(self, script: AAppScript, reg: Registry) -> None:
+        """Ensure every tag the script can *read*: its policy tags and its
+        blocks' affinity terms.  Registry tags are deliberately not swept in
+        (unlike :meth:`from_script`) — a tag no script references is never
+        consulted by ``valid()``, and long-lived registries accumulate dead
+        per-session tags that would defeat :meth:`SchedulerSession.compact`;
+        resident tags enter the universe via allocation deltas instead."""
+        for t in script.tags:
+            self.ensure(t)
+        for _, refs in script.referenced_tags().items():
+            for t in refs:
+                self.ensure(t)
 
     def __len__(self) -> int:
         return len(self.tags)
@@ -86,6 +126,44 @@ class CompiledBlock:
     block: Block  # original (for scalar re-checks)
 
 
+@dataclasses.dataclass
+class TagRows:
+    """Stacked row tensors for one tag's candidate block list — the unit the
+    session caches across waves.  ``aff`` is zero-padded in place when the
+    shared tag universe grows (appended columns can't be referenced by an
+    already-compiled block, so padding is exact)."""
+
+    cbs: List[CompiledBlock]
+    aff: np.ndarray  # [B, T] int8
+    cap: np.ndarray  # [B] f64
+    conc: np.ndarray  # [B] i32
+    pos: np.ndarray = None  # [B, T] f32 (aff == 1), kept in sync with aff
+    neg: np.ndarray = None  # [B, T] f32 (aff == -1)
+    cap_rows: np.ndarray = None  # [k] row indices with a capacity_used rule
+    conc_rows: np.ndarray = None  # [k] row indices with a concurrency rule
+    # worker-mask cache, stamped with the session's worker epoch; living on
+    # the bank (not in a session-side id()-keyed dict) it is evicted together
+    # with its CompiledPolicies and can never alias a recycled object id
+    wmask: Optional[np.ndarray] = None
+    wmask_epoch: int = -1
+
+    def __post_init__(self):
+        self._derive()
+
+    def _derive(self) -> None:
+        self.pos = (self.aff == 1).astype(np.float32)
+        self.neg = (self.aff == -1).astype(np.float32)
+        self.cap_rows = np.flatnonzero(self.cap < NO_CAP)
+        self.conc_rows = np.flatnonzero(self.conc < NO_CONC)
+
+    def aff_at(self, T: int) -> np.ndarray:
+        if self.aff.shape[1] < T:
+            pad = np.zeros((self.aff.shape[0], T - self.aff.shape[1]), np.int8)
+            self.aff = np.concatenate([self.aff, pad], axis=1)
+            self._derive()
+        return self.aff
+
+
 class CompiledPolicies:
     """tag -> compiled candidate block list (with followup/defaults resolved)."""
 
@@ -93,6 +171,7 @@ class CompiledPolicies:
         self.script = script
         self.tag_index = tag_index or TagIndex.from_script(script, reg)
         self._cache: Dict[str, List[CompiledBlock]] = {}
+        self._rows: Dict[str, TagRows] = {}
 
     def blocks_for(self, tag: str) -> List[CompiledBlock]:
         got = self._cache.get(tag)
@@ -100,6 +179,23 @@ class CompiledPolicies:
             got = [self._compile(b) for b in candidate_blocks(tag, self.script)]
             self._cache[tag] = got
         return got
+
+    def rows_for(self, tag: str) -> TagRows:
+        """Cached stacked rows for ``tag`` (compiled once per session)."""
+        bank = self._rows.get(tag)
+        if bank is None:
+            cbs = self.blocks_for(tag)
+            T = len(self.tag_index)
+            if cbs:
+                aff = np.stack([cb.aff for cb in cbs]).astype(np.int8)
+            else:
+                aff = np.zeros((0, T), np.int8)
+            cap = np.array([cb.cap_pct for cb in cbs], np.float64)
+            conc = (np.array([cb.max_conc for cb in cbs], np.int64)
+                    .clip(max=NO_CONC).astype(np.int32))
+            bank = TagRows(cbs=cbs, aff=aff, cap=cap, conc=conc)
+            self._rows[tag] = bank
+        return bank
 
     def _compile(self, block: Block) -> CompiledBlock:
         T = len(self.tag_index)
@@ -129,21 +225,39 @@ class CompiledPolicies:
 
 @dataclasses.dataclass
 class StateTensors:
+    """Worker-state snapshot tensors, maintainable by O(1)-ish deltas.
+
+    ``from_conf`` builds a fresh snapshot; the ``apply_*`` methods replay the
+    :class:`repro.core.state.ClusterState` change feed onto an existing one so
+    a :class:`SchedulerSession` never rebuilds per wave.  Delta exactness:
+    ``occ``/``n_funcs`` are integer counters; ``mem_used`` is *recomputed*
+    from the per-worker resident-memory table (``_res_mem``, insertion order
+    mirroring ``activeFunctions``) on every touch, so after any interleaving
+    of deltas the tensors are bit-identical to ``from_conf`` of the final
+    conf — property-tested in ``tests/test_session_property.py``.
+    """
+
     workers: Tuple[str, ...]  # conf order
     widx: Dict[str, int]
     occ: np.ndarray  # [W, T] int32
-    mem_used: np.ndarray  # [W] f32
-    max_mem: np.ndarray  # [W] f32
+    mem_used: np.ndarray  # [W] f64 (the scalar reference sums python floats)
+    max_mem: np.ndarray  # [W] f64
     n_funcs: np.ndarray  # [W] i32
+    # worker -> ordered {activation key: memory}; insertion order mirrors the
+    # state's activeFunctions table so the float64 sum matches from_conf's.
+    _res_mem: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    # bumped on every mutation — consumers key derived caches off it
+    rev: int = 0
 
     @staticmethod
     def from_conf(conf: Conf, tag_index: TagIndex) -> "StateTensors":
         workers = tuple(conf.keys())
         W, T = len(workers), len(tag_index)
         occ = np.zeros((W, T), np.int32)
-        mem_used = np.zeros((W,), np.float32)
-        max_mem = np.zeros((W,), np.float32)
+        mem_used = np.zeros((W,), np.float64)
+        max_mem = np.zeros((W,), np.float64)
         n_funcs = np.zeros((W,), np.int32)
+        res_mem: Dict[str, Dict[str, float]] = {}
         for i, w in enumerate(workers):
             view = conf[w]
             mem_used[i] = view.memory_used
@@ -153,6 +267,10 @@ class StateTensors:
                 j = tag_index.index.get(t)
                 if j is not None:
                     occ[i, j] += 1
+            # the conf view has no per-activation memories: a from_conf
+            # snapshot starts with an empty resident table and only supports
+            # deltas whose keys it has itself seen (use from_state otherwise)
+            res_mem[w] = {}
         return StateTensors(
             workers=workers,
             widx={w: i for i, w in enumerate(workers)},
@@ -160,7 +278,120 @@ class StateTensors:
             mem_used=mem_used,
             max_mem=max_mem,
             n_funcs=n_funcs,
+            _res_mem=res_mem,
         )
+
+    @staticmethod
+    def from_state(state: ClusterState, tag_index: TagIndex) -> "StateTensors":
+        """Snapshot with real activation keys in the resident-memory table,
+        so subsequent ``complete`` deltas can find their entries.  Resident
+        tags unknown to ``tag_index`` are ensured first (appended columns),
+        keeping the occupancy matrix complete for any future script."""
+        acts = state.active_activations()
+        for a in acts:
+            if a.tag:
+                tag_index.ensure(a.tag)
+        snap = StateTensors.from_conf(state.conf(), tag_index)
+        for a in acts:  # global allocation order == per-worker insertion order
+            snap._res_mem.setdefault(a.worker, {})[a.activation_id] = a.memory
+        return snap
+
+    # ---- deltas (the ClusterState change feed, replayed) ------------------- #
+
+    def ensure_tags(self, T: int) -> None:
+        """Grow the occupancy matrix to ``T`` tag columns (appended zeros)."""
+        cur = self.occ.shape[1]
+        if T > cur:
+            self.occ = np.concatenate(
+                [self.occ, np.zeros((len(self.workers), T - cur), np.int32)],
+                axis=1)
+            self.rev += 1
+
+    def _recompute_mem(self, i: int, worker: str) -> None:
+        # float64 sum in residency insertion order == the scalar reference's
+        # ``view.memory_used`` (a python-float sum in the same order)
+        self.mem_used[i] = sum(self._res_mem.get(worker, {}).values())
+
+    def apply_alloc(self, worker: str, tag: str, memory: float, key: str,
+                    tag_index: TagIndex) -> None:
+        i = self.widx[worker]
+        if tag:
+            col = tag_index.ensure(tag)
+            self.ensure_tags(len(tag_index))
+            self.occ[i, col] += 1
+        self._res_mem.setdefault(worker, {})[key] = float(memory)
+        self._recompute_mem(i, worker)
+        self.n_funcs[i] += 1
+        self.rev += 1
+
+    def apply_release(self, worker: str, tag: str, memory: float, key: str,
+                      tag_index: TagIndex) -> None:
+        i = self.widx.get(worker)
+        if i is None:
+            return  # worker already dropped
+        if tag:
+            col = tag_index.index.get(tag)
+            if col is not None and col < self.occ.shape[1]:
+                self.occ[i, col] -= 1
+        self._res_mem.get(worker, {}).pop(key, None)
+        self._recompute_mem(i, worker)
+        self.n_funcs[i] -= 1
+        self.rev += 1
+
+    def apply_add_worker(self, worker: str, max_memory: float) -> None:
+        i = len(self.workers)
+        self.workers = self.workers + (worker,)
+        self.widx[worker] = i
+        self.occ = np.concatenate(
+            [self.occ, np.zeros((1, self.occ.shape[1]), np.int32)], axis=0)
+        self.mem_used = np.append(self.mem_used, 0.0)
+        self.max_mem = np.append(self.max_mem, float(max_memory))
+        self.n_funcs = np.append(self.n_funcs, np.int32(0)).astype(np.int32)
+        self._res_mem[worker] = {}
+        self.rev += 1
+
+    def apply_drop_worker(self, worker: str) -> None:
+        i = self.widx.get(worker)
+        if i is None:
+            return
+        self.workers = self.workers[:i] + self.workers[i + 1:]
+        self.widx = {w: j for j, w in enumerate(self.workers)}
+        self.occ = np.delete(self.occ, i, axis=0)
+        self.mem_used = np.delete(self.mem_used, i)
+        self.max_mem = np.delete(self.max_mem, i)
+        self.n_funcs = np.delete(self.n_funcs, i)
+        self._res_mem.pop(worker, None)
+        self.rev += 1
+
+    def copy(self) -> "StateTensors":
+        return StateTensors(
+            workers=self.workers,
+            widx=dict(self.widx),
+            occ=self.occ.copy(),
+            mem_used=self.mem_used.copy(),
+            max_mem=self.max_mem.copy(),
+            n_funcs=self.n_funcs.copy(),
+            _res_mem={w: dict(d) for w, d in self._res_mem.items()},
+            rev=self.rev,
+        )
+
+    def equals(self, other: "StateTensors") -> bool:
+        """Bit-exact equality of the scheduling-visible tensors (the resident
+        memory bookkeeping table is excluded: synthetic vs real keys)."""
+        if self.workers != other.workers:
+            return False
+        T = max(self.occ.shape[1], other.occ.shape[1])
+
+        def pad(occ: np.ndarray) -> np.ndarray:
+            if occ.shape[1] == T:
+                return occ
+            return np.concatenate(
+                [occ, np.zeros((occ.shape[0], T - occ.shape[1]), np.int32)], axis=1)
+
+        return (np.array_equal(pad(self.occ), pad(other.occ))
+                and np.array_equal(self.mem_used, other.mem_used)
+                and np.array_equal(self.max_mem, other.max_mem)
+                and np.array_equal(self.n_funcs, other.n_funcs))
 
 
 # --------------------------------------------------------------------------- #
@@ -344,3 +575,352 @@ def schedule_wave(
             apply_to.allocate(f, chosen, reg)
 
     return WaveResult(assignments=assignments, rows_evaluated=R, corrections=corrections)
+
+
+# --------------------------------------------------------------------------- #
+# persistent scheduling session (the incremental data plane)
+# --------------------------------------------------------------------------- #
+
+
+class SchedulerSession:
+    """Persistent scheduling data plane over one :class:`ClusterState`.
+
+    The per-wave cost profile of :func:`schedule_wave` is dominated by work
+    that doesn't change between waves: ``StateTensors.from_conf`` rebuilds,
+    per-function row compilation, and — at small W — the scalar
+    dirty-correction pass.  A session keeps all of it warm:
+
+    * **state tensors by delta** — the session subscribes to the state's
+      change feed and replays allocate/complete/add-worker/fail-worker as
+      O(1)-ish tensor deltas (``StateTensors.apply_*``); no rebuild per wave.
+      Safety net: every decision cross-checks ``state.version`` against the
+      last delta seen, and any mismatch (or an explicit :meth:`invalidate`)
+      falls back to a fresh ``from_state`` snapshot — correctness never
+      depends on the feed being complete;
+    * **compiled rows per tag** — ``CompiledPolicies.rows_for`` banks are
+      compiled once per (script, tag) and padded in place as the shared
+      append-only :class:`TagIndex` grows.  Scripts are hashable (frozen
+      dataclasses), so dynamically synthesised per-request scripts (e.g.
+      ``serve.Engine``'s) hit an LRU of compiled policies;
+    * **vectorised decisions on live tensors** — each decision evaluates the
+      tag's whole block bank against the *current* tensors in one batched
+      ``valid`` call (pure-numpy backend by default: no device dispatch on
+      the CPU hot path) and then applies Listing-1's block order / strategy /
+      warmth-tier rules exactly.  Because the tensors are live, sequential
+      exactness needs no snapshot-correction pass — a wave is just the
+      decision loop with deltas applied between picks, bit-identical to the
+      scalar reference (property-tested in ``tests/test_batched_equivalence``
+      and ``tests/test_session_property``);
+    * **vectorised warmth** — with a warm pool attached, the warmth column
+      comes from the pool's sparse idle-residency table
+      (:meth:`repro.pool.WarmPool.warmth_row`, O(#idle keys) per decision)
+      instead of F x W Python ``warmth()`` calls.
+
+    ``warmth`` arguments accept ``"auto"`` (pool-backed ranks when a pool is
+    attached, else none), ``None`` (off), or an explicit
+    ``(function, worker) -> rank`` callable.
+    """
+
+    def __init__(self, state: ClusterState, reg: Registry,
+                 script: Optional[AAppScript] = None, *,
+                 backend: str = "np", pool=None,
+                 clock: Optional[Callable[[], float]] = None,
+                 max_cached_scripts: int = 128):
+        self.state = state
+        self.reg = reg
+        self.backend = backend
+        self.pool = pool
+        self.clock = clock or (lambda: 0.0)
+        self.tag_index = TagIndex([])
+        self._default_script = script
+        self._policies: "OrderedDict[AAppScript, CompiledPolicies]" = OrderedDict()
+        self._max_cached_scripts = max_cached_scripts
+        self._snap: Optional[StateTensors] = None
+        self._synced_version = -1
+        self._worker_epoch = 0
+        # (occ array ref, rev, emptyT, presentT): the strong reference makes
+        # the identity check sound (a live key can't be a recycled address)
+        self._occ_cache = None
+        self._last_pol: Optional[Tuple[AAppScript, CompiledPolicies]] = None
+        self.stats = {"decisions": 0, "deltas": 0, "rebuilds": 0, "waves": 0}
+        state.add_listener(self._on_event)
+        if script is not None:
+            self.policies_for(script)
+
+    def close(self) -> None:
+        """Detach from the state's change feed."""
+        self.state.remove_listener(self._on_event)
+
+    # ---- tensor maintenance ------------------------------------------------ #
+
+    def invalidate(self) -> None:
+        """Drop the cached tensors; the next decision rebuilds from state."""
+        self._snap = None
+
+    def compact(self) -> None:
+        """Reset the tag universe to what is actually in use and drop every
+        compiled-policy cache.
+
+        The shared :class:`TagIndex` is append-only, so a long-lived session
+        fed per-request synthesised scripts (``serve.Engine``'s ``kv:<s>``
+        session tags) accumulates a column for every tag *ever* seen and the
+        per-decision matmuls grow with it.  ``compact()`` rebuilds the index
+        from the current state + default script; callers with per-session
+        tags should invoke it periodically (the engine does once the index
+        outgrows a threshold).  O(one rebuild) — all caches recompile on
+        demand."""
+        self.tag_index = TagIndex([])
+        self._policies.clear()
+        self._last_pol = None
+        self._occ_cache = None
+        self.invalidate()
+        if self._default_script is not None:
+            self.policies_for(self._default_script)
+
+    def _on_event(self, kind: str, payload: Dict) -> None:
+        if self._snap is None:
+            return
+        try:
+            if kind == "allocate":
+                a = payload["activation"]
+                self._snap.apply_alloc(a.worker, a.tag, a.memory,
+                                       a.activation_id, self.tag_index)
+            elif kind == "complete":
+                a = payload["activation"]
+                self._snap.apply_release(a.worker, a.tag, a.memory,
+                                         a.activation_id, self.tag_index)
+            elif kind == "add_worker":
+                if payload["reused"]:
+                    # a re-joining worker keeps its original conf slot; an
+                    # append would put it at the wrong position — rebuild
+                    self.invalidate()
+                    return
+                self._snap.apply_add_worker(payload["worker"],
+                                            payload["max_memory"])
+                self._worker_epoch += 1
+            elif kind == "fail_worker":
+                self._snap.apply_drop_worker(payload["worker"])
+                self._worker_epoch += 1
+            else:  # unknown event kind: be safe
+                self.invalidate()
+                return
+            self._synced_version = self.state.version
+            self.stats["deltas"] += 1
+        except Exception:
+            self.invalidate()
+
+    def tensors(self) -> StateTensors:
+        if self._snap is None or self._synced_version != self.state.version:
+            self._snap = StateTensors.from_state(self.state, self.tag_index)
+            self._synced_version = self.state.version
+            self._worker_epoch += 1
+            self.stats["rebuilds"] += 1
+        return self._snap
+
+    # ---- compiled policy cache --------------------------------------------- #
+
+    def policies_for(self, script: Optional[AAppScript] = None) -> CompiledPolicies:
+        script = script if script is not None else self._default_script
+        if script is None:
+            raise ValueError("no script: pass one or set a session default")
+        last = self._last_pol
+        if last is not None and last[0] is script:
+            return last[1]
+        pol = self._policies.get(script)
+        if pol is None:
+            self.tag_index.ensure_script(script, self.reg)
+            pol = CompiledPolicies(script, self.reg, tag_index=self.tag_index)
+            self._policies[script] = pol
+            if len(self._policies) > self._max_cached_scripts:
+                self._policies.popitem(last=False)
+        else:
+            self._policies.move_to_end(script)
+        self._last_pol = (script, pol)
+        return pol
+
+    # ---- warmth ------------------------------------------------------------ #
+
+    def _resolve_warmth(self, f: str, warmth, snap: StateTensors):
+        """Returns ``(warm_vec, warmth_fn)``: a dense [W] rank vector when the
+        pool's sparse residency table backs it (vectorized tier-narrowing), or
+        a callable for explicitly supplied warmth; both None when off."""
+        if warmth == "auto":
+            if self.pool is None:
+                return None, None
+            row = self.pool.warmth_row(f, self.clock())
+            if not row:
+                return None, None
+            vec = np.zeros((len(snap.workers),), np.int32)
+            widx = snap.widx
+            for w, r in row.items():
+                j = widx.get(w)
+                if j is not None:
+                    vec[j] = r
+            return vec, None
+        if warmth is None:
+            return None, None
+        return None, warmth
+
+    # ---- decisions --------------------------------------------------------- #
+
+    def _valid_rows(self, bank: TagRows, snap: StateTensors, wmask: np.ndarray,
+                    f_mem: float) -> np.ndarray:
+        """Lean batched Listing-1 ``valid`` for one tag's rows on the live
+        tensors — same math as ``affinity_valid_ref_np`` (float32 matmul
+        violation counts), with the worker-occupancy complements cached per
+        tensor revision and the per-row capacity/concurrency terms evaluated
+        only for rows that carry such a rule."""
+        occ = snap.occ
+        cache = self._occ_cache
+        if cache is None or cache[0] is not occ or cache[1] != snap.rev:
+            empty = (occ == 0).astype(np.float32)  # [W, T]
+            cache = (occ, snap.rev, empty.T.copy(), (1.0 - empty).T.copy())
+            self._occ_cache = cache
+        _, _, emptyT, presentT = cache
+        violations = bank.pos @ emptyT + bank.neg @ presentT  # [B, W]
+        ok = (violations == 0.0) & wmask
+        # float64 throughout, mirroring the scalar reference's python-float
+        # comparisons (lines 19 / 22-24 of Listing 1) bit for bit
+        ok &= (snap.mem_used + float(f_mem) <= snap.max_mem)[None, :]
+        if bank.cap_rows.size:
+            sel = bank.cap_rows
+            ok[sel] &= (snap.mem_used[None, :]
+                        < (bank.cap[sel][:, None] / 100.0)
+                        * snap.max_mem[None, :])
+        if bank.conc_rows.size:
+            sel = bank.conc_rows
+            ok[sel] &= snap.n_funcs[None, :] < bank.conc[sel][:, None]
+        return ok
+
+    def _decide(self, f: str, pol: CompiledPolicies, snap: StateTensors,
+                rng, warmth) -> Optional[str]:
+        self.stats["decisions"] += 1
+        spec = self.reg[f]  # raises KeyError like the scalar reference
+        W = len(snap.workers)
+        bank = pol.rows_for(spec.tag)
+        B = len(bank.cbs)
+        if B == 0 or W == 0:
+            return None
+        T = len(self.tag_index)
+        snap.ensure_tags(T)
+        aff = bank.aff_at(T)
+        if snap.occ.shape[1] > T:  # tensors saw tags no script references
+            aff = np.concatenate(
+                [aff, np.zeros((B, snap.occ.shape[1] - T), np.int8)], axis=1)
+            bank.aff = aff
+            bank._derive()
+        wmask = self._wmask(pol, spec.tag, bank, snap)
+        if self.backend == "np":
+            valid = self._valid_rows(bank, snap, wmask, spec.memory)
+        else:
+            f_mem = np.full((B,), spec.memory, np.float32)
+            valid = affinity_valid_np(
+                snap.occ, aff, wmask, snap.mem_used, snap.max_mem,
+                snap.n_funcs, f_mem, bank.cap, bank.conc,
+                backend=self.backend)  # [B, W]
+        warm_vec, warmth_fn = self._resolve_warmth(f, warmth, snap)
+        workers = snap.workers
+        for b, cb in enumerate(bank.cbs):
+            row = valid[b]
+            if cb.wildcard:
+                cand = np.flatnonzero(row)  # conf order
+                if cand.size == 0:
+                    continue
+                if warm_vec is not None:
+                    ranks = warm_vec[cand]
+                    best = int(ranks.max())
+                    if best > 0:
+                        cand = cand[ranks == best]
+                elif warmth_fn is not None:
+                    ranks = [warmth_fn(f, workers[j]) for j in cand]
+                    best = max(ranks)
+                    cand = [j for j, r in zip(cand, ranks) if r == best]
+                if cb.strategy == STRATEGY_BEST_FIRST:
+                    return workers[int(cand[0])]
+                assert cb.strategy == STRATEGY_ANY
+                return workers[int(rng.choice(cand))]
+            widx = snap.widx
+            cand = [widx[w] for w in cb.worker_ids
+                    if w in widx and row[widx[w]]]
+            if not cand:
+                continue
+            if warm_vec is not None:
+                ranks = [int(warm_vec[j]) for j in cand]
+                best = max(ranks)
+                cand = [j for j, r in zip(cand, ranks) if r == best]
+            elif warmth_fn is not None:
+                ranks = [warmth_fn(f, workers[j]) for j in cand]
+                best = max(ranks)
+                cand = [j for j, r in zip(cand, ranks) if r == best]
+            if cb.strategy == STRATEGY_BEST_FIRST:
+                return workers[cand[0]]
+            assert cb.strategy == STRATEGY_ANY
+            return workers[rng.choice(cand)]
+        return None
+
+    def _wmask(self, pol: CompiledPolicies, tag: str, bank: TagRows,
+               snap: StateTensors) -> np.ndarray:
+        if bank.wmask is not None and bank.wmask_epoch == self._worker_epoch:
+            return bank.wmask
+        W = len(snap.workers)
+        wmask = np.zeros((len(bank.cbs), W), bool)
+        for b, cb in enumerate(bank.cbs):
+            if cb.wildcard:
+                wmask[b, :] = True
+            else:
+                for wid in cb.worker_ids:
+                    j = snap.widx.get(wid)
+                    if j is not None:
+                        wmask[b, j] = True
+        bank.wmask = wmask
+        bank.wmask_epoch = self._worker_epoch
+        return wmask
+
+    def try_schedule(self, f: str, *, script: Optional[AAppScript] = None,
+                     rng: Optional[random.Random] = None,
+                     warmth="auto") -> Optional[str]:
+        """Single Listing-1 decision against the live tensors; returns the
+        worker id or ``None``.  Does *not* allocate — callers record the
+        decision via ``state.allocate`` and the change feed keeps the
+        session's tensors in lockstep."""
+        rng = rng if rng is not None else random
+        pol = self.policies_for(script)
+        snap = self.tensors()
+        return self._decide(f, pol, snap, rng, warmth)
+
+    def schedule_wave(self, fs: Sequence[str], *,
+                      script: Optional[AAppScript] = None,
+                      rng: Optional[random.Random] = None,
+                      warmth="auto",
+                      apply_to: Optional[ClusterState] = None) -> WaveResult:
+        """Schedule ``fs`` in order with exact sequential semantics.
+
+        ``apply_to`` must be the session's own state (allocations are recorded
+        there and flow back as deltas) or ``None`` (the wave is simulated on a
+        scratch copy of the tensors; the session's live tensors are
+        untouched).
+        """
+        if apply_to is not None and apply_to is not self.state:
+            raise ValueError("apply_to must be the session's state or None")
+        rng = rng if rng is not None else random
+        pol = self.policies_for(script)
+        self.stats["waves"] += 1
+        live = apply_to is not None
+        snap = self.tensors() if live else self.tensors().copy()
+        assignments: List[Optional[str]] = []
+        rows = 0
+        for i, f in enumerate(fs):
+            w = self._decide(f, pol, snap if not live else self.tensors(),
+                             rng, warmth)
+            rows += len(pol.rows_for(self.reg[f].tag).cbs)
+            assignments.append(w)
+            if w is None:
+                continue
+            if live:
+                apply_to.allocate(f, w, self.reg)  # delta via change feed
+            else:
+                spec = self.reg[f]
+                snap.apply_alloc(w, spec.tag, spec.memory, f"~wave{i}",
+                                 self.tag_index)
+        return WaveResult(assignments=assignments, rows_evaluated=rows,
+                          corrections=0)

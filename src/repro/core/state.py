@@ -20,9 +20,20 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
-from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple
 
 from .ast import AAppError
+
+# Change-feed listener: ``fn(kind, payload)`` with kind in
+# {"allocate", "complete", "add_worker", "fail_worker"}.  Payload fields:
+#   allocate    {"activation": Activation}
+#   complete    {"activation": Activation}
+#   add_worker  {"worker": str, "max_memory": float, "reused": bool}
+#   fail_worker {"worker": str, "lost": List[Activation]}
+# Listeners fire synchronously inside the state lock, in mutation order —
+# the incremental scheduling data plane (`repro.core.batched.SchedulerSession`)
+# relies on seeing every delta exactly once and in order.
+StateListener = Callable[[str, Dict], None]
 
 
 class ConcurrencyConflict(Exception):
@@ -107,6 +118,23 @@ class ClusterState:
         self._active_tag_activations: Dict[str, Activation] = {}
         self._ids = itertools.count()
         self._version = 0
+        self._listeners: List[StateListener] = []
+
+    # -- change feed --------------------------------------------------------- #
+
+    def add_listener(self, fn: StateListener) -> None:
+        """Subscribe to the mutation feed (see :data:`StateListener`)."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def remove_listener(self, fn: StateListener) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def _emit(self, kind: str, payload: Dict) -> None:
+        for fn in self._listeners:
+            fn(kind, payload)
 
     # -- worker inventory (elastic) ---------------------------------------- #
 
@@ -114,10 +142,14 @@ class ClusterState:
         with self._lock:
             if worker in self._max_memory and self._alive[worker]:
                 raise AAppError(f"worker {worker!r} already present")
+            reused = worker in self._max_memory  # re-join keeps its conf slot
             self._max_memory[worker] = float(max_memory)
             self._alive[worker] = True
             self._active_functions.setdefault(worker, {})
             self._version += 1
+            self._emit("add_worker", {"worker": worker,
+                                      "max_memory": float(max_memory),
+                                      "reused": reused})
 
     def remove_worker(self, worker: str) -> List[Activation]:
         """Gracefully drain: returns the activations that must be rescheduled."""
@@ -135,6 +167,7 @@ class ClusterState:
             for act in lost:
                 self._active_tag_activations.pop(act.activation_id, None)
             self._version += 1
+            self._emit("fail_worker", {"worker": worker, "lost": lost})
             return lost
 
     def workers(self) -> Tuple[str, ...]:
@@ -201,6 +234,7 @@ class ClusterState:
             self._active_functions[worker][act.activation_id] = act
             self._active_tag_activations[act.activation_id] = act
             self._version += 1
+            self._emit("allocate", {"activation": act})
             return act
 
     def complete(self, activation_id: str) -> Optional[Activation]:
@@ -213,6 +247,7 @@ class ClusterState:
                 return None  # worker already failed / duplicate ack
             self._active_functions.get(act.worker, {}).pop(activation_id, None)
             self._version += 1
+            self._emit("complete", {"activation": act})
             return act
 
     def active_activations(self) -> Tuple[Activation, ...]:

@@ -104,12 +104,14 @@ def affinity_valid_np(
     backend: str = "auto",
 ) -> np.ndarray:
     """Host-side convenience: numpy in/out.  Runs the pure-numpy reference
-    when JAX is unavailable (``auto``/``ref`` backends only)."""
-    if HAS_JAX:
+    when JAX is unavailable (``auto``/``ref`` backends only), or always with
+    ``backend="np"`` — the zero-dispatch CPU hot path the incremental
+    scheduling session uses (bit-identical to the jnp reference)."""
+    if HAS_JAX and backend != "np":
         return np.asarray(affinity_valid(
             occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem,
             cap_pct, max_conc, backend=backend))
-    if backend not in ("auto", "ref"):
+    if backend not in ("auto", "ref", "np"):
         raise ImportError(f"backend {backend!r} requires JAX")
     F = np.asarray(aff).shape[0]
     if cap_pct is None:

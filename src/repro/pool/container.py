@@ -46,6 +46,8 @@ class Container:
     last_used: float = 0.0  # when it last went idle
     uses: int = 0  # invocations served
     prewarmed: bool = False  # started speculatively; cleared on first hit
+    park_rev: int = 0  # bumped on every park/unpark; lazy expiry entries
+    #                    (WarmPool's janitor heap) validate against it
 
     def idle_for(self, now: float) -> float:
         return max(0.0, now - self.last_used)

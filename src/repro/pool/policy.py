@@ -64,6 +64,15 @@ class KeepAlivePolicy:
         """Earliest future time at which ``expired`` may flip true."""
         return c.last_used + self.ttl
 
+    @property
+    def lazy_expiry_ok(self) -> bool:
+        """True when a container's ``next_expiry`` is non-decreasing between
+        recomputations (given a fixed pending set) — the property the warm
+        pool's incremental janitor heap relies on.  Every built-in policy
+        satisfies it except a seasonal-forecast-bound predictive policy,
+        whose predictions can revise downward."""
+        return True
+
 
 class FixedTTLKeepAlive(KeepAlivePolicy):
     """Alias for the base behaviour, exported under its paper-facing name."""
@@ -155,6 +164,12 @@ class PredictiveKeepAlive(AffinityAwareKeepAlive):
     def bind(self, forecast) -> "PredictiveKeepAlive":
         self.forecast = forecast
         return self
+
+    @property
+    def lazy_expiry_ok(self) -> bool:
+        # forecast-driven keep_until can move *earlier* when the estimator
+        # revises a prediction down — the janitor must keep full rescans
+        return self.forecast is None
 
     def _predicted(self, c: Container, now: float) -> bool:
         if self.forecast is None:

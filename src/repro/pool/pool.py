@@ -32,6 +32,8 @@ tag) feeds :class:`repro.pool.policy.AffinityAwareKeepAlive`.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple, Union
 
 from .container import Container, ContainerState
@@ -77,9 +79,23 @@ class WarmPool:
         self.on_cooled = on_cooled
         self.metrics = PoolMetrics()
         self._idle: Dict[Tuple[str, str], List[Container]] = {}
+        # function -> workers holding idle containers for it (the inverted
+        # index warmth_row serves from; counts mirror _idle list lengths)
+        self._fn_workers: Dict[str, Dict[str, int]] = {}
         self._busy: Dict[str, Container] = {}
         self._unpooled: set = set()  # cids destroyed on release
         self._pending: Dict[str, int] = {}
+        # incremental janitor index: a lazy min-heap of candidate expiries
+        # (entries carry the container's park_rev; a stale rev means the
+        # container left/re-entered the idle set since the push) plus a
+        # parking lot for never-expiring containers (pending-affine tags),
+        # re-pushed when their tag's pending demand drains.  Keeps
+        # ``next_event`` O(log #idle) amortised instead of a full scan per
+        # release — only usable while the policy's expiries are monotone
+        # (``lazy_expiry_ok``).
+        self._expiry_heap: List[Tuple[float, int, Container, int]] = []
+        self._expiry_deferred: Dict[str, List[Tuple[Container, int]]] = {}
+        self._expiry_seq = itertools.count()
 
     # ------------------------------------------------------------------ #
     # pending affinity demand
@@ -94,6 +110,7 @@ class WarmPool:
             n = self._pending.get(t, 0) - 1
             if n <= 0:
                 self._pending.pop(t, None)
+                self._flush_deferred(t)
             else:
                 self._pending[t] = n
 
@@ -125,8 +142,12 @@ class WarmPool:
     def _park(self, c: Container, now: float) -> None:
         c.state = ContainerState.IDLE
         c.last_used = now
+        c.park_rev += 1
         lst = self._idle.setdefault((c.worker, c.function), [])
         lst.append(c)
+        by_fn = self._fn_workers.setdefault(c.function, {})
+        by_fn[c.worker] = by_fn.get(c.worker, 0) + 1
+        self._expiry_push(c, now)
         if len(lst) == 1 and self.on_warm is not None:
             self.on_warm(c.worker, c.function, c.tag)
 
@@ -134,6 +155,15 @@ class WarmPool:
         key = (c.worker, c.function)
         lst = self._idle[key]
         lst.remove(c)
+        c.park_rev += 1  # invalidates any janitor-heap / deferred entry
+        by_fn = self._fn_workers.get(c.function, {})
+        n = by_fn.get(c.worker, 0) - 1
+        if n <= 0:
+            by_fn.pop(c.worker, None)
+            if not by_fn:
+                self._fn_workers.pop(c.function, None)
+        else:
+            by_fn[c.worker] = n
         if not lst:
             del self._idle[key]
             if self.on_cooled is not None:
@@ -335,9 +365,62 @@ class WarmPool:
                     out.append(c)
         return out
 
+    def _defer_expiry(self, c: Container, rev: int) -> None:
+        lst = self._expiry_deferred.setdefault(c.tag, [])
+        lst.append((c, rev))
+        if len(lst) > 64:  # drop stale revs so a long-pending tag's list
+            # stays O(#idle containers), not O(parks since it went pending)
+            self._expiry_deferred[c.tag] = [
+                (cc, r) for cc, r in lst
+                if r == cc.park_rev and cc.state == ContainerState.IDLE]
+
+    def _expiry_push(self, c: Container, now: float) -> None:
+        pending = self.pending_tags()
+        t = self.policy.next_expiry(c, now, pending)
+        if t == float("inf"):
+            self._defer_expiry(c, c.park_rev)
+        else:
+            heapq.heappush(self._expiry_heap,
+                           (t, next(self._expiry_seq), c, c.park_rev))
+
+    def _flush_deferred(self, tag: str) -> None:
+        """A tag's pending demand drained: its parked never-expiring
+        containers get finite expiries again — re-push the live ones."""
+        for c, rev in self._expiry_deferred.pop(tag, ()):
+            if rev == c.park_rev and c.state == ContainerState.IDLE:
+                self._expiry_push(c, c.last_used)
+
     def next_event(self, now: float) -> Optional[float]:
         """Earliest future time an idle container can expire (None if the
-        pool is empty or nothing can ever expire without new information)."""
+        pool is empty or nothing can ever expire without new information).
+
+        With a monotone-expiry policy this reads the incremental janitor
+        heap — O(log #idle) amortised; stale entries (container re-parked or
+        gone, or expiry pushed later by pending demand) are discarded or
+        re-filed on pop.  Policies whose expiries can revise *earlier*
+        (seasonal forecasts) fall back to the exact full scan."""
+        if not getattr(self.policy, "lazy_expiry_ok", False):
+            return self._next_event_scan(now)
+        heap = self._expiry_heap
+        pending = self.pending_tags()
+        while heap:
+            t, _, c, rev = heap[0]
+            if rev != c.park_rev or c.state != ContainerState.IDLE:
+                heapq.heappop(heap)
+                continue
+            t2 = self.policy.next_expiry(c, now, pending)
+            if t2 == float("inf"):
+                heapq.heappop(heap)
+                self._defer_expiry(c, rev)
+                continue
+            if t2 > t + 1e-12:
+                heapq.heappop(heap)
+                heapq.heappush(heap, (t2, next(self._expiry_seq), c, rev))
+                continue
+            return max(t, now)
+        return None
+
+    def _next_event_scan(self, now: float) -> Optional[float]:
         pending = self.pending_tags()
         best: Optional[float] = None
         for lst in self._idle.values():
@@ -382,6 +465,24 @@ class WarmPool:
             key = (c.worker, c.function)
             out[key] = out.get(key, 0) + 1
         return out
+
+    def idle_warmth(self, now: float) -> Dict[Tuple[str, str], int]:
+        """Sparse warmth table: ``(worker, function) -> rank`` for every
+        non-empty idle pool — the vectorized counterpart of F x W ``warmth``
+        calls.  Cost is O(#idle (worker, function) keys), i.e. proportional
+        to the pool's residency table (`residency_counts`), not to the
+        cluster; absent keys are rank 0 (cold)."""
+        return {(w, f): self.warmth(f, w, now)
+                for (w, f), lst in self._idle.items() if lst}
+
+    def warmth_row(self, function: str, now: float) -> Dict[str, int]:
+        """One function's warmth column: ``worker -> rank`` over the workers
+        holding an idle container for it (others are rank 0).  The per-
+        decision form of :meth:`idle_warmth` the scheduling session uses —
+        O(workers actually holding ``function``) via the inverted residency
+        index, independent of cluster size."""
+        return {w: self.warmth(function, w, now)
+                for w in self._fn_workers.get(function, ())}
 
     def warmth(self, function: str, worker: str, now: float) -> int:
         """0 = cold, 1 = warm, 2 = hot — the batched path's warmth rank.

@@ -48,10 +48,9 @@ from repro.core import (
     ClusterState,
     Invalidate,
     Registry,
+    SchedulerSession,
     SchedulingFailure,
     TagPolicy,
-    schedule,
-    try_schedule,
 )
 from repro.cluster.topology import CellSpec
 from repro.pool import WarmPool
@@ -131,6 +130,12 @@ class Engine:
         for name, spec in cells.items():
             self.state.add_worker(name, max_memory=spec.hbm_gb)
             self._heartbeat[name] = self.clock()
+        # incremental scheduling data plane: state tensors maintained by
+        # deltas off the ClusterState change feed, compiled rows cached per
+        # synthesised script (scripts for the same request class hash-hit)
+        self.scheduler = SchedulerSession(self.state, self.reg, backend="np",
+                                          pool=pool, clock=self.clock)
+        self._tag_compact_at = self.TAG_COMPACT_THRESHOLD
 
     # ------------------------------------------------------------------ #
     # deployment: model residency tags
@@ -169,10 +174,6 @@ class Engine:
         act = self._warm_acts.pop((cell, fname), None)
         if act is not None:
             self.state.complete(act)
-
-    def _warmth(self, fname: str, cell: str) -> int:
-        assert self.pool is not None
-        return self.pool.warmth(fname, cell, self.clock())
 
     def _container_acquire(self, fname: str, req: Request, cell: str,
                            activation_id: str) -> float:
@@ -273,11 +274,9 @@ class Engine:
         if self.forecast is not None and req.kind != "train" and not req.hedged:
             self.forecast.observe(fname, req.submitted_at)
         script = self._policy_for(req)
-        warmth = None
-        if self.pool is not None and req.kind != "train":
-            warmth = self._warmth
-        cell = try_schedule(fname, self.state.conf(), script, self.reg,
-                            warmth=warmth)
+        # pool-backed warmth ranks (vectorized via WarmPool.warmth_row)
+        warmth = "auto" if req.kind != "train" else None
+        cell = self.scheduler.try_schedule(fname, script=script, warmth=warmth)
         if cell is None:
             comp = Completion(req.rid, "<none>", False, 0.0)
             self.completions.append(comp)
@@ -307,8 +306,8 @@ class Engine:
             # straggler: hedge on any cell but the straggler's own
             hedge = dataclasses.replace(req, hedged=True, rid=req.rid + "-hedge")
             script2 = self._policy_for(hedge, exclude_cell=cell)
-            cell2 = try_schedule(fname, self.state.conf(), script2, self.reg,
-                                 warmth=warmth)
+            cell2 = self.scheduler.try_schedule(fname, script=script2,
+                                                warmth=warmth)
             if cell2 is not None and cell2 != cell:
                 act2 = self.state.allocate(fname, cell2, self.reg)
                 start2 = self._container_acquire(fname, hedge, cell2,
@@ -363,8 +362,21 @@ class Engine:
     def heartbeat(self, cell: str) -> None:
         self._heartbeat[cell] = self.clock()
 
+    # per-session kv tags accumulate in the scheduler's append-only tag
+    # universe; past this size the health tick compacts it (dropped sessions'
+    # columns are reclaimed, caches recompile on demand)
+    TAG_COMPACT_THRESHOLD = 512
+
     def check_health(self) -> List[str]:
         now = self.clock()
+        if len(self.scheduler.tag_index) >= self._tag_compact_at:
+            self.scheduler.compact()
+            self.scheduler.tensors()  # rebuild now: resident tags re-enter
+            # hysteresis: if the index is dominated by *live* tags, compacting
+            # cannot shrink it — back the trigger off so a sustained-high-
+            # concurrency engine doesn't drop every cache on every tick
+            self._tag_compact_at = max(self.TAG_COMPACT_THRESHOLD,
+                                       2 * len(self.scheduler.tag_index))
         if self.pool is not None:
             self.pool.sweep(now)  # piggyback the janitor on the health tick
         dead = [c for c, t in self._heartbeat.items()

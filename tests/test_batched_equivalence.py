@@ -15,6 +15,7 @@ from repro.core import (
     CompiledPolicies,
     Invalidate,
     Registry,
+    SchedulerSession,
     TagPolicy,
     schedule_wave,
     try_schedule,
@@ -111,6 +112,34 @@ def _check_seed(seed: int, with_warmth: bool) -> None:
         f"seed={seed} warmth={with_warmth}: {res.assignments} != {expected}")
 
 
+def _check_seed_session(seed: int, with_warmth: bool) -> None:
+    """Same sweep through the *incremental* data plane: a SchedulerSession
+    over a live ClusterState must match the scalar loop decision for
+    decision, with allocations flowing back as tensor deltas."""
+    rng = random.Random(seed)
+    script = random_script(rng)
+    state, reg = random_cluster(rng)
+    fs = [f"fn_{rng.choice(TAGS)}" for _ in range(rng.randint(1, 12))]
+    warmth = random_warmth(rng) if with_warmth else None
+
+    ref_state = clone_state(state, reg)
+    ref_rng = random.Random(seed * 7 + 1)
+    expected = []
+    for f in fs:
+        w = try_schedule(f, ref_state.conf(), script, reg, rng=ref_rng,
+                         warmth=warmth)
+        expected.append(w)
+        if w is not None:
+            ref_state.allocate(f, w, reg)
+
+    session = SchedulerSession(state, reg, script)
+    # wave mode against the live state (deltas applied between decisions)
+    res = session.schedule_wave(fs, rng=random.Random(seed * 7 + 1),
+                                warmth=warmth, apply_to=state)
+    assert res.assignments == expected, (
+        f"seed={seed} warmth={with_warmth}: {res.assignments} != {expected}")
+
+
 def test_wave_equals_scalar_loop():
     for seed in range(60):
         _check_seed(seed, with_warmth=False)
@@ -119,6 +148,37 @@ def test_wave_equals_scalar_loop():
 def test_wave_equals_scalar_loop_with_warmth_rank():
     for seed in range(60):
         _check_seed(seed, with_warmth=True)
+
+
+def test_session_wave_equals_scalar_loop():
+    for seed in range(60):
+        _check_seed_session(seed, with_warmth=False)
+
+
+def test_session_wave_equals_scalar_loop_with_warmth_rank():
+    for seed in range(60):
+        _check_seed_session(seed, with_warmth=True)
+
+
+def test_session_scheduler_fn_equals_scalar_under_churn():
+    """scheduler_fn style: one decision at a time, the caller allocates and
+    completes between decisions — the session must track every delta."""
+    for seed in range(40):
+        rng = random.Random(seed + 500)
+        script = random_script(rng)
+        state, reg = random_cluster(rng)
+        session = SchedulerSession(state, reg, script)
+        ref_rng, got_rng = random.Random(seed), random.Random(seed)
+        live = []
+        for step in range(15):
+            f = f"fn_{rng.choice(TAGS)}"
+            want = try_schedule(f, state.conf(), script, reg, rng=ref_rng)
+            got = session.try_schedule(f, rng=got_rng)
+            assert got == want, (seed, step, got, want)
+            if got is not None:
+                live.append(state.allocate(f, got, reg).activation_id)
+            if live and rng.random() < 0.4:
+                state.complete(live.pop(rng.randrange(len(live))))
 
 
 def test_warmth_narrows_to_hottest_tier():

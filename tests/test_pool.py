@@ -324,3 +324,58 @@ def test_engine_hedge_excludes_only_straggler_cell():
     d = eng.submit(Request(model="m1", kind="decode", session="s"))
     assert d.ok and d.hedge_won
     assert eng.completions[-1].cell == home  # original cell recorded
+
+
+def test_warmth_row_and_idle_warmth_match_scalar_warmth():
+    """The sparse warmth views (what SchedulerSession consumes) agree with
+    F x W scalar warmth() calls at every rank tier."""
+    pool = WarmPool(make_policy("fixed_ttl", ttl=30.0), hot_window=1.0)
+    now = 0.0
+    for w, f, release_at in [("w1", "f1", 0.0), ("w1", "f2", 5.0),
+                             ("w2", "f1", 9.8)]:
+        c, _, _ = pool.acquire(f, w, release_at, memory=64.0, tag=f)
+        pool.release(c.cid, release_at)
+    pool.prewarm("f3", "w2", 9.9, memory=64.0, tag="f3")
+    now = 10.0
+    workers, fns = ("w1", "w2", "w3"), ("f1", "f2", "f3", "f4")
+    sparse = pool.idle_warmth(now)
+    for f in fns:
+        row = pool.warmth_row(f, now)
+        for w in workers:
+            want = pool.warmth(f, w, now)
+            assert row.get(w, 0) == want
+            assert sparse.get((w, f), 0) == want
+    # tiers actually exercised: hot (within window), warm (aged), prewarmed
+    assert pool.warmth("f1", "w2", now) == 2  # idle 0.2s <= hot_window
+    assert pool.warmth("f1", "w1", now) == 1  # idle 10s: paused
+    assert pool.warmth("f3", "w2", now) == 1  # prewarmed serves at warm
+    assert pool.warmth("f4", "w1", now) == 0
+
+
+def test_lazy_janitor_heap_matches_full_scan():
+    """next_event's incremental heap returns exactly what the exhaustive
+    scan computes, through park/acquire/pending/evict churn."""
+    for policy_name in ("fixed_ttl", "mru", "affinity"):
+        rng = random.Random(13)
+        pool = WarmPool(make_policy(policy_name, ttl=3.0), budget_mb=512.0,
+                        hot_window=1.0)
+        now, held = 0.0, []
+        for _ in range(150):
+            now += rng.random()
+            op = rng.random()
+            if op < 0.4:
+                c, _, _ = pool.acquire(rng.choice(["f1", "f2"]),
+                                       rng.choice(["w1", "w2"]), now,
+                                       memory=64.0, tag=rng.choice(["a", "b"]))
+                held.append(c.cid)
+            elif op < 0.7 and held:
+                pool.release(held.pop(rng.randrange(len(held))), now)
+            elif op < 0.8:
+                pool.pending_add([rng.choice(["a", "b"])])
+            elif op < 0.9:
+                pool.pending_done([rng.choice(["a", "b"])])
+            else:
+                pool.sweep(now)
+            a, b = pool.next_event(now), pool._next_event_scan(now)
+            assert (a is None) == (b is None), (policy_name, a, b)
+            assert a is None or abs(a - b) < 1e-9, (policy_name, a, b)

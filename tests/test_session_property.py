@@ -1,0 +1,217 @@
+"""Property tests (hypothesis) for the incremental scheduling data plane.
+
+Two invariants carry the whole ``SchedulerSession`` design:
+
+* **delta exactness** — replaying any interleaving of allocate / release /
+  add-worker / fail-worker deltas onto ``StateTensors`` yields tensors
+  bit-identical to ``StateTensors.from_conf`` of the final conf (the session
+  never has to rebuild to stay correct);
+* **decision exactness** — a session's decisions against its delta-maintained
+  tensors are identical to the scalar Listing-1 reference evaluated on a
+  fresh ``conf`` at every step, including the warmth tie-break.
+"""
+import random
+
+import pytest
+
+try:  # the @given sweep needs hypothesis (CI installs it); the deterministic
+    # tests below run everywhere
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.core import (
+    ClusterState,
+    Registry,
+    SchedulerSession,
+    StateTensors,
+    try_schedule,
+)
+from tests.test_batched_equivalence import TAGS, random_script
+
+MEMS = [1.0, 10.0, 30.0, 0.3, 0.7]  # incl. f32-inexact values
+CAPS = [20.0, 50.0, 100.0]
+
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def churn_programs(draw):
+        """A list of state-mutation op names."""
+        n_steps = draw(st.integers(5, 40))
+        return [draw(st.sampled_from(["add", "alloc", "release", "fail",
+                                      "schedule"]))
+                for _ in range(n_steps)]
+
+
+def _registry(rng: random.Random) -> Registry:
+    reg = Registry()
+    for t in TAGS:
+        reg.register(f"fn_{t}", memory=rng.choice(MEMS), tag=t)
+    return reg
+
+
+def _apply_program(ops, seed):
+    """Drives a ClusterState through the program with a session attached;
+    returns (state, reg, session, scalar-vs-session decision log)."""
+    rng = random.Random(seed)
+    script = random_script(rng)
+    state = ClusterState()
+    reg = _registry(rng)
+    session = SchedulerSession(state, reg, script)
+    session.tensors()  # build early: every mutation below is a delta
+    live = []
+    n_workers = 0
+    decisions = []
+    for op in ops:
+        if op == "add" or n_workers == 0:
+            state.add_worker(f"w{n_workers}", max_memory=rng.choice(CAPS))
+            n_workers += 1
+        elif op == "alloc":
+            f = f"fn_{rng.choice(TAGS)}"
+            workers = state.workers()
+            if workers:
+                w = rng.choice(workers)
+                view = state.conf()[w]
+                if view.memory_used + reg[f].memory <= view.max_memory:
+                    live.append(state.allocate(f, w, reg).activation_id)
+        elif op == "release" and live:
+            state.complete(live.pop(rng.randrange(len(live))))
+        elif op == "fail" and state.workers():
+            gone = rng.choice(state.workers())
+            state.fail_worker(gone)
+            alive = {a.activation_id for a in state.active_activations()}
+            live = [a for a in live if a in alive]
+        elif op == "schedule":
+            f = f"fn_{rng.choice(TAGS)}"
+            r1, r2 = random.Random(seed + 99), random.Random(seed + 99)
+            got = session.try_schedule(f, rng=r1)
+            want = try_schedule(f, state.conf(), script, reg, rng=r2)
+            decisions.append((got, want))
+    return state, reg, session, decisions
+
+
+def _check_program(ops, seed):
+    state, reg, session, decisions = _apply_program(ops, seed)
+    fresh = StateTensors.from_conf(state.conf(), session.tag_index)
+    assert session.tensors().equals(fresh)
+    for got, want in decisions:
+        assert got == want
+    # every mutation flowed through the change feed: no rebuild beyond the
+    # initial from_state (workers re-joining their old conf slot excepted,
+    # and this program never re-adds a failed worker id)
+    assert session.stats["rebuilds"] <= 1
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(ops=churn_programs(), seed=st.integers(0, 2**16))
+    def test_delta_interleavings_equal_fresh_snapshot(ops, seed):
+        _check_program(ops, seed)
+
+
+def test_delta_interleavings_seeded_sweep():
+    """hypothesis-free fallback: the same property over seeded random
+    programs, so minimal environments still exercise the delta paths."""
+    for seed in range(30):
+        rng = random.Random(seed * 31)
+        ops = [rng.choice(["add", "alloc", "release", "fail", "schedule"])
+               for _ in range(rng.randint(5, 40))]
+        _check_program(ops, seed)
+
+
+def test_rejoining_worker_keeps_conf_slot():
+    """A worker that fails and re-joins keeps its original conf position —
+    the session detects the reuse, invalidates, and rebuilds correctly."""
+    state = ClusterState()
+    reg = Registry()
+    reg.register("fn_a", memory=1.0, tag="a")
+    for w in ("w0", "w1", "w2"):
+        state.add_worker(w, max_memory=10.0)
+    session = SchedulerSession(state, reg)
+    session.tensors()
+    state.fail_worker("w1")
+    assert session.tensors().workers == ("w0", "w2")
+    state.add_worker("w1", max_memory=10.0)  # re-join: original slot
+    assert tuple(state.conf().keys()) == ("w0", "w1", "w2")
+    assert session.tensors().workers == ("w0", "w1", "w2")
+    fresh = StateTensors.from_conf(state.conf(), session.tag_index)
+    assert session.tensors().equals(fresh)
+
+
+def test_scratch_wave_leaves_live_tensors_untouched():
+    rng = random.Random(7)
+    script = random_script(rng)
+    state = ClusterState()
+    reg = _registry(rng)
+    for i in range(4):
+        state.add_worker(f"w{i}", max_memory=100.0)
+    session = SchedulerSession(state, reg, script)
+    before = session.tensors().copy()
+    fs = [f"fn_{rng.choice(TAGS)}" for _ in range(10)]
+    session.schedule_wave(fs, rng=random.Random(1))  # apply_to=None: scratch
+    assert session.tensors().equals(before)
+    # and a live wave (apply_to=state) matches the scalar loop exactly
+    ref_state = ClusterState()
+    for i in range(4):
+        ref_state.add_worker(f"w{i}", max_memory=100.0)
+    expected = []
+    ref_rng = random.Random(2)
+    for f in fs:
+        w = try_schedule(f, ref_state.conf(), script, reg, rng=ref_rng)
+        expected.append(w)
+        if w is not None:
+            ref_state.allocate(f, w, reg)
+    res = session.schedule_wave(fs, rng=random.Random(2), apply_to=state)
+    assert res.assignments == expected
+
+
+def test_session_matches_scalar_on_f32_inexact_memories():
+    """The scalar reference compares memory in python floats (f64); the
+    session must too.  max_memory=0.9 with three 0.3-memory residents is the
+    canonical trap: f32 arithmetic rejects the third allocation that f64
+    (and Listing 1) accepts."""
+    state = ClusterState()
+    reg = Registry()
+    reg.register("fn_a", memory=0.3, tag="a")
+    state.add_worker("w0", max_memory=0.9)
+    from tests.test_batched_equivalence import AAppScript, Block, TagPolicy
+    script = AAppScript(policies=(
+        TagPolicy(tag="a", blocks=(Block(workers=("*",)),)),))
+    session = SchedulerSession(state, reg, script)
+    for i in range(3):
+        want = try_schedule("fn_a", state.conf(), script, reg)
+        got = session.try_schedule("fn_a")
+        assert got == want == "w0", (i, got, want)
+        state.allocate("fn_a", "w0", reg)
+    # full: 0.3*3 sums to 0.8999999999999999 <= 0.9, a 4th does not fit
+    assert try_schedule("fn_a", state.conf(), script, reg) is None
+    assert session.try_schedule("fn_a") is None
+
+
+def test_compact_reclaims_dead_tag_columns():
+    """Per-session tags accumulate in the append-only index; compact()
+    rebuilds it from live state and decisions stay exact."""
+    rng = random.Random(3)
+    script = random_script(rng)
+    state = ClusterState()
+    reg = _registry(rng)
+    for i in range(3):
+        state.add_worker(f"w{i}", max_memory=100.0)
+    session = SchedulerSession(state, reg, script)
+    for i in range(50):  # churn of short-lived per-session tags
+        reg.register(f"kv-{i}", memory=1.0, tag=f"kv:{i}")
+        act = state.allocate(f"kv-{i}", "w0", reg)
+        session.try_schedule(f"fn_{rng.choice(TAGS)}")
+        state.complete(act.activation_id)
+    grown = len(session.tag_index)
+    assert grown >= 50  # every dead session tag still holds a column
+    session.compact()
+    assert len(session.tag_index) < grown - 40  # columns reclaimed
+    fresh = StateTensors.from_conf(state.conf(), session.tag_index)
+    assert session.tensors().equals(fresh)
+    r1, r2 = random.Random(9), random.Random(9)
+    for _ in range(8):
+        f = f"fn_{rng.choice(TAGS)}"
+        assert session.try_schedule(f, rng=r1) == \
+            try_schedule(f, state.conf(), script, reg, rng=r2)

@@ -1,0 +1,164 @@
+"""The two processor-sharing cores of :class:`ClusterSim`.
+
+* **agreement** — the O(log n) virtual-time core and the legacy full-scan
+  core produce identical invocation records (function, worker, start kind)
+  and latencies equal to float noise on every workload scenario;
+* **conservation** — per-worker delivered cpu-seconds equal submitted task
+  work on both cores (the lazy advancement bookkeeping is exact);
+* **event economy** — the virtual core schedules no more completion events
+  than the legacy core, and the legacy core's stale-ETA token fix keeps the
+  completion-event count linear in the task count (the pre-fix code let a
+  stale event re-enter ``_reschedule_completions`` and push a duplicate
+  event for the same task — a churn cascade);
+* **session locality keying** — ``db_connect`` charges per
+  *(worker, replica zone)*, not per worker.
+"""
+import random
+
+import pytest
+
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import paper_testbed
+from repro.core import SchedulerSession, parse
+from repro.workload import (
+    COMPUTE_S,
+    SCENARIOS,
+    TraceWorkload,
+    build_trace,
+    register_functions,
+)
+
+SCRIPT = """
+api:
+  workers: *
+  strategy: random
+img:
+  workers: *
+  strategy: random
+etl:
+  workers: *
+  strategy: random
+d:
+  workers: *
+  strategy: random
+i:
+  workers: *
+  strategy: random
+  affinity: [d]
+"""
+
+
+def _run_trace(scenario: str, engine: str, *, duration=40.0, rate=2.0, seed=0):
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=seed, engine=engine)
+    register_functions(sim.registry)
+    script = parse(SCRIPT)
+    rng = random.Random(seed + 1)
+    session = SchedulerSession(sim.state, sim.registry, script,
+                               clock=lambda: sim.now)
+    wl = TraceWorkload(sim, lambda f: session.try_schedule(f, rng=rng),
+                       COMPUTE_S, script=script)
+    wl.load(build_trace(scenario, duration=duration, rate=rate, seed=seed))
+    sim.run()
+    return sim, wl
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_engines_agree_on_every_scenario(scenario):
+    sims = {e: _run_trace(scenario, e) for e in ("legacy", "virtual")}
+    (lg_sim, lg_wl), (vt_sim, vt_wl) = sims["legacy"], sims["virtual"]
+    assert [(r.function, r.worker, r.start_kind) for r in lg_wl.records] == \
+           [(r.function, r.worker, r.start_kind) for r in vt_wl.records]
+    for a, b in zip(lg_wl.records, vt_wl.records):
+        assert a.latency == pytest.approx(b.latency, abs=1e-9)
+    # satellite: event counts drop under the virtual core (per-worker token
+    # arming vs a global re-arm on every membership change)
+    assert (vt_sim.stats["completion_pushes"]
+            <= lg_sim.stats["completion_pushes"])
+
+
+@pytest.mark.parametrize("engine", ["legacy", "virtual"])
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_conservation_of_work(scenario, engine):
+    """Total compute delivered per worker == total task work submitted."""
+    sim, wl = _run_trace(scenario, engine)
+    assert not sim.has_compute()
+    total_sub = 0.0
+    for w in sim.workers:
+        d, s = sim.delivered_work(w), sim.submitted_work(w)
+        total_sub += s
+        assert d == pytest.approx(s, rel=1e-9, abs=1e-9), (w, d, s)
+    assert total_sub > 0.0  # the trace actually exercised the cores
+
+
+@pytest.mark.parametrize("engine", ["legacy", "virtual"])
+def test_completion_event_churn_is_linear(engine):
+    """Pin the stale-ETA-token fix: staggered arrivals on one shared worker
+    repeatedly change rates, which in the pre-fix legacy core made every
+    stale event re-push a duplicate completion for the same earliest task.
+    With the token guard, completion pushes stay <= one per rate change
+    (task add / task finish / float under-run)."""
+    workers = {k: v for k, v in paper_testbed().items() if k == "workereu2"}
+    sim = ClusterSim(workers, SimParams(), seed=0, engine=engine)
+    N = 40
+    done = []
+    for i in range(N):
+        sim.at(0.1 * i, lambda i=i: sim.compute(
+            "api", "workereu2", 1.0, f"a{i}", lambda i=i: done.append(i)))
+    sim.run()
+    assert len(done) == N
+    pushes = sim.stats["completion_pushes"]
+    assert pushes <= 2 * N + 5, (engine, sim.stats)
+    # stale drops happen (rates changed) but never re-arm a duplicate
+    assert sim.stats["stale_completions"] <= pushes
+
+
+def test_virtual_core_batches_equal_finishes():
+    """Tasks finishing at the same virtual instant complete in one event,
+    in submission order."""
+    workers = {k: v for k, v in paper_testbed().items() if k == "workereu2"}
+    sim = ClusterSim(workers, SimParams(), seed=0, engine="virtual")
+    order = []
+    for i in range(4):
+        sim.compute("api", "workereu2", 1.0, f"a{i}",
+                    lambda i=i: order.append(i))
+    sim.run()
+    assert order == [0, 1, 2, 3]
+    # 2 vCPUs, 4 equal tasks of 1 cpu-second: all finish at t = 2.0
+    assert sim.now == pytest.approx(2.0)
+
+
+def test_db_connect_keys_by_replica_zone():
+    """§II session locality: one session per (worker, replica).  The worker's
+    first connection to each replica pays conn_setup; reuse is free; another
+    worker shares nothing."""
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=0)
+    p = sim.p
+    assert sim.db_connect("workereu2") == p.conn_setup  # local (eu) replica
+    assert sim.db_connect("workereu2") == 0.0  # session reuse
+    assert sim.db_connect("workereu2", "us") == p.conn_setup  # other replica
+    assert sim.db_connect("workereu2", "us") == 0.0
+    assert sim.db_connect("workereu2", "eu") == 0.0  # still the same session
+    assert sim.db_connect("workereu3") == p.conn_setup  # per worker
+
+
+def test_small_node_pressure_counter_matches_scan():
+    """The O(1) pressure counter equals a recomputed scan at every event."""
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=0, engine="virtual")
+
+    def scan():
+        n = 0
+        for w, vw in sim._vw.items():
+            if sim.workers[w].vcpus <= 1:
+                n += sum(1 for (_vf, _id, t) in vw.heap
+                         if not t.fname.startswith("heavy"))
+        return n
+
+    checks = []
+    for i, (w, fn) in enumerate([("workereu1", "api"), ("workereu1", "heavy_x"),
+                                 ("workereu2", "api"), ("workerus1", "etl")]):
+        sim.at(0.05 * i, lambda w=w, fn=fn: (
+            sim.compute(fn, w, 0.5, f"p{w}{fn}", lambda: None),
+            checks.append(sim._small_node_pressure() == scan())))
+    sim.run()
+    assert checks and all(checks)
+    assert sim._small_node_pressure() == 0
