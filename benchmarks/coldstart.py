@@ -39,8 +39,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cluster.simulator import ClusterSim, SimParams
 from repro.cluster.topology import paper_testbed
-from repro.core import SchedulerSession, parse
 from repro.forecast import ArrivalForecast, ForecastPlanner, PlanConfig
+from repro.platform import Platform
 from repro.pool import StartCosts, WarmPool, make_policy
 from repro.workload import (
     COMPUTE_S,
@@ -91,7 +91,10 @@ def run_one(scenario: str, policy_name: str, seed: int) -> Dict:
     sim = ClusterSim(paper_testbed(), SimParams(), seed=seed, pool=pool,
                      plan_interval=PLAN_INTERVAL, migrate_cost=MIGRATE_COST)
     register_functions(sim.registry)
-    script = parse(SCRIPT)
+    # the unified facade fronts the whole stack: one compile-pipeline pass
+    # (parse -> resolve -> validate -> lower) and the incremental session
+    # (bit-identical decisions to the scalar try_schedule reference)
+    platform = Platform.for_sim(sim, SCRIPT)
     forecast = None
     if policy_name == "predictive":
         # the diurnal trace's period is known to operators (a day); the other
@@ -99,21 +102,13 @@ def run_one(scenario: str, policy_name: str, seed: int) -> Dict:
         forecast = ArrivalForecast(
             tau=EWMA_TAU,
             seasonal_period=DURATION / 2.0 if scenario == "diurnal" else None)
-        forecast.seed_affinity(script, sim.registry)
+        forecast.seed_affinity(platform.script, sim.registry)
         policy.bind(forecast)
-        sim.planner = ForecastPlanner(forecast, script, sim.registry,
-                                      PlanConfig())
+        sim.planner = ForecastPlanner(forecast, platform.compiled,
+                                      sim.registry, PlanConfig())
     rng = random.Random(seed + 1)
-    # incremental data plane: compiled rows + delta-maintained state tensors
-    # (bit-identical decisions to the scalar try_schedule reference)
-    session = SchedulerSession(sim.state, sim.registry, script,
-                               pool=pool, clock=lambda: sim.now)
-
-    def scheduler(f: str):
-        return session.try_schedule(f, rng=rng)
-
-    wl = TraceWorkload(sim, scheduler, COMPUTE_S, script=script,
-                       forecast=forecast)
+    wl = TraceWorkload(sim, platform.placer(rng), COMPUTE_S,
+                       script=platform.script, forecast=forecast)
     wl.load(build_trace(scenario, duration=DURATION, rate=RATE, seed=seed))
     sim.run()
 

@@ -10,17 +10,20 @@ Measures per-decision scheduling latency as workers grow, three ways:
   dirtied inside the wave.  Timed warm (an untimed same-shape call first):
   the historical 0.07x-at-64-workers number in ``artifacts/`` conflated a
   jit compile in the timed region with steady-state cost;
-* **session** — the incremental data plane (`SchedulerSession`): state
-  tensors maintained by deltas off the ClusterState change feed, compiled
-  rows cached per tag, each decision one pure-numpy batched ``valid`` against
-  the live tensors.  Reported twice: decisions against a fixed state
-  (comparable to the scalar column) and under allocate/release churn between
-  decisions (delta upkeep included).
+* **session** — the incremental data plane (`SchedulerSession`), driven
+  through the **`repro.platform.Platform` facade** (`Platform.decide`, i.e.
+  the v2 compile pipeline + structured `Decision` results on every call):
+  state tensors maintained by deltas off the ClusterState change feed,
+  compiled rows cached per tag, each decision one pure-numpy batched
+  ``valid`` against the live tensors.  Reported twice: decisions against a
+  fixed state (comparable to the scalar column) and under allocate/release
+  churn between decisions (delta upkeep included).
 
 Writes ``BENCH_scheduler.json`` at the repo root (plus the historical
 ``artifacts/scheduler_scale.json`` rows).  Headline criteria: the session
-path must beat the scalar reference at *every* measured W — including W=64,
-where the wave path loses — and beat the wave path everywhere.
+path — *including* the facade's per-decision Decision construction — must
+beat the scalar reference at *every* measured W (the old wave path lost at
+W=64) and beat the wave path everywhere.
 """
 from __future__ import annotations
 
@@ -35,11 +38,11 @@ from repro.core import (
     ClusterState,
     CompiledPolicies,
     Registry,
-    SchedulerSession,
     parse,
     schedule_wave,
     try_schedule,
 )
+from repro.platform import Platform
 
 SCRIPT_TMPL = """
 lat:
@@ -134,14 +137,16 @@ def _bench_one(W: int, wave: int) -> Dict:
                   warmth=warmth)
     batched_us = (time.perf_counter() - t0) / len(fs) * 1e6
 
-    # session-incremental: fixed-state decisions (scalar-comparable)
-    session = SchedulerSession(st, reg, script, pool=res)
+    # session-incremental via the Platform facade: fixed-state decisions
+    # (scalar-comparable).  Every timed call pays the full v2 API tax —
+    # facade dispatch + structured Decision construction.
+    platform = Platform(SCRIPT_TMPL, cluster=st, registry=reg, pool=res)
     for f in fs[:8]:
-        session.try_schedule(f, rng=random.Random(3))  # warm row/tensor caches
+        platform.decide(f, rng=random.Random(3))  # warm row/tensor caches
     rng = random.Random(3)
     t0 = time.perf_counter()
     for f in fs:
-        session.try_schedule(f, rng=rng)
+        platform.decide(f, rng=rng)
     session_us = (time.perf_counter() - t0) / len(fs) * 1e6
 
     # session under churn: every decision is recorded in the state (delta
@@ -150,13 +155,13 @@ def _bench_one(W: int, wave: int) -> Dict:
     t0 = time.perf_counter()
     acts = []
     for f in fs:
-        w = session.try_schedule(f, rng=rng)
-        if w is not None:
-            acts.append(st.allocate(f, w, reg).activation_id)
+        d = platform.decide(f, rng=rng)
+        if d.worker is not None:
+            acts.append(st.allocate(f, d.worker, reg).activation_id)
     for a in acts:
         st.complete(a)
     churn_us = (time.perf_counter() - t0) / len(fs) * 1e6
-    session.close()
+    platform.close()
 
     return {
         "workers": W,
@@ -197,7 +202,8 @@ def write_bench(rows: Sequence[Dict], path: Optional[Path] = None) -> Path:
     out = {
         "bench": "scheduler_scale",
         "params": {"wave": WAVE, "occupancy": 0.5, "warm_frac": WARM_FRAC,
-                   "batched_backend": "ref", "session_backend": "np"},
+                   "batched_backend": "ref", "session_backend": "np",
+                   "session_path": "Platform.decide (v2 facade)"},
         "rows": rows,
         "criteria": evaluate(rows),
     }

@@ -43,7 +43,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cluster.simulator import ClusterSim, SimParams
 from repro.cluster.topology import WorkerSpec, paper_testbed
-from repro.core import SchedulerSession, parse
+from repro.platform import Platform
 from repro.pool import StartCosts, WarmPool, make_policy
 from repro.workload import (
     COMPUTE_S,
@@ -77,12 +77,10 @@ def run_one(scenario: str, engine: str, *, scale: int, duration: float,
     sim = ClusterSim(scaled_testbed(scale), SimParams(), seed=seed,
                      pool=pool, engine=engine)
     register_functions(sim.registry)
-    script = parse(SCRIPT)
+    platform = Platform.for_sim(sim, SCRIPT)  # compile pipeline + session
     rng = random.Random(seed + 1)
-    session = SchedulerSession(sim.state, sim.registry, script,
-                               pool=pool, clock=lambda: sim.now)
-    wl = TraceWorkload(sim, lambda f: session.try_schedule(f, rng=rng),
-                       COMPUTE_S, script=script)
+    wl = TraceWorkload(sim, platform.placer(rng), COMPUTE_S,
+                       script=platform.script)
     wl.load(build_trace(scenario, duration=duration, rate=rate, seed=seed))
     t0 = time.perf_counter()
     sim.run()

@@ -1,15 +1,17 @@
-"""Quickstart: the aAPP language end-to-end in 60 lines.
+"""Quickstart: the aAPP v2 API end-to-end in ~70 lines.
 
-Parses the paper's Fig. 5 script, schedules a divide/impera/heavy workload on
-a 6-worker cluster with the exact Listing-1 semantics, and shows the state
-tables updating on completions.
+One `Platform` facade fronts the whole stack: the script goes through the
+compile pipeline (parse -> resolve -> validate -> lower), decisions come
+back as structured `Decision` objects, `explain()` shows per-worker
+rejection reasons, and the pluggable strategy registry supplies
+`least_loaded` next to the paper's `best_first`/`random`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import random
+from repro.platform import Platform
 
-from repro.core import ClusterState, Registry, parse, schedule
-
+# the paper's Fig. 5 script (stylised YAML: bare `*` and `!tag` both parse),
+# plus an `api` tag using the new least_loaded strategy
 SCRIPT = """
 d:
   workers: *
@@ -23,45 +25,56 @@ h_eu:
   workers: [workereu1]
 h_us:
   workers: [workerus1]
+api:
+  workers: *
+  strategy: least_loaded
 """
 
 
 def main():
-    script = parse(SCRIPT)
-    state = ClusterState()
-    for w in ["workereu1", "workereu2", "workereu3",
-              "workerus1", "workerus2", "workerus3"]:
-        state.add_worker(w, max_memory=2048)
-
-    reg = Registry()
-    reg.register("divide", memory=256, tag="d")
-    reg.register("impera", memory=192, tag="i")
-    reg.register("heavy_eu", memory=512, tag="h_eu")
-    reg.register("heavy_us", memory=512, tag="h_us")
-
-    rng = random.Random(0)
+    plat = Platform.from_yaml(
+        SCRIPT,
+        cluster={w: 2048 for w in ["workereu1", "workereu2", "workereu3",
+                                   "workerus1", "workerus2", "workerus3"]},
+        seed=0,  # one seeded rng drives every `strategy: random` draw
+    )
+    plat.register("divide", memory=256, tag="d")
+    plat.register("impera", memory=192, tag="i")
+    plat.register("heavy_eu", memory=512, tag="h_eu")
+    plat.register("heavy_us", memory=512, tag="h_us")
+    plat.register("api", memory=128, tag="api")
 
     # co-tenants first: pinned to the small workers by the script
     for h in ("heavy_eu", "heavy_us"):
-        w = schedule(h, state.conf(), script, reg, rng=rng)
-        state.allocate(h, w, reg)
-        print(f"{h:10s} -> {w}")
+        d = plat.invoke(h)
+        print(f"{h:10s} -> {d.worker}")
 
     # a divide lands on a heavy-free worker (anti-affinity) ...
-    wd = schedule("divide", state.conf(), script, reg, rng=rng)
-    act = state.allocate("divide", wd, reg)
-    print(f"{'divide':10s} -> {wd}   (anti-affine with heavy)")
+    dv = plat.invoke("divide")
+    print(f"{'divide':10s} -> {dv.worker}   (anti-affine with heavy)")
 
     # ... and both imperas co-locate with it (affinity -> session locality)
-    for i in range(2):
-        wi = schedule("impera", state.conf(), script, reg, rng=rng)
-        state.allocate("impera", wi, reg)
-        print(f"{'impera':10s} -> {wi}   (affine with divide)")
-        assert wi == wd
+    for _ in range(2):
+        di = plat.invoke("impera")
+        print(f"{'impera':10s} -> {di.worker}   (affine with divide)")
+        assert di.worker == dv.worker
+
+    # the explain-trace: why every worker was (in)valid for another divide
+    print("\n" + plat.explain("divide").format() + "\n")
+
+    # least_loaded spreads api requests instead of piling onto worker 0
+    api_cells = {plat.invoke("api").worker for _ in range(3)}
+    print(f"{'api x3':10s} -> {sorted(api_cells)}   (least_loaded spread)")
+    assert len(api_cells) == 3
 
     # completion notifications shrink the tables (activeFunctions bookkeeping)
-    state.complete(act.activation_id)
-    print("after divide completes:", dict(state.tag_counts(wd)))
+    plat.complete(dv)
+    print("after divide completes:", dict(plat.state.tag_counts(dv.worker)))
+
+    # hot-swap the policy: reload_script() recompiles into the live session
+    plat.reload_script(SCRIPT.replace("strategy: random", "strategy: warmest"))
+    print("reloaded script; strategies now:",
+          [p.blocks[0].strategy for p in plat.script.policies])
 
 
 if __name__ == "__main__":

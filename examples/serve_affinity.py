@@ -1,31 +1,52 @@
 """Affinity-aware multi-tenant serving demo — the paper's technique as the
 placement layer of an LLM serving engine, with REAL (reduced-config) models
-decoding on CPU.
+decoding on CPU when JAX is available (a lightweight stub runner otherwise,
+so the demo runs in the minimal CI environment too).
 
 Shows:
   1. model-residency affinity (requests follow the weights — cold-start
      avoidance / the paper's code locality);
   2. session KV affinity (decodes stick to their prefill cell — the paper's
      session locality);
-  3. anti-affinity isolation (decode refuses cells running training);
+  3. anti-affinity isolation (decode refuses cells running training), with
+     the engine's explain-trace naming the rejection reason per cell;
   4. failover: a cell dies mid-session, the session re-homes and decoding
      continues;
   5. straggler hedging via self-anti-affinity.
+
+v2 API: the engine is a consumer of the `repro.platform.Platform` facade —
+the platform owns cluster state, registry, seeded rng and the scheduling
+session; the engine plugs its runner and lifecycle on top.
 
 Run:  PYTHONPATH=src python examples/serve_affinity.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
+try:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS
+    from repro.models import init_cache, init_model, model_decode_step
+    HAS_JAX = True
+except Exception:  # minimal environment: numpy-only stub decode
+    HAS_JAX = False
 
 from repro.cluster.topology import two_pod_cells
-from repro.configs import ARCHS
-from repro.models import init_cache, init_model, model_decode_step
+from repro.platform import Platform
 from repro.serve.engine import Engine, Request
 
 
-def main():
+def build_runner():
+    if not HAS_JAX:
+        def runner(req: Request, cell: str):
+            if req.kind == "train":
+                return "train-tick"
+            if req.kind == "prefill":
+                return "cache-ready"
+            return 0  # stub "token"
+        return runner
+
     # two tiny real models, jitted decode steps
     models = {}
     for name, arch in [("gemma", "gemma3-4b"), ("qwen", "qwen3-moe-30b-a3b")]:
@@ -51,13 +72,30 @@ def main():
             return int(jnp.argmax(logits[0]))
         return None
 
-    eng = Engine(two_pod_cells(), runner=runner, heartbeat_timeout=1e9,
-                 hedge_after=None)
+    return runner
+
+
+def main():
+    print(f"runner: {'real reduced-config models (jax)' if HAS_JAX else 'stub (no jax)'}")
+    cells = two_pod_cells()
+
+    # v2 shape: the Platform fronts the stack, the Engine consumes it
+    plat = Platform(cluster={n: spec.hbm_gb for n, spec in cells.items()},
+                    clock=time.monotonic, seed=0)
+    eng = Engine(cells, platform=plat, runner=build_runner(),
+                 heartbeat_timeout=1e9, hedge_after=None)
     eng.deploy("gemma", ["pod0-cell0", "pod0-cell1"], weights_gb=8)
     eng.deploy("qwen", ["pod1-cell0", "pod1-cell1"], weights_gb=60)
 
     tr = eng.submit(Request(model="", kind="train"))
     print(f"train stream        -> {tr.cell}")
+
+    # why does decode refuse the training cell?  ask the explain-trace:
+    probe = eng.explain(Request(model="gemma", kind="decode", session="alice"))
+    reasons = {v.worker: v.reason for bt in probe.trace for v in bt.workers
+               if v.reason}
+    print(f"decode rejections   -> {reasons}  (anti-affinity isolation)")
+    assert reasons.get(tr.cell) == "anti-affinity:train"
 
     p = eng.submit(Request(model="gemma", kind="prefill", session="alice"))
     print(f"prefill alice/gemma -> {p.cell}  (model residency, !train)")

@@ -1,4 +1,11 @@
-"""aAPP — the paper's contribution: language, semantics, state, fast path."""
+"""aAPP — the paper's contribution: language, semantics, state, fast path.
+
+v2 surface: the explicit compile pipeline (:mod:`repro.core.compile`),
+structured :class:`Decision` results (:mod:`repro.core.decision`), the
+pluggable strategy registry (:mod:`repro.core.strategies`) — all fronted by
+:class:`repro.platform.Platform`.  The v1 entry points remain importable;
+``schedule`` is a thin deprecation shim.
+"""
 from .ast import (
     AAppError,
     AAppScript,
@@ -10,7 +17,26 @@ from .ast import (
     default_policy,
 )
 from .parser import parse, parse_file, to_text
-from .scheduler import schedule, try_schedule, valid, candidate_blocks, Warmth
+from .scheduler import (
+    Warmth,
+    candidate_blocks,
+    decide,
+    default_rng,
+    explain,
+    rejection_reason,
+    schedule,
+    seed_default_rng,
+    try_schedule,
+    valid,
+)
+from .decision import BlockTrace, Decision, WorkerVerdict
+from .strategies import (
+    SelectionContext,
+    Strategy,
+    get_strategy,
+    register_strategy,
+    strategy_names,
+)
 from .state import Activation, ClusterState, Conf, Registry, WorkerView, ConcurrencyConflict
 from .baseline import schedule_vanilla, try_schedule_vanilla
 from .batched import (
@@ -22,6 +48,14 @@ from .batched import (
     WaveResult,
     schedule_wave,
 )
+from .compile import (
+    CompiledScript,
+    CompileError,
+    Diagnostic,
+    IR_VERSION,
+    ResolvedPolicy,
+    compile_script,
+)
 
 __all__ = [
     "AAppError", "AAppScript", "Affinity", "Block", "Invalidate", "SchedulingFailure",
@@ -30,4 +64,11 @@ __all__ = [
     "Registry", "WorkerView", "ConcurrencyConflict", "schedule_vanilla",
     "try_schedule_vanilla", "CompiledPolicies", "SchedulerSession", "TagIndex",
     "TagRows", "StateTensors", "schedule_wave", "WaveResult", "Warmth",
+    # v2 surface
+    "decide", "explain", "rejection_reason", "default_rng", "seed_default_rng",
+    "Decision", "BlockTrace", "WorkerVerdict",
+    "Strategy", "SelectionContext", "get_strategy", "register_strategy",
+    "strategy_names",
+    "CompiledScript", "CompileError", "Diagnostic", "IR_VERSION",
+    "ResolvedPolicy", "compile_script",
 ]

@@ -3,8 +3,9 @@
 An aAPP script is an ordered map ``tag -> TagPolicy``.  Each ``TagPolicy`` is an
 ordered list of ``Block``s plus an optional ``followup`` (``default`` | ``fail``,
 default ``default``).  Each ``Block`` selects candidate ``workers`` (explicit ids
-or the wildcard ``*``), a ``strategy`` (``best_first`` | ``any``; the paper's §V
-script also spells ``random`` which is an alias of ``any``), ``invalidate``
+or the wildcard ``*``), a ``strategy`` (any name in the pluggable
+:mod:`repro.core.strategies` registry — the paper's ``best_first`` | ``any``
+(alias ``random``) plus ``least_loaded`` and ``warmest``), ``invalidate``
 options (``capacity_used n%`` | ``max_concurrent_invocations n``) and the novel
 ``affinity`` clause: a list of tag ids (affine) and ``!``-negated tag ids
 (anti-affine).  Affinity is *directional* (footnote 2) — no symmetry is imposed.
@@ -14,18 +15,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .strategies import known_strategy, resolve_strategy_name, strategy_names
+
 WILDCARD = "*"
 DEFAULT_TAG = "default"
 
 STRATEGY_BEST_FIRST = "best_first"
 STRATEGY_ANY = "any"
-_STRATEGY_ALIASES = {
-    "best_first": STRATEGY_BEST_FIRST,
-    "best-first": STRATEGY_BEST_FIRST,
-    "platform": STRATEGY_BEST_FIRST,  # APP legacy alias
-    "any": STRATEGY_ANY,
-    "random": STRATEGY_ANY,  # used in the paper's Fig. 5 script
-}
 
 FOLLOWUP_DEFAULT = "default"
 FOLLOWUP_FAIL = "fail"
@@ -106,8 +102,13 @@ class Block:
     def __post_init__(self):
         if not self.workers:
             raise AAppError("block with empty workers list")
-        if self.strategy not in (STRATEGY_BEST_FIRST, STRATEGY_ANY):
-            raise AAppError(f"unknown strategy {self.strategy!r}")
+        if not known_strategy(self.strategy):
+            raise AAppError(
+                f"unknown strategy {self.strategy!r}; registered: "
+                f"{', '.join(strategy_names())}")
+        canonical = resolve_strategy_name(self.strategy)
+        if canonical != self.strategy:  # normalise aliases (frozen dataclass)
+            object.__setattr__(self, "strategy", canonical)
         if WILDCARD in self.workers and len(self.workers) > 1:
             raise AAppError("'*' cannot be mixed with explicit worker ids")
 
@@ -160,6 +161,15 @@ class AAppScript:
             return self[tag]
         except KeyError:
             return None
+
+    def to_yaml(self, *, stylised: bool = False) -> str:
+        """Serialise back to aAPP source text.  ``stylised=False`` (default)
+        emits strict, quoted YAML; ``stylised=True`` emits the paper's
+        presentation (`workers: *`, bare ``!tag`` anti-affinity terms).
+        Both round-trip: ``parse(s.to_yaml(...)) == s``."""
+        from .parser import to_text  # local import: parser imports this module
+
+        return to_text(self, stylised=stylised)
 
     def referenced_tags(self) -> Dict[str, List[str]]:
         """tag -> tags referenced in its affinity clauses (for validation)."""

@@ -53,8 +53,9 @@ from .ast import (
     STRATEGY_ANY,
     STRATEGY_BEST_FIRST,
 )
-from .scheduler import Warmth, candidate_blocks
+from .scheduler import Warmth, candidate_blocks, default_rng
 from .state import ClusterState, Conf, Registry
+from .strategies import SelectionContext, get_strategy
 from repro.kernels.affinity import NO_CAP, NO_CONC, affinity_valid_np
 
 
@@ -446,7 +447,7 @@ def schedule_wave(
     One batched ``valid`` evaluation against the wave-start snapshot + scalar
     corrections for workers dirtied by earlier assignments in the same wave.
     """
-    rng = rng if rng is not None else random
+    rng = rng if rng is not None else default_rng()
     tag_index = policies.tag_index
     snap = StateTensors.from_conf(conf, tag_index)
     W = len(snap.workers)
@@ -517,6 +518,7 @@ def schedule_wave(
         chosen: Optional[str] = None
         for r in row_of[fi]:
             cb = rows[r][1]
+            strat = get_strategy(cb.strategy)
             # candidate order must match the reference: explicit list order,
             # or conf order for wildcard blocks.
             if cb.wildcard:
@@ -541,22 +543,22 @@ def schedule_wave(
                     # best_first can stop at the first valid worker — with a
                     # warmth column only once the top (hot = 2) tier is hit,
                     # since no later worker can outrank it
-                    if cb.strategy == STRATEGY_BEST_FIRST and (
+                    if strat.first_valid_wins and (
                             warm_rank is None or warm_rank[fi, j] >= 2):
                         candidates = [j]
                         break
                     candidates.append(j)
             if candidates:
-                if warm_rank is not None:
+                if warm_rank is not None and strat.narrow_warmth:
                     # narrow to the warmest tier (same rule as the scalar ref)
                     best_rank = max(int(warm_rank[fi, j]) for j in candidates)
                     candidates = [j for j in candidates
                                   if int(warm_rank[fi, j]) == best_rank]
-                if cb.strategy == STRATEGY_BEST_FIRST:
-                    jj = candidates[0]
-                else:
-                    assert cb.strategy == STRATEGY_ANY
-                    jj = rng.choice(candidates)
+                ctx = SelectionContext(
+                    load=lambda j: int(live_nfn[j]),
+                    warmth=(lambda j: int(warm_rank[fi, j]))
+                    if warm_rank is not None else (lambda j: 0))
+                jj = strat.select(candidates, ctx, rng)
                 chosen = snap.workers[jj]
                 if not dirtied:
                     live_occ = live_occ.copy()
@@ -622,7 +624,7 @@ class SchedulerSession:
     """
 
     def __init__(self, state: ClusterState, reg: Registry,
-                 script: Optional[AAppScript] = None, *,
+                 script=None, *,
                  backend: str = "np", pool=None,
                  clock: Optional[Callable[[], float]] = None,
                  max_cached_scripts: int = 128):
@@ -632,7 +634,7 @@ class SchedulerSession:
         self.pool = pool
         self.clock = clock or (lambda: 0.0)
         self.tag_index = TagIndex([])
-        self._default_script = script
+        self._default_script: Optional[AAppScript] = None
         self._policies: "OrderedDict[AAppScript, CompiledPolicies]" = OrderedDict()
         self._max_cached_scripts = max_cached_scripts
         self._snap: Optional[StateTensors] = None
@@ -644,8 +646,8 @@ class SchedulerSession:
         self._last_pol: Optional[Tuple[AAppScript, CompiledPolicies]] = None
         self.stats = {"decisions": 0, "deltas": 0, "rebuilds": 0, "waves": 0}
         state.add_listener(self._on_event)
-        if script is not None:
-            self.policies_for(script)
+        if script is not None:  # AAppScript or compile.CompiledScript
+            self.set_default_script(script)
 
     def close(self) -> None:
         """Detach from the state's change feed."""
@@ -719,10 +721,36 @@ class SchedulerSession:
 
     # ---- compiled policy cache --------------------------------------------- #
 
-    def policies_for(self, script: Optional[AAppScript] = None) -> CompiledPolicies:
+    def set_default_script(self, script) -> None:
+        """Install (or hot-swap) the session's default script.
+
+        Accepts a plain :class:`AAppScript` or a pre-lowered
+        :class:`repro.core.compile.CompiledScript`.  A compiled script's row
+        banks are adopted wholesale when its tag universe *is* the session's
+        (the `Platform.reload_script` path compiles into the live index) or
+        when the session is still pristine; otherwise only its AST is taken
+        and the rows recompile lazily against the session's own index."""
+        compiled = None
+        if hasattr(script, "ir_version"):  # CompiledScript (no import cycle)
+            compiled = script
+            script = compiled.script
+        if compiled is not None:
+            if compiled.tag_index is not self.tag_index and not self._policies \
+                    and self._snap is None and len(self.tag_index) == 0:
+                self.tag_index = compiled.tag_index  # pristine: adopt universe
+            if compiled.tag_index is self.tag_index:
+                self._policies[script] = compiled.policies
+                self._policies.move_to_end(script)
+        self._default_script = script
+        self._last_pol = None
+        self.policies_for(script)
+
+    def policies_for(self, script=None) -> CompiledPolicies:
         script = script if script is not None else self._default_script
         if script is None:
             raise ValueError("no script: pass one or set a session default")
+        if hasattr(script, "ir_version"):  # CompiledScript per-call override
+            script = script.script
         last = self._last_pol
         if last is not None and last[0] is script:
             return last[1]
@@ -820,42 +848,43 @@ class SchedulerSession:
                 backend=self.backend)  # [B, W]
         warm_vec, warmth_fn = self._resolve_warmth(f, warmth, snap)
         workers = snap.workers
+        n_funcs = snap.n_funcs
+        if warm_vec is not None:
+            rank_of = lambda j: int(warm_vec[j])
+        elif warmth_fn is not None:
+            rank_of = lambda j: int(warmth_fn(f, workers[j]))
+        else:
+            rank_of = lambda j: 0
+        ctx = SelectionContext(load=lambda j: int(n_funcs[j]), warmth=rank_of)
         for b, cb in enumerate(bank.cbs):
             row = valid[b]
+            strat = get_strategy(cb.strategy)
             if cb.wildcard:
                 cand = np.flatnonzero(row)  # conf order
                 if cand.size == 0:
                     continue
-                if warm_vec is not None:
-                    ranks = warm_vec[cand]
-                    best = int(ranks.max())
-                    if best > 0:
-                        cand = cand[ranks == best]
-                elif warmth_fn is not None:
-                    ranks = [warmth_fn(f, workers[j]) for j in cand]
-                    best = max(ranks)
-                    cand = [j for j, r in zip(cand, ranks) if r == best]
-                if cb.strategy == STRATEGY_BEST_FIRST:
-                    return workers[int(cand[0])]
-                assert cb.strategy == STRATEGY_ANY
-                return workers[int(rng.choice(cand))]
+                if strat.narrow_warmth:
+                    if warm_vec is not None:
+                        ranks = warm_vec[cand]
+                        best = int(ranks.max())
+                        if best > 0:
+                            cand = cand[ranks == best]
+                    elif warmth_fn is not None:
+                        ranks = [warmth_fn(f, workers[j]) for j in cand]
+                        best = max(ranks)
+                        cand = [j for j, r in zip(cand, ranks) if r == best]
+                return workers[int(strat.select(cand, ctx, rng))]
             widx = snap.widx
             cand = [widx[w] for w in cb.worker_ids
                     if w in widx and row[widx[w]]]
             if not cand:
                 continue
-            if warm_vec is not None:
-                ranks = [int(warm_vec[j]) for j in cand]
+            if strat.narrow_warmth and (warm_vec is not None
+                                        or warmth_fn is not None):
+                ranks = [rank_of(j) for j in cand]
                 best = max(ranks)
                 cand = [j for j, r in zip(cand, ranks) if r == best]
-            elif warmth_fn is not None:
-                ranks = [warmth_fn(f, workers[j]) for j in cand]
-                best = max(ranks)
-                cand = [j for j, r in zip(cand, ranks) if r == best]
-            if cb.strategy == STRATEGY_BEST_FIRST:
-                return workers[cand[0]]
-            assert cb.strategy == STRATEGY_ANY
-            return workers[rng.choice(cand)]
+            return workers[int(strat.select(cand, ctx, rng))]
         return None
 
     def _wmask(self, pol: CompiledPolicies, tag: str, bank: TagRows,
@@ -883,7 +912,7 @@ class SchedulerSession:
         worker id or ``None``.  Does *not* allocate — callers record the
         decision via ``state.allocate`` and the change feed keeps the
         session's tensors in lockstep."""
-        rng = rng if rng is not None else random
+        rng = rng if rng is not None else default_rng()
         pol = self.policies_for(script)
         snap = self.tensors()
         return self._decide(f, pol, snap, rng, warmth)
@@ -902,7 +931,7 @@ class SchedulerSession:
         """
         if apply_to is not None and apply_to is not self.state:
             raise ValueError("apply_to must be the session's state or None")
-        rng = rng if rng is not None else random
+        rng = rng if rng is not None else default_rng()
         pol = self.policies_for(script)
         self.stats["waves"] += 1
         live = apply_to is not None

@@ -1,0 +1,264 @@
+"""The aAPP v2 compile pipeline: **parse → resolve → validate → lower**.
+
+The seed code conflated these stages: the parser did ad-hoc linting, the
+scalar scheduler re-derived candidate-block chains on every call, and the
+batched layer lowered policies to tensors on first touch.  This module makes
+the pipeline explicit and gives it a versioned product — the
+:class:`CompiledScript` IR — that every consumer shares (the
+:class:`~repro.core.batched.SchedulerSession` adopts its tag universe and
+row banks; the forecast planner walks its resolved block chains; the
+:class:`repro.platform.Platform` facade caches it and hot-swaps it on
+``reload_script``).  Future language growth (zones, soft affinity,
+cost-derived policies) lands as a pass here instead of a cross-cutting
+rewrite.
+
+Stages
+======
+
+1. **parse** — aAPP source text → :class:`~repro.core.ast.AAppScript`
+   (:func:`repro.core.parser.parse`; already-parsed ASTs pass through).
+2. **resolve** — apply the followup/default chaining rule once per tag:
+   each tag's candidate-block chain is its own blocks plus — unless
+   ``followup: fail`` — the ``default`` tag's blocks (synthesised per APP
+   semantics when absent).  This is Listing 1 lines 3-5 hoisted to compile
+   time; :func:`repro.core.scheduler.candidate_blocks` is the same rule
+   applied lazily.
+3. **validate** — static semantic checks over the resolved script.  Errors
+   raise :class:`CompileError` (an :class:`~repro.core.ast.AAppError`);
+   warnings — unreachable blocks shadowed by an unconstrained wildcard
+   block, affinity terms that reference no known tag — are collected as
+   :class:`Diagnostic`\\ s on the result.
+4. **lower** — compile every resolved chain to the numeric row banks the
+   vectorized data plane evaluates (shared append-only
+   :class:`~repro.core.batched.TagIndex` + per-tag
+   :class:`~repro.core.batched.TagRows`), eagerly, so a compiled script is
+   ready for its first decision with no lazy compilation hiccup.
+
+``IR_VERSION`` stamps the product; consumers that persist or exchange
+compiled scripts can reject stale IR after a lowering-format change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple, Union
+
+from .ast import (
+    AAppError,
+    AAppScript,
+    Block,
+    DEFAULT_TAG,
+    FOLLOWUP_FAIL,
+    TagPolicy,
+    default_policy,
+)
+from .batched import CompiledPolicies, TagIndex
+from .parser import parse as _parse_text
+from .state import Registry
+
+IR_VERSION = 2  # v1 = the seed's implicit (script, lazy rows) pairing
+
+SEVERITY_ERROR = "error"
+SEVERITY_WARNING = "warning"
+
+
+class CompileError(AAppError):
+    """Static error detected by the validate stage; carries diagnostics."""
+
+    def __init__(self, diagnostics: Tuple["Diagnostic", ...]):
+        self.diagnostics = diagnostics
+        super().__init__("; ".join(d.message for d in diagnostics))
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    severity: str  # SEVERITY_ERROR | SEVERITY_WARNING
+    tag: Optional[str]
+    message: str
+
+    def __str__(self) -> str:
+        where = f" [tag {self.tag!r}]" if self.tag else ""
+        return f"{self.severity}{where}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPolicy:
+    """One tag's fully-resolved candidate-block chain (followup applied)."""
+
+    tag: str
+    blocks: Tuple[Block, ...]
+    followup: str
+    synthesized: bool = False  # the default policy, absent from the source
+
+
+@dataclasses.dataclass
+class CompiledScript:
+    """The versioned IR: source + AST + resolved chains + lowered rows."""
+
+    ir_version: int
+    script: AAppScript
+    source: Optional[str]  # original text (None for programmatic ASTs)
+    resolved: Dict[str, ResolvedPolicy]  # tag -> chain; always has DEFAULT_TAG
+    diagnostics: Tuple[Diagnostic, ...]  # warnings (errors raise)
+    tag_index: TagIndex
+    policies: CompiledPolicies  # lowered row banks over tag_index
+
+    @property
+    def warnings(self) -> Tuple[Diagnostic, ...]:
+        return tuple(d for d in self.diagnostics
+                     if d.severity == SEVERITY_WARNING)
+
+    def candidate_blocks(self, tag: str) -> Tuple[Block, ...]:
+        """The chain Listing 1 iterates for ``tag`` (unknown tags fall
+        through to the default chain, APP semantics)."""
+        got = self.resolved.get(tag)
+        if got is None:
+            got = self.resolved[DEFAULT_TAG]
+        return got.blocks
+
+    def to_yaml(self, *, stylised: bool = False) -> str:
+        return self.script.to_yaml(stylised=stylised)
+
+
+# --------------------------------------------------------------------------- #
+# stages
+# --------------------------------------------------------------------------- #
+
+
+def parse_stage(source: Union[str, AAppScript]) -> Tuple[AAppScript, Optional[str]]:
+    """Source text (or a pass-through AST) → ``(script, source_text)``."""
+    if isinstance(source, AAppScript):
+        return source, None
+    if not isinstance(source, str):
+        raise AAppError(
+            f"compile_script expects aAPP text or an AAppScript, "
+            f"got {type(source).__name__}")
+    return _parse_text(source), source
+
+
+def resolve(script: AAppScript) -> Dict[str, ResolvedPolicy]:
+    """Apply followup/default chaining to every tag (Listing 1 lines 3-5)."""
+    dp = default_policy(script)
+    out: Dict[str, ResolvedPolicy] = {}
+    for p in script.policies:
+        blocks = p.blocks
+        if p.tag != DEFAULT_TAG and p.followup != FOLLOWUP_FAIL:
+            blocks = blocks + dp.blocks
+        out[p.tag] = ResolvedPolicy(tag=p.tag, blocks=blocks,
+                                    followup=p.followup)
+    if DEFAULT_TAG not in out:
+        out[DEFAULT_TAG] = ResolvedPolicy(
+            tag=DEFAULT_TAG, blocks=dp.blocks, followup=dp.followup,
+            synthesized=True)
+    return out
+
+
+def _unconstrained_wildcard(b: Block) -> bool:
+    """A block no later block can outlive: every worker, no invalidate, no
+    affinity terms.  If it yields no valid worker the only failed check was
+    memory (line 19), which every block applies — so later blocks in the
+    same chain can never yield a worker either."""
+    inv = b.invalidate
+    return (b.is_wildcard and b.affinity.empty
+            and inv.capacity_used is None
+            and inv.max_concurrent_invocations is None)
+
+
+def validate(
+    script: AAppScript,
+    resolved: Dict[str, ResolvedPolicy],
+    reg: Optional[Registry] = None,
+) -> Tuple[Diagnostic, ...]:
+    """Static semantic checks.  Returns warnings; raises
+    :class:`CompileError` when any error-severity diagnostic is found."""
+    diags: List[Diagnostic] = []
+
+    known_tags = set(script.tags)
+    if reg is not None:
+        known_tags |= set(reg.tags())
+
+    for p in script.policies:
+        for b in p.blocks:
+            both = set(b.affinity.affine) & set(b.affinity.anti_affine)
+            if both:
+                diags.append(Diagnostic(
+                    SEVERITY_ERROR, p.tag,
+                    f"tags {sorted(both)} are both affine and anti-affine "
+                    "in the same block (unsatisfiable)"))
+            if reg is not None:
+                for t in (*b.affinity.affine, *b.affinity.anti_affine):
+                    if t not in known_tags:
+                        diags.append(Diagnostic(
+                            SEVERITY_WARNING, p.tag,
+                            f"affinity term {t!r} matches no policy tag and "
+                            "no registered function tag (dynamic residency "
+                            "tags are injected at runtime; a typo never is)"))
+
+    # unreachable blocks: only author-written blocks are checked — an
+    # unconstrained wildcard as a tag's *last* own block legitimately
+    # shadows the appended default chain ("fall through to anything")
+    for p in script.policies:
+        for i, b in enumerate(p.blocks[:-1]):
+            if _unconstrained_wildcard(b):
+                diags.append(Diagnostic(
+                    SEVERITY_WARNING, p.tag,
+                    f"block {i} matches every worker unconditionally; the "
+                    f"{len(p.blocks) - 1 - i} later block(s) of this tag "
+                    "are unreachable"))
+                break
+
+    errors = tuple(d for d in diags if d.severity == SEVERITY_ERROR)
+    if errors:
+        raise CompileError(errors)
+    return tuple(diags)
+
+
+def lower(
+    script: AAppScript,
+    reg: Registry,
+    tag_index: Optional[TagIndex] = None,
+) -> Tuple[TagIndex, CompiledPolicies]:
+    """Compile every tag's chain to row banks over a shared tag universe.
+
+    The universe seeds from the script's own tags + affinity terms only
+    (``TagIndex.ensure_script``) — registry tags enter via state deltas, so
+    long-lived sessions keep :meth:`SchedulerSession.compact` effective.
+    Passing an existing ``tag_index`` lowers into a live session's universe
+    (the ``reload_script`` path)."""
+    tag_index = tag_index if tag_index is not None else TagIndex([])
+    tag_index.ensure_script(script, reg)
+    policies = CompiledPolicies(script, reg, tag_index=tag_index)
+    for tag in (*script.tags, DEFAULT_TAG):  # eager: IR is decision-ready
+        policies.rows_for(tag)
+    return tag_index, policies
+
+
+# --------------------------------------------------------------------------- #
+# driver
+# --------------------------------------------------------------------------- #
+
+
+def compile_script(
+    source: Union[str, AAppScript],
+    reg: Registry,
+    *,
+    tag_index: Optional[TagIndex] = None,
+) -> CompiledScript:
+    """Run the full pipeline; returns the versioned :class:`CompiledScript`.
+
+    Raises :class:`~repro.core.ast.AAppError` (parse) or
+    :class:`CompileError` (validate) on static errors; warnings land in
+    ``.diagnostics`` without failing the compile.
+    """
+    script, text = parse_stage(source)
+    resolved = resolve(script)
+    diagnostics = validate(script, resolved, reg)
+    tag_index, policies = lower(script, reg, tag_index)
+    return CompiledScript(
+        ir_version=IR_VERSION,
+        script=script,
+        source=text,
+        resolved=resolved,
+        diagnostics=diagnostics,
+        tag_index=tag_index,
+        policies=policies,
+    )

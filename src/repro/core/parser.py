@@ -33,8 +33,8 @@ from .ast import (
     FOLLOWUP_DEFAULT,
     FOLLOWUP_FAIL,
     STRATEGY_BEST_FIRST,
-    _STRATEGY_ALIASES,
 )
+from .strategies import known_strategy, resolve_strategy_name, strategy_names
 
 # --------------------------------------------------------------------------- #
 # stylised-YAML pre-processing
@@ -147,9 +147,11 @@ def _parse_block(obj: Any, *, tag: str) -> Block:
         raise AAppError(f"tag {tag!r}: block missing 'workers'")
     workers = _parse_workers(obj["workers"])
     strategy_raw = str(obj.get("strategy", STRATEGY_BEST_FIRST)).strip()
-    strategy = _STRATEGY_ALIASES.get(strategy_raw)
-    if strategy is None:
-        raise AAppError(f"tag {tag!r}: unknown strategy {strategy_raw!r}")
+    if not known_strategy(strategy_raw):
+        raise AAppError(
+            f"tag {tag!r}: unknown strategy {strategy_raw!r}; registered: "
+            f"{', '.join(strategy_names())}")
+    strategy = resolve_strategy_name(strategy_raw)
     invalidate = (
         _parse_invalidate(obj["invalidate"]) if "invalidate" in obj else Invalidate()
     )
@@ -244,8 +246,16 @@ def _lint(script: AAppScript) -> None:
                 )
 
 
-def to_text(script: AAppScript) -> str:
-    """Serialise back to (strict, quoted) YAML — round-trips through parse()."""
+def to_text(script: AAppScript, *, stylised: bool = False) -> str:
+    """Serialise back to YAML — round-trips through parse().
+
+    ``stylised=False`` (default) emits strict, quoted YAML; ``stylised=True``
+    emits the paper's presentation (bare ``workers: *`` and ``!tag``
+    anti-affinity terms), which the pre-processor re-quotes on parse — so
+    both forms satisfy ``parse(to_text(s, ...)) == s``.
+    """
+    star = "*" if stylised else '"*"'
+    bang = (lambda t: f"!{t}") if stylised else (lambda t: f'"!{t}"')
     lines: List[str] = []
     for p in script.policies:
         lines.append(f"{p.tag}:")
@@ -253,7 +263,7 @@ def to_text(script: AAppScript) -> str:
             first = "  - "
             cont = "    "
             if b.is_wildcard:
-                lines.append(f'{first}workers: "*"')
+                lines.append(f"{first}workers: {star}")
             else:
                 lines.append(f"{first}workers:")
                 for w in b.workers:
@@ -276,7 +286,7 @@ def to_text(script: AAppScript) -> str:
                 for t in b.affinity.affine:
                     lines.append(f"{cont}  - {t}")
                 for t in b.affinity.anti_affine:
-                    lines.append(f'{cont}  - "!{t}"')
+                    lines.append(f"{cont}  - {bang(t)}")
         if p.followup != FOLLOWUP_DEFAULT:
             lines.append(f"  - followup: {p.followup}")
     return "\n".join(lines) + "\n"

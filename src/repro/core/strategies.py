@@ -1,0 +1,176 @@
+"""Pluggable selection strategies — the ``strategy:`` clause of an aAPP block.
+
+The paper's grammar fixes two strategies (``best_first`` | ``any``); related
+work grows exactly this axis (topology-aware selection in De Palma et al.'s
+*Topology-aware Serverless Function-Execution Scheduling*, cost-derived
+policies in *Serverless Scheduling Policies based on Cost Analysis*).  This
+module turns the strategy into a registry so new selection rules are one
+class + one ``register_strategy`` call — honoured identically by the scalar
+Listing-1 reference (:mod:`repro.core.scheduler`), the one-shot batched wave
+(:func:`repro.core.batched.schedule_wave`) and the incremental
+:class:`~repro.core.batched.SchedulerSession` (bit-equality is
+property-tested in ``tests/test_strategies.py``).
+
+A strategy selects one candidate from a block's *valid* worker list (Listing
+1 line 10 onwards): validity is never a strategy concern.  Candidates arrive
+in the reference order (explicit list order, or conf order for ``*``), and
+the strategy reads per-candidate signals through a
+:class:`SelectionContext` — resident-instance load and container-pool warmth
+rank — so the same ``select`` body runs on worker names (scalar path) and on
+tensor column indices (batched/session paths):
+
+* ``best_first`` (aliases ``best-first``, ``platform``) — the first
+  candidate.  Warmth-tier narrowing (when the caller supplies a warmth
+  source) applies *before* selection, exactly like the seed semantics.
+* ``any`` (alias ``random``) — uniform over the candidates; consumes exactly
+  one ``rng.choice``.  Warmth-tier narrowing applies first.
+* ``least_loaded`` (alias ``least-loaded``) — the candidate hosting the
+  fewest resident function instances (pseudo-functions included — they model
+  held state), first-on-tie.  Deterministic; warmth narrowing does *not*
+  apply (load is the author's explicit criterion).
+* ``warmest`` — the candidate with the highest warmth rank (0 cold / 1 warm
+  / 2 hot); ties broken by lowest load, then candidate order.  Deterministic;
+  consumes the warmth signal directly instead of the narrowing pre-pass.
+
+``narrow_warmth`` preserves the seed behaviour bit for bit: the legacy
+strategies keep the highest-tier pre-narrowing, the new ones opt out and
+read the raw signals themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence, Tuple, TypeVar
+
+C = TypeVar("C")  # candidate: a worker name (scalar) or a column index (batched)
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionContext:
+    """Per-candidate signals a strategy may consult.
+
+    ``load``   — resident function-instance count of the candidate's worker
+    (the scalar reference's ``len(view.fs)`` / the tensors' ``n_funcs``).
+    ``warmth`` — container-pool warmth rank of the candidate for the function
+    being scheduled (0 when no warmth source is attached).
+    """
+
+    load: Callable[[object], int]
+    warmth: Callable[[object], int]
+
+    @staticmethod
+    def null() -> "SelectionContext":
+        return SelectionContext(load=lambda c: 0, warmth=lambda c: 0)
+
+
+class Strategy:
+    """One selection rule.  Subclass, set ``name``, implement ``select``."""
+
+    #: canonical clause spelling
+    name: str = ""
+    #: apply the caller-supplied warmth-tier narrowing before ``select``
+    #: (the seed semantics of best_first / any); strategies that consume
+    #: warmth themselves opt out
+    narrow_warmth: bool = True
+    #: the first valid candidate always wins — lets vectorized scans stop
+    #: early (only sound for best_first, and only modulo warmth narrowing)
+    first_valid_wins: bool = False
+    #: draws from ``rng`` (exactly one ``rng.choice`` when True); decisions
+    #: of non-random strategies are reproducible with no rng at all
+    uses_rng: bool = False
+
+    def select(self, candidates: Sequence[C], ctx: SelectionContext, rng) -> C:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<Strategy {self.name}>"
+
+
+class BestFirst(Strategy):
+    name = "best_first"
+    first_valid_wins = True
+
+    def select(self, candidates, ctx, rng):
+        return candidates[0]
+
+
+class Any(Strategy):
+    name = "any"
+    uses_rng = True
+
+    def select(self, candidates, ctx, rng):
+        return rng.choice(candidates)
+
+
+class LeastLoaded(Strategy):
+    name = "least_loaded"
+    narrow_warmth = False
+
+    def select(self, candidates, ctx, rng):
+        load = ctx.load
+        best = candidates[0]
+        best_load = load(best)
+        for c in candidates[1:]:
+            l = load(c)
+            if l < best_load:  # strict: first-on-tie
+                best, best_load = c, l
+        return best
+
+
+class Warmest(Strategy):
+    name = "warmest"
+    narrow_warmth = False
+
+    def select(self, candidates, ctx, rng):
+        load, warmth = ctx.load, ctx.warmth
+        best = candidates[0]
+        best_key = (-warmth(best), load(best))
+        for c in candidates[1:]:
+            key = (-warmth(c), load(c))
+            if key < best_key:  # strict: first-on-tie
+                best, best_key = c, key
+        return best
+
+
+# --------------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------------- #
+
+_REGISTRY: Dict[str, Strategy] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_strategy(strategy: Strategy, *aliases: str) -> Strategy:
+    """Install ``strategy`` under its canonical name plus ``aliases``.
+    Re-registering a name replaces it (tests / user overrides)."""
+    if not strategy.name:
+        raise ValueError("strategy must set a canonical .name")
+    _REGISTRY[strategy.name] = strategy
+    _ALIASES[strategy.name] = strategy.name
+    for a in aliases:
+        _ALIASES[a] = strategy.name
+    return strategy
+
+
+def resolve_strategy_name(name: str) -> str:
+    """Alias -> canonical name; raises KeyError for unknown strategies."""
+    return _ALIASES[name]
+
+
+def get_strategy(name: str) -> Strategy:
+    """Strategy instance for a canonical *or* aliased name."""
+    return _REGISTRY[_ALIASES[name]]
+
+
+def strategy_names() -> Tuple[str, ...]:
+    """Canonical names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def known_strategy(name: str) -> bool:
+    return name in _ALIASES
+
+
+register_strategy(BestFirst(), "best-first", "platform")  # APP legacy alias
+register_strategy(Any(), "random")  # the paper's Fig. 5 spelling
+register_strategy(LeastLoaded(), "least-loaded")
+register_strategy(Warmest())

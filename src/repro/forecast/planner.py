@@ -29,7 +29,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.scheduler import candidate_blocks, valid
+from repro.core.compile import CompiledScript, compile_script
+from repro.core.scheduler import valid
 
 from .estimator import ArrivalForecast
 
@@ -81,7 +82,15 @@ class ForecastPlanner:
     def __init__(self, forecast: ArrivalForecast, script, registry,
                  config: PlanConfig = PlanConfig()):
         self.forecast = forecast
-        self.script = script
+        # the planner consumes the v2 compile pipeline's IR: resolved
+        # candidate-block chains (followup/default applied once, at compile
+        # time) instead of re-deriving them per (function, worker) probe.
+        # A raw AAppScript is compiled here for convenience.
+        if isinstance(script, CompiledScript):
+            self.compiled = script
+        else:
+            self.compiled = compile_script(script, registry)
+        self.script = self.compiled.script
         self.registry = registry
         self.cfg = config
 
@@ -93,7 +102,7 @@ class ForecastPlanner:
         (Listing 1 lines 7-9: explicit ids or wildcard) and
         ``core.scheduler.valid`` must hold; -1 if no block qualifies."""
         tag = self.registry[function].tag
-        for i, block in enumerate(candidate_blocks(tag, self.script)):
+        for i, block in enumerate(self.compiled.candidate_blocks(tag)):
             if not block.is_wildcard and worker not in block.workers:
                 continue
             if valid(function, worker, conf, self.registry, block):

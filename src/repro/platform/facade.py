@@ -1,0 +1,309 @@
+"""The :class:`Platform` facade — one object in front of the aAPP stack.
+
+The seed API leaked its internals: every consumer hand-wired parser →
+script → :class:`~repro.core.batched.SchedulerSession` → pool →
+engine/simulator.  ``Platform`` owns that wiring:
+
+* a script goes through the full v2 compile pipeline
+  (:func:`repro.core.compile.compile_script`: parse → resolve → validate →
+  lower) once, and the resulting :class:`~repro.core.compile.CompiledScript`
+  IR is adopted by the incremental scheduling session;
+* decisions come back as structured :class:`~repro.core.decision.Decision`
+  objects (optionally carrying a per-block, per-worker explain-trace via
+  :meth:`explain`) instead of bare worker strings;
+* randomness is owned: one seeded ``random.Random`` drives every
+  ``strategy: any`` draw, so a platform run is reproducible end to end;
+* the warm pool, arrival forecast and planner plug in at construction and
+  the facade keeps them in lockstep (container starts charged on
+  :meth:`invoke`, releases on :meth:`complete`, janitor sweeps and planning
+  epochs on :meth:`advance`).
+
+Quick start::
+
+    from repro.platform import Platform
+
+    plat = Platform.from_yaml(SCRIPT, cluster={"w0": 2048, "w1": 2048})
+    plat.register("divide", memory=256, tag="d")
+    d = plat.invoke("divide")          # Decision(worker=..., activation_id=...)
+    print(plat.explain("impera").format())  # why every worker was (in)valid
+    plat.complete(d)
+
+The facade is deliberately thin over the hot path — one
+``SchedulerSession`` decision + one state allocation per :meth:`invoke`
+(the ``benchmarks/overhead.py`` microbench pins the facade tax under 5%,
+the paper's "no noticeable overhead" claim applied at the API layer).
+High-fidelity timing (background prewarm boots, migration latencies,
+processor sharing) stays with :class:`repro.cluster.simulator.ClusterSim`;
+:meth:`advance` applies planner actions instantaneously.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple, Union
+
+from repro.core.ast import AAppScript
+from repro.core.compile import CompiledScript, compile_script
+from repro.core.batched import SchedulerSession
+from repro.core.decision import Decision
+from repro.core.scheduler import explain as _explain_scalar
+from repro.core.state import Activation, ClusterState, Registry
+
+ClusterLike = Union[None, ClusterState, Mapping[str, float],
+                    Iterable[Tuple[str, float]]]
+
+
+def _as_state(cluster: ClusterLike) -> ClusterState:
+    if cluster is None:
+        return ClusterState()
+    if isinstance(cluster, ClusterState):
+        return cluster
+    state = ClusterState()
+    items = cluster.items() if isinstance(cluster, Mapping) else cluster
+    for name, max_memory in items:
+        state.add_worker(name, max_memory=float(max_memory))
+    return state
+
+
+class Platform:
+    """Facade: ``register / invoke / complete / advance / reload_script /
+    explain`` over one compiled script, one cluster state, one session."""
+
+    def __init__(
+        self,
+        source: Union[None, str, AAppScript, CompiledScript] = None,
+        *,
+        cluster: ClusterLike = None,
+        registry: Optional[Registry] = None,
+        functions: Optional[Mapping[str, Tuple[float, str]]] = None,
+        pool=None,
+        forecast=None,
+        planner=None,
+        seed: int = 0,
+        clock: Optional[Callable[[], float]] = None,
+        backend: str = "np",
+    ):
+        self.state = _as_state(cluster)
+        self.registry = registry if registry is not None else Registry()
+        if functions:
+            for name, (memory, tag) in functions.items():
+                self.registry.register(name, memory=memory, tag=tag)
+        self.pool = pool
+        self.forecast = forecast
+        self.planner = planner
+        self.rng = random.Random(seed)
+        self._seed = seed
+        self._now = 0.0
+        self._owns_clock = clock is None
+        self.clock: Callable[[], float] = clock or (lambda: self._now)
+        self.compiled: Optional[CompiledScript] = None
+        if source is not None:
+            if isinstance(source, CompiledScript):
+                self.compiled = source
+            else:
+                self.compiled = compile_script(source, self.registry)
+        self.session = SchedulerSession(
+            self.state, self.registry,
+            self.compiled if self.compiled is not None else None,
+            backend=backend, pool=pool, clock=self.clock)
+        self._containers: Dict[str, str] = {}  # activation id -> container id
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def from_yaml(cls, text: str, **kwargs) -> "Platform":
+        """Compile aAPP source text and stand the platform up around it."""
+        if not isinstance(text, str):
+            raise TypeError("from_yaml takes aAPP source text; use "
+                            "from_script for an AAppScript/CompiledScript")
+        return cls(text, **kwargs)
+
+    @classmethod
+    def from_script(cls, script: Union[AAppScript, CompiledScript],
+                    **kwargs) -> "Platform":
+        return cls(script, **kwargs)
+
+    @classmethod
+    def for_sim(cls, sim, source, **kwargs) -> "Platform":
+        """A platform over a :class:`~repro.cluster.simulator.ClusterSim`'s
+        state / registry / pool, on the simulator's virtual clock.  The sim
+        keeps ownership of time and container charging; the platform fronts
+        script compilation and decisions (``platform.placer(rng)`` is the
+        ``scheduler_fn`` the workload driver wants)."""
+        kwargs.setdefault("pool", sim.pool)
+        return cls(source, cluster=sim.state, registry=sim.registry,
+                   clock=lambda: sim.now, **kwargs)
+
+    # ------------------------------------------------------------------ #
+    # registration / topology
+    # ------------------------------------------------------------------ #
+
+    @property
+    def script(self) -> Optional[AAppScript]:
+        return self.compiled.script if self.compiled is not None else None
+
+    @property
+    def diagnostics(self):
+        """Compile warnings of the active script (errors raise at compile)."""
+        return self.compiled.diagnostics if self.compiled is not None else ()
+
+    def register(self, name: str, *, memory: float, tag: str) -> None:
+        """Register a function: ``reg[f] = (memory, tag)`` (Listing 1)."""
+        self.registry.register(name, memory=memory, tag=tag)
+
+    def add_worker(self, name: str, *, max_memory: float) -> None:
+        self.state.add_worker(name, max_memory=max_memory)
+
+    def fail_worker(self, name: str):
+        """Worker crash/drain: evicts its activations (returned for
+        rescheduling) and drains its idle containers."""
+        lost = self.state.fail_worker(name)
+        if self.pool is not None:
+            self.pool.evict_worker(name)
+        return lost
+
+    def workers(self) -> Tuple[str, ...]:
+        return self.state.workers()
+
+    # ------------------------------------------------------------------ #
+    # the decision path
+    # ------------------------------------------------------------------ #
+
+    def decide(self, function: str, rng: Optional[random.Random] = None, *,
+               warmth="auto") -> Decision:
+        """One Listing-1 decision, *not* applied (no allocation, no
+        container charge).  Simulator drivers that own allocation use this
+        (or :meth:`placer`)."""
+        worker = self.session.try_schedule(
+            function, rng=rng if rng is not None else self.rng, warmth=warmth)
+        return Decision(function, self.registry[function].tag, worker)
+
+    def invoke(self, function: str, rng: Optional[random.Random] = None, *,
+               warmth="auto") -> Decision:
+        """Decide *and apply*: allocate in the state tables (the session's
+        tensors follow via the change feed) and, with a pool attached,
+        acquire a container and charge its cold/warm/hot start."""
+        worker = self.session.try_schedule(
+            function, rng=rng if rng is not None else self.rng, warmth=warmth)
+        if self.forecast is not None:
+            self.forecast.observe(function, self.clock())
+        if worker is None:
+            return Decision(function, self.registry[function].tag)
+        act = self.state.allocate(function, worker, self.registry)
+        if self.pool is not None:
+            c, kind, cost = self.pool.acquire(
+                function, worker, self.clock(),
+                memory=act.memory, tag=act.tag)
+            self._containers[act.activation_id] = c.cid
+            return Decision(function, act.tag, worker,
+                            activation_id=act.activation_id,
+                            start_kind=kind, start_cost=cost)
+        return Decision(function, act.tag, worker,
+                        activation_id=act.activation_id)
+
+    def complete(self, decision_or_id: Union[Decision, str],
+                 service_time: Optional[float] = None) -> Optional[Activation]:
+        """Completion notification: release the container back to the pool
+        and drop the activation from the tracking tables (paper §IV).
+        ``service_time`` (optional) feeds the forecast estimator."""
+        aid = decision_or_id
+        if type(aid) is not str:
+            aid = aid.activation_id
+            if aid is None:
+                raise ValueError(
+                    "decision was never applied (no activation id)")
+        if self.pool is not None:
+            cid = self._containers.pop(aid, None)
+            if cid is not None:
+                self.pool.release(cid, self.clock())
+        act = self.state.complete(aid)
+        if (self.forecast is not None and service_time is not None
+                and act is not None):
+            self.forecast.observe_service(act.function, service_time)
+        return act
+
+    def explain(self, function: str, *,
+                rng: Optional[random.Random] = None) -> Decision:
+        """Side-effect-free decision with a full explain-trace: per evaluated
+        block, every considered worker's verdict (the first failing
+        Listing-1 check, ``warmth-tier`` drops, or ok).  Runs the scalar
+        reference path on the live conf — bit-identical semantics to the
+        session (property-tested), deliberately not the hot path.  Does not
+        consume the platform rng (``strategy: any`` draws from a private
+        deterministic generator unless ``rng`` is given)."""
+        if self.compiled is None:
+            raise ValueError("no script loaded; reload_script() first")
+        warmth_fn = None
+        if self.pool is not None:
+            now = self.clock()
+            pool = self.pool
+            warmth_fn = lambda f, w: pool.warmth(f, w, now)
+        return _explain_scalar(
+            function, self.state.conf(), self.compiled.script, self.registry,
+            rng=rng if rng is not None else random.Random(self._seed),
+            warmth=warmth_fn)
+
+    def placer(self, rng: Optional[random.Random] = None
+               ) -> Callable[[str], Optional[str]]:
+        """A ``scheduler_fn`` for the workload driver / simulator: one
+        decision per call, returning the worker id (or None) — the shape
+        :class:`repro.workload.TraceWorkload` consumes."""
+        rng = rng if rng is not None else self.rng
+        session = self.session
+        return lambda f: session.try_schedule(f, rng=rng)
+
+    # ------------------------------------------------------------------ #
+    # script lifecycle / time
+    # ------------------------------------------------------------------ #
+
+    def reload_script(self, source: Union[str, AAppScript]) -> CompiledScript:
+        """Recompile and hot-swap the platform script.  Lowers into the live
+        session's tag universe, so existing state tensors and unrelated row
+        banks survive; decisions after the swap use the new script."""
+        compiled = compile_script(source, self.registry,
+                                  tag_index=self.session.tag_index)
+        self.compiled = compiled
+        self.session.set_default_script(compiled)
+        return compiled
+
+    def advance(self, dt: float = 0.0) -> float:
+        """Advance platform time by ``dt`` (only when the platform owns its
+        clock) and run the time-driven machinery at the new now: the pool
+        janitor sweep, then — with a planner attached — one planning epoch
+        whose prewarm/migrate/retire actions apply instantaneously (the
+        cluster simulator remains the path that charges boot and transfer
+        latencies).  Returns the new now."""
+        if dt:
+            if not self._owns_clock:
+                raise ValueError("platform runs on an external clock; "
+                                 "advance(dt>0) is the clock owner's job")
+            self._now += dt
+        now = self.clock()
+        if self.pool is not None:
+            self.pool.sweep(now)
+            if self.planner is not None:
+                for a in self.planner.plan(self.state.conf(), self.pool, now):
+                    kind = type(a).__name__
+                    if kind == "Prewarm":
+                        self.pool.prewarm(a.function, a.worker, now,
+                                          memory=a.memory, tag=a.tag)
+                    elif kind == "Migrate":
+                        self.pool.migrate(a.function, a.src, a.dst, now)
+                    else:  # Retire
+                        self.pool.retire_idle(a.function, a.worker, now)
+        return now
+
+    # ------------------------------------------------------------------ #
+
+    def stats(self) -> Dict:
+        """Operational counters: session data-plane stats + pool metrics."""
+        out = dict(self.session.stats)
+        out["workers"] = len(self.state.workers())
+        out["tags"] = len(self.session.tag_index)
+        if self.pool is not None:
+            out["pool"] = self.pool.metrics.snapshot()
+        return out
+
+    def close(self) -> None:
+        self.session.close()

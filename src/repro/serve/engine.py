@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import random
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -45,14 +46,12 @@ from repro.core import (
     AAppScript,
     Affinity,
     Block,
-    ClusterState,
     Invalidate,
-    Registry,
-    SchedulerSession,
-    SchedulingFailure,
     TagPolicy,
 )
+from repro.core.deprecation import warn_once
 from repro.cluster.topology import CellSpec
+from repro.platform import Platform
 from repro.pool import WarmPool
 
 TRAIN_TAG = "train"
@@ -94,30 +93,63 @@ class Completion:
 
 
 class Engine:
+    """The serving controller, as a consumer of the
+    :class:`repro.platform.Platform` facade.
+
+    New call shape: build the platform first (it owns the cluster state,
+    registry, pool/forecast attachments, rng, and the incremental
+    scheduling session) and hand it in::
+
+        plat = Platform(cluster={n: s.hbm_gb for n, s in cells.items()},
+                        pool=pool, clock=clock, seed=0)
+        eng = Engine(cells, platform=plat, runner=runner)
+
+    The v1 shape — ``Engine(cells, pool=..., forecast=...)`` with the engine
+    hand-wiring state + registry + session itself — keeps working as a shim
+    (it builds the platform internally) and emits a DeprecationWarning once.
+    """
+
     def __init__(self, cells: Dict[str, CellSpec], *,
+                 platform: Optional[Platform] = None,
                  runner: Optional[Callable[[Request, str], Any]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  hedge_after: Optional[float] = None,
                  heartbeat_timeout: float = 10.0,
                  pool: Optional[WarmPool] = None,
-                 forecast=None):
+                 forecast=None,
+                 seed: Optional[int] = None):
         self.cells = dict(cells)
-        self.state = ClusterState()
-        self.reg = Registry()
-        self.clock = clock
+        if platform is None:
+            warn_once(
+                "serve.Engine(cells)",
+                "Engine(cells, pool=..., forecast=...) is the v1 call shape;"
+                " construct a repro.platform.Platform and pass platform=...",
+            )
+            platform = Platform(cluster=None, pool=pool, forecast=forecast,
+                                clock=clock, seed=seed if seed is not None
+                                else 0)
+        elif pool is not None or forecast is not None:
+            raise ValueError("pass pool/forecast to the Platform, not both")
+        self.platform = platform
+        self.state = platform.state
+        self.reg = platform.registry
+        self.clock = platform.clock if clock is time.monotonic else clock
         self.runner = runner or (lambda req, cell: None)
         self.hedge_after = hedge_after
         self.heartbeat_timeout = heartbeat_timeout
-        self.pool = pool
-        self.forecast = forecast
+        self.pool = platform.pool
+        self.forecast = platform.forecast
+        # per-engine rng: every `strategy: any` draw is seeded (satellite:
+        # reproducible end to end); defaults to the platform's own rng
+        self.rng = random.Random(seed) if seed is not None else platform.rng
         self._warm_acts: Dict[Tuple[str, str], str] = {}  # (cell, fname) -> act id
         self._containers: Dict[str, str] = {}  # activation id -> container id
-        if pool is not None:
+        if self.pool is not None:
             # residency tags: warm pools surface as `warm:<fname>` pseudo-
             # functions in conf, visible to every Listing-1 policy; hooks the
             # caller already installed on the pool keep firing afterwards
-            pool.on_warm = _chain(self._on_warm, pool.on_warm)
-            pool.on_cooled = _chain(self._on_cooled, pool.on_cooled)
+            self.pool.on_warm = _chain(self._on_warm, self.pool.on_warm)
+            self.pool.on_cooled = _chain(self._on_cooled, self.pool.on_cooled)
         self._ids = itertools.count()
         self._heartbeat: Dict[str, float] = {}
         self._sessions: Dict[str, Tuple[str, str]] = {}  # session -> (cell, kv act id)
@@ -127,14 +159,16 @@ class Engine:
         self._persistent: Dict[str, str] = {}  # rid -> activation id (train streams)
         self.completions: List[Completion] = []
         self.relocations: List[Tuple[str, str]] = []  # (session, reason)
+        present = set(self.state.workers())
         for name, spec in cells.items():
-            self.state.add_worker(name, max_memory=spec.hbm_gb)
+            if name not in present:
+                self.state.add_worker(name, max_memory=spec.hbm_gb)
             self._heartbeat[name] = self.clock()
-        # incremental scheduling data plane: state tensors maintained by
-        # deltas off the ClusterState change feed, compiled rows cached per
-        # synthesised script (scripts for the same request class hash-hit)
-        self.scheduler = SchedulerSession(self.state, self.reg, backend="np",
-                                          pool=pool, clock=self.clock)
+        # incremental scheduling data plane (owned by the platform): state
+        # tensors maintained by deltas off the ClusterState change feed,
+        # compiled rows cached per synthesised script (scripts for the same
+        # request class hash-hit)
+        self.scheduler = platform.session
         self._tag_compact_at = self.TAG_COMPACT_THRESHOLD
 
     # ------------------------------------------------------------------ #
@@ -276,7 +310,8 @@ class Engine:
         script = self._policy_for(req)
         # pool-backed warmth ranks (vectorized via WarmPool.warmth_row)
         warmth = "auto" if req.kind != "train" else None
-        cell = self.scheduler.try_schedule(fname, script=script, warmth=warmth)
+        cell = self.scheduler.try_schedule(fname, script=script, warmth=warmth,
+                                           rng=self.rng)
         if cell is None:
             comp = Completion(req.rid, "<none>", False, 0.0)
             self.completions.append(comp)
@@ -307,7 +342,7 @@ class Engine:
             hedge = dataclasses.replace(req, hedged=True, rid=req.rid + "-hedge")
             script2 = self._policy_for(hedge, exclude_cell=cell)
             cell2 = self.scheduler.try_schedule(fname, script=script2,
-                                                warmth=warmth)
+                                                warmth=warmth, rng=self.rng)
             if cell2 is not None and cell2 != cell:
                 act2 = self.state.allocate(fname, cell2, self.reg)
                 start2 = self._container_acquire(fname, hedge, cell2,
@@ -342,6 +377,21 @@ class Engine:
     def session_cell(self, session: str) -> Optional[str]:
         got = self._sessions.get(session)
         return got[0] if got else None
+
+    def explain(self, req: Request):
+        """Explain-trace for the placement ``submit(req)`` *would* make:
+        synthesises the request's aAPP policy and runs the scalar reference
+        with tracing on the live conf (no allocation, no rng consumed from
+        the engine).  Returns a :class:`repro.core.Decision`."""
+        from repro.core import explain as _explain
+
+        fname = f"{req.kind}-{req.model}" if req.kind != "train" else "train-job"
+        warmth_fn = None
+        if self.pool is not None and req.kind != "train":
+            now, pool = self.clock(), self.pool
+            warmth_fn = lambda f, w: pool.warmth(f, w, now)
+        return _explain(fname, self.state.conf(), self._policy_for(req),
+                        self.reg, rng=random.Random(0), warmth=warmth_fn)
 
     def forecast_stats(self, horizon: float = 1.0) -> Dict[str, Dict]:
         """Per-request-class forecast state (empty without an estimator)."""

@@ -1,0 +1,145 @@
+"""The v2 compile pipeline: parse -> resolve -> validate -> lower."""
+import pytest
+
+from repro.core import (
+    AAppError,
+    AAppScript,
+    Block,
+    ClusterState,
+    CompileError,
+    CompiledScript,
+    IR_VERSION,
+    Registry,
+    SchedulerSession,
+    TagPolicy,
+    Affinity,
+    compile_script,
+    parse,
+    try_schedule,
+)
+from repro.core.ast import DEFAULT_TAG
+from repro.core.compile import lower, resolve, validate
+
+SCRIPT = """
+d:
+  workers: *
+  strategy: random
+  affinity: [!h]
+i:
+  - workers: *
+    strategy: warmest
+    affinity: [d]
+  - followup: fail
+h:
+  workers: [w_big]
+default:
+  workers: *
+  strategy: least_loaded
+"""
+
+
+def _reg():
+    reg = Registry()
+    reg.register("divide", memory=1.0, tag="d")
+    reg.register("impera", memory=1.0, tag="i")
+    reg.register("heavy", memory=4.0, tag="h")
+    return reg
+
+
+def test_compile_script_end_to_end():
+    cs = compile_script(SCRIPT, _reg())
+    assert isinstance(cs, CompiledScript)
+    assert cs.ir_version == IR_VERSION
+    assert cs.source == SCRIPT  # the original text is kept in the IR
+    assert cs.script == parse(SCRIPT)
+    assert not cs.warnings
+    # eager lowering: every tag's rows (incl. default) are ready
+    for tag in (*cs.script.tags, DEFAULT_TAG):
+        assert cs.policies.rows_for(tag).aff.shape[0] == len(
+            cs.resolved[tag].blocks)
+
+
+def test_resolve_applies_followup_chaining():
+    cs = compile_script(SCRIPT, _reg())
+    # d: own block + the explicit default block (followup: default)
+    assert len(cs.resolved["d"].blocks) == 2
+    assert cs.resolved["d"].blocks[1].strategy == "least_loaded"
+    # i: followup fail -> no default chain
+    assert len(cs.resolved["i"].blocks) == 1
+    assert cs.candidate_blocks("i") == cs.resolved["i"].blocks
+    # unknown tags fall through to the default chain (APP semantics)
+    assert cs.candidate_blocks("nope") == cs.resolved[DEFAULT_TAG].blocks
+
+
+def test_resolve_synthesizes_absent_default():
+    cs = compile_script("t:\n  workers: *\n", _reg())
+    assert cs.resolved[DEFAULT_TAG].synthesized
+    assert cs.resolved[DEFAULT_TAG].blocks[0].is_wildcard
+
+
+def test_validate_rejects_unsatisfiable_affinity():
+    script = AAppScript(policies=(TagPolicy(tag="t", blocks=(
+        Block(workers=("*",),
+              affinity=Affinity(affine=("x",), anti_affine=("x",))),)),))
+    with pytest.raises(CompileError) as e:
+        compile_script(script, _reg())
+    assert "unsatisfiable" in str(e.value)
+    assert isinstance(e.value, AAppError)  # CompileError is an AAppError
+
+
+def test_validate_warns_on_unknown_affinity_term():
+    cs = compile_script("t:\n  workers: *\n  affinity: [ghost_tag]\n", _reg())
+    assert any("ghost_tag" in d.message for d in cs.warnings)
+    # known dynamic-ish tags from the registry never warn
+    cs2 = compile_script("t:\n  workers: *\n  affinity: [d]\n", _reg())
+    assert not cs2.warnings
+
+
+def test_validate_warns_on_unreachable_blocks():
+    text = """
+t:
+  - workers: *
+  - workers: [w1]
+"""
+    cs = compile_script(text, _reg())
+    assert any("unreachable" in d.message for d in cs.warnings)
+    # ...but an unconstrained wildcard as the *last* own block is idiomatic
+    cs2 = compile_script("t:\n  - workers: [w1]\n  - workers: *\n", _reg())
+    assert not any("unreachable" in d.message for d in cs2.warnings)
+
+
+def test_lower_shares_a_tag_index():
+    reg = _reg()
+    script = parse(SCRIPT)
+    idx, pol = lower(script, reg)
+    # script tags + referenced affinity terms, no registry sweep
+    assert set(idx.tags) >= {"d", "i", "h"}
+    idx2, _ = lower(parse("z:\n  workers: *\n  affinity: [d]\n"), reg,
+                    tag_index=idx)
+    assert idx2 is idx  # lowered into the shared universe
+    assert "z" in idx.index
+
+
+def test_session_adopts_compiled_script_and_stays_exact():
+    reg = _reg()
+    cs = compile_script(SCRIPT, reg)
+    state = ClusterState()
+    for w in ("w0", "w1", "w_big"):
+        state.add_worker(w, max_memory=8.0)
+    session = SchedulerSession(state, reg, cs)
+    # pristine session adopts the compiled universe wholesale
+    assert session.tag_index is cs.tag_index
+    import random
+    r1, r2 = random.Random(5), random.Random(5)
+    for f in ("heavy", "divide", "impera", "impera"):
+        got = session.try_schedule(f, rng=r1)
+        want = try_schedule(f, state.conf(), cs.script, reg, rng=r2)
+        assert got == want
+        if got is not None:
+            state.allocate(f, got, reg)
+    session.close()
+
+
+def test_compile_rejects_non_script_input():
+    with pytest.raises(AAppError):
+        compile_script(42, _reg())

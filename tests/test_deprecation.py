@@ -1,0 +1,81 @@
+"""The v1 call shapes keep working and warn exactly once per process."""
+import warnings
+
+import pytest
+
+from repro.core import ClusterState, Registry, parse, schedule, SchedulingFailure
+from repro.core import deprecation
+from repro.cluster.topology import two_pod_cells
+from repro.platform import Platform
+from repro.serve.engine import Engine, Request
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    """Each test observes the once-per-process behaviour from a clean slate
+    (other suites may already have tripped the shims)."""
+    deprecation.reset()
+    yield
+    deprecation.reset()
+
+
+def _setup():
+    state = ClusterState()
+    reg = Registry()
+    reg.register("fn", memory=1.0, tag="t")
+    for w in ("w0", "w1"):
+        state.add_worker(w, max_memory=8.0)
+    return state, reg, parse("t:\n  workers: *\n")
+
+
+def test_core_schedule_keeps_working_and_warns_once():
+    state, reg, script = _setup()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert schedule("fn", state.conf(), script, reg) == "w0"
+        assert schedule("fn", state.conf(), script, reg) == "w0"
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1  # exactly once
+    assert "decide" in str(deps[0].message)
+    # the raise-on-failure contract of the v1 shape is preserved
+    empty = ClusterState()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(SchedulingFailure):
+            schedule("fn", empty.conf(), script, reg)
+
+
+def test_engine_legacy_shape_keeps_working_and_warns_once():
+    cells = two_pod_cells()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = Engine(cells, runner=lambda req, cell: "ok",
+                     heartbeat_timeout=1e9, hedge_after=None)
+        eng2 = Engine(cells, runner=lambda req, cell: "ok",
+                      heartbeat_timeout=1e9, hedge_after=None)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1  # exactly once across both constructions
+    assert "Platform" in str(deps[0].message)
+    # ...and the engine built through the shim is fully functional
+    eng.deploy("m", ["pod0-cell0"], weights_gb=8)
+    comp = eng.submit(Request(model="m", kind="prefill", session="s"))
+    assert comp.ok and comp.cell == "pod0-cell0"
+    del eng2
+
+
+def test_engine_platform_shape_does_not_warn():
+    cells = two_pod_cells()
+    plat = Platform(cluster={n: s.hbm_gb for n, s in cells.items()})
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = Engine(cells, platform=plat, runner=lambda req, cell: "ok",
+                     heartbeat_timeout=1e9, hedge_after=None)
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert eng.state is plat.state and eng.scheduler is plat.session
+
+
+def test_engine_platform_shape_rejects_double_attachments():
+    cells = two_pod_cells()
+    plat = Platform(cluster={n: s.hbm_gb for n, s in cells.items()})
+    with pytest.raises(ValueError):
+        Engine(cells, platform=plat, forecast=object())

@@ -96,3 +96,63 @@ def test_inline_affinity_unquoting():
     s = parse("t:\n  workers: *\n  affinity: a, !b, c\n")
     a = s["t"].blocks[0].affinity
     assert a.affine == ("a", "c") and a.anti_affine == ("b",)
+
+
+# ---- AAppScript.to_yaml round trips ---------------------------------------- #
+
+RICH = """
+f_tag:
+  - workers:
+      - local_w1
+      - local_w2
+    strategy: least_loaded
+    invalidate:
+      - capacity_used 80%
+      - max_concurrent_invocations 3
+    affinity: g_tag, !h_tag
+  - workers: *
+    strategy: warmest
+  - followup: fail
+g_tag:
+  workers: *
+  strategy: random
+"""
+
+
+@pytest.mark.parametrize("script", [FIG3, FIG5, RICH])
+@pytest.mark.parametrize("stylised", [False, True])
+def test_to_yaml_roundtrip(script, stylised):
+    s = parse(script)
+    text = s.to_yaml(stylised=stylised)
+    assert parse(text) == s
+
+
+def test_to_yaml_stylised_forms():
+    """stylised=True emits the paper's presentation: bare `*` and `!tag`."""
+    s = parse(FIG5)
+    text = s.to_yaml(stylised=True)
+    assert "workers: *" in text
+    assert "- !h_eu" in text
+    assert '"' not in text  # nothing needed quoting
+    strict = s.to_yaml()
+    assert 'workers: "*"' in strict
+    assert '- "!h_eu"' in strict
+    assert parse(text) == parse(strict) == s
+
+
+def test_to_yaml_preserves_strategies_and_followup():
+    s = parse(RICH)
+    s2 = parse(s.to_yaml())
+    assert s2["f_tag"].followup == "fail"
+    assert s2["f_tag"].blocks[0].strategy == "least_loaded"
+    assert s2["f_tag"].blocks[1].strategy == "warmest"
+    assert s2["g_tag"].blocks[0].strategy == "any"  # 'random' normalised
+    inv = s2["f_tag"].blocks[0].invalidate
+    assert inv.capacity_used == 80.0 and inv.max_concurrent_invocations == 3
+
+
+def test_new_strategies_parse_with_aliases():
+    s = parse("t:\n  workers: *\n  strategy: least-loaded\n")
+    assert s["t"].blocks[0].strategy == "least_loaded"
+    with pytest.raises(AAppError):
+        parse("t:\n  workers: *\n  strategy: hottest\n")

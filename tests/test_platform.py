@@ -1,0 +1,258 @@
+"""The unified `repro.platform.Platform` facade.
+
+Covers the full surface (`register/invoke/complete/advance/reload_script/
+explain`), the explain-trace acceptance contract (affinity and
+anti-affinity rejections asserted per worker), decision agreement with the
+scalar reference, pool/planner integration, and end-to-end seeded
+reproducibility.
+"""
+import random
+
+import pytest
+
+from repro.core import SchedulingFailure, try_schedule
+from repro.core.decision import (
+    REASON_MEMORY,
+    REASON_WARMTH_TIER,
+)
+from repro.platform import Platform
+from repro.pool import StartCosts, WarmPool, make_policy
+
+SCRIPT = """
+d:
+  workers: *
+  strategy: best_first
+  affinity: [!h]
+i:
+  - workers: *
+    strategy: best_first
+    affinity: [d]
+  - followup: fail
+h:
+  workers: [w2]
+"""
+
+
+def _platform(**kw):
+    kw.setdefault("cluster", {"w0": 8.0, "w1": 8.0, "w2": 8.0})
+    plat = Platform.from_yaml(SCRIPT, **kw)
+    plat.register("divide", memory=1.0, tag="d")
+    plat.register("impera", memory=1.0, tag="i")
+    plat.register("heavy", memory=4.0, tag="h")
+    return plat
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle surface
+# --------------------------------------------------------------------------- #
+
+
+def test_invoke_complete_roundtrip():
+    plat = _platform()
+    h = plat.invoke("heavy")
+    assert h.ok and h.worker == "w2" and h.activation_id
+    d = plat.invoke("divide")
+    assert d.worker == "w0"  # anti-affine with h -> first heavy-free worker
+    i = plat.invoke("impera")
+    assert i.worker == d.worker  # affine with d
+    assert plat.state.tag_counts(d.worker) == {"d": 1, "i": 1}
+    plat.complete(d)
+    plat.complete(i.activation_id)  # raw activation-id shape works too
+    assert plat.state.tag_counts(d.worker) == {}
+    with pytest.raises(ValueError):
+        plat.complete(plat.decide("divide"))  # never applied -> no id
+
+
+def test_unschedulable_returns_falsy_decision():
+    plat = _platform()
+    plat.invoke("heavy")
+    for _ in range(3):
+        plat.invoke("divide")
+    # impera is affine to d; fill every d-worker's memory with heavies? no —
+    # simplest: an unknown-tag impera on a cluster without d is fine, so
+    # instead drop all workers hosting d
+    plat2 = _platform()
+    d = plat2.invoke("impera")  # no divide resident anywhere, followup: fail
+    assert not d.ok and d.worker is None and not d
+    assert d.activation_id is None
+
+
+def test_decisions_match_scalar_reference():
+    plat = _platform(seed=11)
+    ref_rng = random.Random(99)
+    got_rng = random.Random(99)
+    fns = ["heavy", "divide", "impera", "divide", "impera", "impera"]
+    for f in fns:
+        want = try_schedule(f, plat.state.conf(), plat.script, plat.registry,
+                            rng=ref_rng)
+        got = plat.invoke(f, rng=got_rng)
+        assert got.worker == want, (f, got.worker, want)
+
+
+def test_fail_worker_and_add_worker():
+    plat = _platform()
+    d = plat.invoke("divide")
+    lost = plat.fail_worker(d.worker)
+    assert [a.activation_id for a in lost] == [d.activation_id]
+    assert d.worker not in plat.workers()
+    plat.add_worker("w9", max_memory=8.0)
+    assert "w9" in plat.workers()
+
+
+def test_seeded_runs_reproduce():
+    """Same seed -> identical `strategy: any` draws, end to end."""
+    script = "t:\n  workers: *\n  strategy: random\n"
+    def run(seed):
+        plat = Platform.from_yaml(script,
+                                  cluster={f"w{i}": 8.0 for i in range(6)},
+                                  seed=seed)
+        plat.register("fn", memory=1.0, tag="t")
+        return [plat.invoke("fn").worker for _ in range(10)]
+    assert run(7) == run(7)
+    assert run(7) != run(8)  # and the seed actually matters
+
+
+# --------------------------------------------------------------------------- #
+# explain traces (acceptance: affinity + anti-affinity rejections)
+# --------------------------------------------------------------------------- #
+
+
+def test_explain_affinity_rejection():
+    """impera is affine to d: every worker without a resident divide is
+    rejected with the `affinity:d` reason; once a divide lands, the trace
+    shows exactly its worker as valid/selected."""
+    plat = _platform()
+    probe = plat.explain("impera")
+    assert not probe.ok and probe.trace is not None
+    bt = probe.trace[0]
+    assert all(v.reason == "affinity:d" for v in bt.workers)
+    assert probe.rejection_reasons("w0") == ("affinity:d",)
+
+    d = plat.invoke("divide")
+    probe = plat.explain("impera")
+    assert probe.ok and probe.worker == d.worker
+    verdicts = {v.worker: v for v in probe.trace[-1].workers}
+    assert verdicts[d.worker].ok and verdicts[d.worker].reason is None
+    for w in plat.workers():
+        if w != d.worker:
+            assert verdicts[w].reason == "affinity:d"
+    assert probe.trace[-1].selected == d.worker
+    assert probe.block_index == 0 and probe.strategy == "best_first"
+
+
+def test_explain_anti_affinity_rejection():
+    """d is anti-affine to h: the cell hosting the heavy is rejected with
+    the `anti-affinity:h` reason; the others stay valid."""
+    plat = _platform()
+    h = plat.invoke("heavy")
+    probe = plat.explain("divide")
+    assert probe.ok
+    verdicts = {v.worker: v for v in probe.trace[0].workers}
+    assert verdicts[h.worker].reason == "anti-affinity:h"
+    assert not verdicts[h.worker].ok
+    assert verdicts[probe.worker].ok
+    assert "anti-affinity:h" in probe.format()
+
+
+def test_explain_memory_and_warmth_reasons():
+    plat = _platform()
+    # fill w0 with heavies until divide no longer fits anywhere but w1
+    plat.state.allocate("heavy", "w0", plat.registry)
+    plat.state.allocate("heavy", "w0", plat.registry)  # w0 8.0/8.0 used
+    probe = plat.explain("divide")
+    verdicts = {v.worker: v for v in probe.trace[0].workers}
+    assert verdicts["w0"].reason == REASON_MEMORY
+    assert probe.worker == "w1"
+
+
+def test_explain_warmth_tier_drop():
+    pool = WarmPool(make_policy("fixed_ttl", ttl=1e9),
+                    costs=StartCosts(), budget_mb=64.0, hot_window=1e9)
+    plat = _platform(pool=pool)
+    d = plat.invoke("divide")  # acquires a cold container on w0
+    plat.complete(d)  # parks it -> w0 is warm for "divide"
+    probe = plat.explain("divide")
+    assert probe.worker == "w0"
+    verdicts = {v.worker: v for v in probe.trace[0].workers}
+    # w1 was Listing-1-valid but lost to the warmth tier narrowing
+    assert verdicts["w1"].reason == REASON_WARMTH_TIER
+    # explain consumed nothing from the platform rng and allocated nothing
+    assert plat.state.tag_counts("w0") == {}
+
+
+def test_explain_agrees_with_session_decision():
+    for seed in range(20):
+        plat = _platform(seed=seed)
+        if seed % 3 == 0:
+            plat.invoke("heavy")
+        if seed % 2 == 0:
+            plat.invoke("divide")
+        for f in ("divide", "impera", "heavy"):
+            assert plat.explain(f).worker == plat.decide(f).worker, (seed, f)
+
+
+# --------------------------------------------------------------------------- #
+# script lifecycle / time / pool
+# --------------------------------------------------------------------------- #
+
+
+def test_reload_script_hot_swaps_policies():
+    plat = _platform()
+    plat.invoke("heavy")
+    assert plat.invoke("divide").worker == "w0"
+    # flip d to *require* co-location with h instead of refusing it
+    plat.reload_script(SCRIPT.replace("affinity: [!h]", "affinity: [h]"))
+    assert plat.invoke("divide").worker == "w2"
+    # the trace explains under the new script too
+    probe = plat.explain("divide")
+    assert {v.worker: v.reason for v in probe.trace[0].workers}["w0"] == "affinity:h"
+
+
+def test_invoke_charges_container_starts_and_advance_sweeps():
+    pool = WarmPool(make_policy("fixed_ttl", ttl=2.0),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=64.0, hot_window=0.5)
+    plat = _platform(pool=pool)
+    d = plat.invoke("divide")
+    assert d.start_kind == "cold" and d.start_cost == 0.5
+    plat.complete(d)
+    d2 = plat.invoke("divide")  # inside the hot window
+    assert d2.start_kind == "hot" and d2.start_cost == 0.0
+    plat.complete(d2)
+    plat.advance(10.0)  # past the TTL: the janitor retires the idle container
+    assert plat.clock() == 10.0
+    d3 = plat.invoke("divide")
+    assert d3.start_kind == "cold"
+    assert plat.stats()["pool"]["evictions_ttl"] >= 1
+
+
+def test_advance_refuses_on_external_clock():
+    now = [0.0]
+    plat = _platform(clock=lambda: now[0])
+    with pytest.raises(ValueError):
+        plat.advance(1.0)
+    now[0] = 5.0
+    assert plat.advance(0.0) == 5.0  # sweep-at-current-time is fine
+
+
+def test_advance_runs_planner_epochs():
+    from repro.forecast import ArrivalForecast, ForecastPlanner, PlanConfig
+
+    pool = WarmPool(make_policy("fixed_ttl", ttl=1e9),
+                    costs=StartCosts(), budget_mb=64.0)
+    fc = ArrivalForecast(tau=5.0)
+    plat = _platform(pool=pool, forecast=fc)
+    plat.planner = ForecastPlanner(fc, plat.compiled, plat.registry,
+                                   PlanConfig())
+    for _ in range(25):  # steady divide arrivals teach the estimator
+        d = plat.invoke("divide")
+        plat.advance(0.25)
+        plat.complete(d, service_time=0.2)
+    plat.advance(0.25)
+    assert plat.stats()["pool"]["prewarm_starts"] >= 1
+
+
+def test_compile_diagnostics_surface_on_platform():
+    plat = Platform.from_yaml("t:\n  workers: *\n  affinity: [ghost]\n",
+                              cluster={"w0": 4.0})
+    assert any("ghost" in d.message for d in plat.diagnostics)
