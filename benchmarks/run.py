@@ -8,6 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows plus the per-benchmark tables.
   coldstart             warm-pool keep-alive policies x workload scenarios
   roofline              §Roofline terms from the dry-run artifacts (if present)
 
+``--shard`` runs the zone-sharded scheduler comparison (W >= 4096 sizes,
+asserts sharded-vs-flat + sharded-vs-scalar) and ``--multiregion`` the
+N-zone simulator workload benchmark (local_first routing vs the flat
+plane); both honour ``--quick``.
+
 The *full* cold-start benchmark (all seeds, rewrites ``BENCH_coldstart.json``)
 is registered behind ``--coldstart``; combine with ``--policies`` to run a
 policy subset (e.g. ``--coldstart --policies predictive`` — prints only, no
@@ -41,13 +46,21 @@ def main(argv=None) -> None:
                          "policy filter (e.g. 'predictive,affinity')")
     ap.add_argument("--scale", action="store_true",
                     help="run the scheduler scaling benchmark (writes "
-                         "BENCH_scheduler.json; asserts perf criteria)")
+                         "BENCH_scheduler.json; asserts perf criteria incl. "
+                         "the sharded-vs-flat floor)")
+    ap.add_argument("--shard", action="store_true",
+                    help="sharded-focused scheduler benchmark: only the "
+                         "W >= 4096 sizes, asserts zone-sharded criteria")
+    ap.add_argument("--multiregion", action="store_true",
+                    help="multi-region workload benchmark: local_first "
+                         "sharded routing vs the flat plane on the N-zone "
+                         "simulator (asserts locality + latency criteria)")
     ap.add_argument("--simperf", action="store_true",
                     help="run the simulator-engine throughput benchmark "
                          "(writes BENCH_simperf.json; asserts perf criteria)")
     ap.add_argument("--quick", action="store_true",
-                    help="with --coldstart/--scale/--simperf: reduced size, "
-                         "no BENCH json rewrite")
+                    help="with --coldstart/--scale/--shard/--multiregion/"
+                         "--simperf: reduced size, no BENCH json rewrite")
     args = ap.parse_args(argv)
 
     if args.coldstart:
@@ -59,11 +72,17 @@ def main(argv=None) -> None:
             sub += ["--policies", args.policies]
         cst.main(sub)
         return
-    if args.scale or args.simperf:
+    if args.scale or args.shard or args.multiregion or args.simperf:
         sub = ["--quick"] if args.quick else []
         if args.scale:
             from benchmarks import scheduler_scale as sc
             sc.main(sub)
+        if args.shard:
+            from benchmarks import scheduler_scale as sc
+            sc.main(sub + ["--shard"])
+        if args.multiregion:
+            from benchmarks import multiregion as mr
+            mr.main(sub)
         if args.simperf:
             from benchmarks import simperf as sp
             sp.main(sub)

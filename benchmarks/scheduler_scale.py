@@ -17,13 +17,21 @@ Measures per-decision scheduling latency as workers grow, three ways:
   compiled rows cached per tag, each decision one pure-numpy batched
   ``valid`` against the live tensors.  Reported twice: decisions against a
   fixed state (comparable to the scalar column) and under allocate/release
-  churn between decisions (delta upkeep included).
+  churn between decisions (delta upkeep included);
+* **sharded** — the zone-sharded control plane (`ShardedSession` behind
+  `Platform(..., zones=...)`): the same script with a ``topology:
+  local_first`` hint engages the two-level router, so each decision
+  evaluates one ``W/Z``-sized shard instead of the whole ``[W, T]``
+  tensor.  Origin zones cycle round-robin.  Flat vs sharded run the same
+  hinted script — the hint is inert on the flat session — so the delta is
+  purely the per-shard working-set.
 
 Writes ``BENCH_scheduler.json`` at the repo root (plus the historical
 ``artifacts/scheduler_scale.json`` rows).  Headline criteria: the session
 path — *including* the facade's per-decision Decision construction — must
 beat the scalar reference at *every* measured W (the old wave path lost at
-W=64) and beat the wave path everywhere.
+W=64) and beat the wave path everywhere; the sharded column must beat the
+flat session at every W >= 4096 and never lose to scalar anywhere.
 """
 from __future__ import annotations
 
@@ -60,16 +68,42 @@ batch:
   strategy: best_first
 """
 
-WORKER_SIZES = (64, 256, 1024, 4096)
+# the sharded column's script: identical policies with a local_first
+# topology hint per tag (hints are inert on the flat/scalar paths, so every
+# column sees the same policy semantics)
+SHARD_SCRIPT_TMPL = """
+lat:
+  workers: *
+  strategy: best_first
+  topology: local_first
+  affinity: [!train, !lat_conflict]
+train:
+  workers: *
+  strategy: best_first
+  topology: local_first
+  invalidate:
+    - capacity_used 80%
+  affinity: [!lat]
+batch:
+  workers: *
+  strategy: best_first
+  topology: local_first
+"""
+
+WORKER_SIZES = (64, 256, 1024, 4096, 16384)
 WAVE = 512
+N_ZONES = 16  # sharded column: workers round-robin into 16 zones
+SHARD_FLOOR = 4096  # W at which sharded must beat the flat session
 
 
-def _setup(W: int, occupancy: float, seed: int):
+def _setup(W: int, occupancy: float, seed: int,
+           zones: Optional[int] = None):
     st = ClusterState()
     reg = Registry()
     rng = random.Random(seed)
     for i in range(W):
-        st.add_worker(f"w{i}", max_memory=64.0)
+        st.add_worker(f"w{i}", max_memory=64.0,
+                      zone=f"z{i % zones}" if zones else None)
     reg.register("f_lat", memory=1.0, tag="lat")
     reg.register("f_train", memory=8.0, tag="train")
     reg.register("f_batch", memory=2.0, tag="batch")
@@ -163,15 +197,56 @@ def _bench_one(W: int, wave: int) -> Dict:
     churn_us = (time.perf_counter() - t0) / len(fs) * 1e6
     platform.close()
 
+    # flat session on the zone-hinted script (the hint is inert without
+    # zones): the fair baseline the sharded column is measured against
+    st2, reg2 = _setup(W, occupancy=0.5, seed=1)
+    res2 = _SparseResidency(("f_lat", "f_train", "f_batch"),
+                            tuple(st2.conf()), WARM_FRAC, seed=4)
+    plat_flat = Platform(SHARD_SCRIPT_TMPL, cluster=st2, registry=reg2,
+                         pool=res2)
+    for f in fs[:8]:
+        plat_flat.decide(f, rng=random.Random(3))
+    rng = random.Random(3)
+    t0 = time.perf_counter()
+    for f in fs:
+        plat_flat.decide(f, rng=rng)
+    flat_hinted_us = (time.perf_counter() - t0) / len(fs) * 1e6
+    plat_flat.close()
+
+    # zone-sharded control plane: same script, same state layout, workers
+    # round-robin across N_ZONES zones, per-decision origin zones cycling
+    st3, reg3 = _setup(W, occupancy=0.5, seed=1, zones=N_ZONES)
+    res3 = _SparseResidency(("f_lat", "f_train", "f_batch"),
+                            tuple(st3.conf()), WARM_FRAC, seed=4)
+    plat_sh = Platform(SHARD_SCRIPT_TMPL, cluster=st3, registry=reg3,
+                       pool=res3)
+    zs = [f"z{i % N_ZONES}" for i in range(len(fs))]
+    # warm every shard (tensors + per-zone row banks), mirroring the flat
+    # column's warmed caches — shard builds are startup, not per-decision
+    warm_rng = random.Random(3)
+    for z in dict.fromkeys(zs):
+        for f in ("f_lat", "f_train", "f_batch"):
+            plat_sh.decide(f, rng=warm_rng, zone=z)
+    rng = random.Random(3)
+    t0 = time.perf_counter()
+    for f, z in zip(fs, zs):
+        plat_sh.decide(f, rng=rng, zone=z)
+    sharded_us = (time.perf_counter() - t0) / len(fs) * 1e6
+    plat_sh.close()
+
     return {
         "workers": W,
         "scalar_us_per_decision": scalar_us,
         "batched_us_per_decision": batched_us,
         "session_us_per_decision": session_us,
         "session_churn_us_per_decision": churn_us,
+        "flat_hinted_us_per_decision": flat_hinted_us,
+        "sharded_us_per_decision": sharded_us,
         "speedup": scalar_us / max(batched_us, 1e-9),  # historical column
         "session_speedup_vs_scalar": scalar_us / max(session_us, 1e-9),
         "session_speedup_vs_batched": batched_us / max(session_us, 1e-9),
+        "sharded_speedup_vs_flat": flat_hinted_us / max(sharded_us, 1e-9),
+        "sharded_speedup_vs_scalar": scalar_us / max(sharded_us, 1e-9),
     }
 
 
@@ -194,6 +269,16 @@ def evaluate(rows: Sequence[Dict]) -> Dict:
         "session_beats_batched_everywhere": all(
             r["session_us_per_decision"] < r["batched_us_per_decision"]
             for r in rows),
+        # the zone-sharded criteria: never lose to scalar anywhere, beat the
+        # flat session once per-shard working sets pay off (W >= 4096)
+        "sharded_beats_scalar_everywhere": all(
+            r["sharded_us_per_decision"] < r["scalar_us_per_decision"]
+            for r in rows),
+        "sharded_beats_flat_at_scale": all(
+            r["sharded_us_per_decision"] < r["flat_hinted_us_per_decision"]
+            for r in rows if r["workers"] >= SHARD_FLOOR),
+        "sharded_floor_measured": any(
+            r["workers"] >= SHARD_FLOOR for r in rows),
     }
 
 
@@ -203,7 +288,10 @@ def write_bench(rows: Sequence[Dict], path: Optional[Path] = None) -> Path:
         "bench": "scheduler_scale",
         "params": {"wave": WAVE, "occupancy": 0.5, "warm_frac": WARM_FRAC,
                    "batched_backend": "ref", "session_backend": "np",
-                   "session_path": "Platform.decide (v2 facade)"},
+                   "session_path": "Platform.decide (v2 facade)",
+                   "shard_zones": N_ZONES, "shard_floor": SHARD_FLOOR,
+                   "sharded_path": "Platform(zones=...).decide, "
+                                   "local_first router"},
         "rows": rows,
         "criteria": evaluate(rows),
     }
@@ -214,19 +302,36 @@ def write_bench(rows: Sequence[Dict], path: Optional[Path] = None) -> Path:
 def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
-                    help="small sizes / wave; no BENCH_scheduler.json rewrite")
+                    help="reduced sizes / wave (still spanning the sharded "
+                         "floor so the sharded-vs-flat criterion is "
+                         "asserted); no BENCH_scheduler.json rewrite")
+    ap.add_argument("--shard", action="store_true",
+                    help="sharded-focused run: only the W >= floor sizes, "
+                         "asserts the sharded criteria, no JSON rewrite")
     args = ap.parse_args(argv)
-    sizes = (64, 256) if args.quick else WORKER_SIZES
-    wave = 256 if args.quick else WAVE
+    if args.shard:
+        # --quick composes: only the floor size, smaller wave
+        sizes: Sequence[int] = ((SHARD_FLOOR,) if args.quick else
+                                tuple(w for w in WORKER_SIZES
+                                      if w >= SHARD_FLOOR))
+        wave = 128 if args.quick else 256
+    elif args.quick:
+        sizes = (64, SHARD_FLOOR)  # span the floor: CI asserts the criterion
+        wave = 256
+    else:
+        sizes = WORKER_SIZES
+        wave = WAVE
 
     rows = run(sizes=sizes, wave=wave)
     print(f"{'workers':>8} {'scalar':>10} {'batched':>10} {'session':>10} "
-          f"{'churn':>10}   (us/decision)")
+          f"{'churn':>10} {'flat':>10} {'sharded':>10}   (us/decision)")
     for r in rows:
         print(f"{r['workers']:8d} {r['scalar_us_per_decision']:10.1f} "
               f"{r['batched_us_per_decision']:10.1f} "
               f"{r['session_us_per_decision']:10.1f} "
-              f"{r['session_churn_us_per_decision']:10.1f}")
+              f"{r['session_churn_us_per_decision']:10.1f} "
+              f"{r['flat_hinted_us_per_decision']:10.1f} "
+              f"{r['sharded_us_per_decision']:10.1f}")
 
     # linear-time check: scalar cost grows ~linearly (not quadratically) in W
     r0, r1 = rows[0], rows[-1]
@@ -237,12 +342,20 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     # perf criteria fail loudly (CI runs this in --quick mode)
     verdict = evaluate(rows)
-    assert verdict["session_beats_scalar_everywhere"], rows
-    print("session-incremental beats the scalar reference at every W "
-          f"(incl. W={rows[0]['workers']}: "
-          f"{rows[0]['session_speedup_vs_scalar']:.1f}x)")
+    if not args.shard:
+        assert verdict["session_beats_scalar_everywhere"], rows
+        print("session-incremental beats the scalar reference at every W "
+              f"(incl. W={rows[0]['workers']}: "
+              f"{rows[0]['session_speedup_vs_scalar']:.1f}x)")
+    assert verdict["sharded_beats_scalar_everywhere"], rows
+    assert verdict["sharded_floor_measured"], sizes
+    assert verdict["sharded_beats_flat_at_scale"], rows
+    big = rows[-1]
+    print(f"zone-sharded beats the flat session at W >= {SHARD_FLOOR} "
+          f"(at W={big['workers']}: {big['sharded_speedup_vs_flat']:.1f}x "
+          "vs flat) and never loses to scalar")
 
-    if not args.quick:
+    if not (args.quick or args.shard):
         assert verdict["session_beats_batched_everywhere"], rows
         path = write_bench(rows)
         print(f"wrote {path}")

@@ -61,7 +61,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.state import ClusterState, Registry
 from repro.pool import WarmPool
-from .topology import WorkerSpec
+from .topology import WorkerSpec, ZoneTopology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +84,10 @@ class SimParams:
     backoff_base: float = 1.0  # §V: 1 s, doubling
     max_retries: int = 8
     docs_per_impera: int = 50
+    # request-routing cost when a zone-stamped arrival lands on a worker in
+    # another zone (multi-region traces only; zone-agnostic arrivals are
+    # never charged, preserving the seed's single-front-door model)
+    cross_zone_route: float = 0.15
 
 
 class _Task:
@@ -142,24 +146,36 @@ class _VirtualWorker:
 
 
 class ClusterSim:
-    """Event loop + processor-sharing workers + 2-zone eventually-consistent DB."""
+    """Event loop + processor-sharing workers + N-zone eventually-consistent DB.
+
+    ``topology`` (optional) is the N-zone latency/replication matrix; when
+    omitted it defaults to the seed model over the zones observed in
+    ``workers`` (control plane in the ``eu`` zone when present, else the
+    first observed zone; every other zone paying ``params.us_overhead``;
+    unit replication-lag factors) — bit-identical to the historical
+    hard-coded eu/us pair whenever an ``eu`` zone exists."""
 
     def __init__(self, workers: Dict[str, WorkerSpec], params: SimParams, seed: int = 0,
                  *, pool: Optional[WarmPool] = None, planner=None,
                  plan_interval: float = 2.0, migrate_cost: float = 0.25,
-                 engine: str = "virtual"):
+                 engine: str = "virtual",
+                 topology: Optional[ZoneTopology] = None):
         if engine not in ("virtual", "legacy"):
             raise ValueError(f"unknown engine {engine!r}")
         self.engine = engine
         self.workers = workers
         self.p = params
+        zones = tuple(dict.fromkeys(w.zone for w in workers.values()))
+        self.topology = topology if topology is not None else \
+            ZoneTopology.default(zones or ("",),
+                                 remote_overhead=params.us_overhead)
         self.rng = random.Random(seed)
         self.now = 0.0
         self._heap: List[Tuple[float, int, Callable]] = []
         self._seq = itertools.count()
         self.state = ClusterState()
         for w in workers.values():
-            self.state.add_worker(w.name, max_memory=w.memory_mb)
+            self.state.add_worker(w.name, max_memory=w.memory_mb, zone=w.zone)
         self.registry = Registry()
         # compute cores (processor sharing)
         self._running: Dict[str, List[_Task]] = {w: [] for w in workers}  # legacy
@@ -456,14 +472,18 @@ class ClusterSim:
         return self._small_pressure
 
     def db_write(self, index: str, worker: str, n_docs: int) -> None:
+        """Write locally; remote replicas converge after the sampled lag
+        scaled by the topology's per-pair replication factor (one lag draw
+        per write, exactly like the historical 2-zone model)."""
         zone = self.workers[worker].zone
-        other = "us" if zone == "eu" else "eu"
         lag = self.rng.lognormvariate(math.log(self.p.sync_lag_median),
                                       self.p.sync_lag_sigma)
         lag *= 1.0 + self.p.lag_load_factor * self._small_node_pressure()
-        self._docs.setdefault(index, []).append(
-            {"n": n_docs, zone: self.now, other: self.now + lag}
-        )
+        entry: Dict[str, float] = {"n": n_docs, zone: self.now}
+        for other in self.topology.zones:
+            if other != zone:
+                entry[other] = self.now + lag * self.topology.factor(zone, other)
+        self._docs.setdefault(index, []).append(entry)
 
     def db_visible(self, index: str, worker: str, expected_docs: int) -> bool:
         zone = self.workers[worker].zone
@@ -474,7 +494,18 @@ class ClusterSim:
     # ---- invocation overheads ------------------------------------------------ #
 
     def overhead(self, worker: str) -> float:
-        o = self.p.invoke_overhead
-        if self.workers[worker].zone == "us":
-            o += self.p.us_overhead  # control plane lives in the EU zone
-        return o
+        # platform routing cost + the zone's distance from the control plane
+        # (the paper's EU/US asymmetry, generalised to the N-zone topology)
+        return (self.p.invoke_overhead
+                + self.topology.overhead_of(self.workers[worker].zone))
+
+    def route_cost(self, origin_zone: Optional[str], worker: str) -> float:
+        """Extra front-door routing latency for a request that originated in
+        ``origin_zone`` but was placed on a worker in another zone.  Zero
+        for zone-agnostic arrivals and for local placements — the term the
+        sharded ``local_first`` router exists to avoid."""
+        if origin_zone is None:
+            return 0.0
+        if self.workers[worker].zone == origin_zone:
+            return 0.0
+        return self.p.cross_zone_route

@@ -54,8 +54,11 @@ from .compile import (
     Diagnostic,
     IR_VERSION,
     ResolvedPolicy,
+    ZonePlan,
     compile_script,
+    zone_plan,
 )
+from .sharded import ShardedSession, ZoneView
 
 __all__ = [
     "AAppError", "AAppScript", "Affinity", "Block", "Invalidate", "SchedulingFailure",
@@ -71,4 +74,6 @@ __all__ = [
     "strategy_names",
     "CompiledScript", "CompileError", "Diagnostic", "IR_VERSION",
     "ResolvedPolicy", "compile_script",
+    # v3 zone-sharded control plane
+    "ZonePlan", "zone_plan", "ShardedSession", "ZoneView",
 ]

@@ -15,10 +15,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .strategies import known_strategy, resolve_strategy_name, strategy_names
+from .strategies import (
+    known_strategy,
+    known_zone_strategy,
+    resolve_strategy_name,
+    resolve_zone_strategy_name,
+    strategy_names,
+    zone_strategy_names,
+)
 
 WILDCARD = "*"
 DEFAULT_TAG = "default"
+
+#: affinity terms of the form ``zone:<name>`` / ``!zone:<name>`` constrain the
+#: candidate worker's *zone* (topology membership) instead of its resident tags
+ZONE_PREFIX = "zone:"
 
 STRATEGY_BEST_FIRST = "best_first"
 STRATEGY_ANY = "any"
@@ -66,14 +77,20 @@ class Invalidate:
 
 @dataclasses.dataclass(frozen=True)
 class Affinity:
-    """The affinity clause: affine tags and anti-affine tags (``!tag``)."""
+    """The affinity clause: affine tags, anti-affine tags (``!tag``), and the
+    aAPP v2 topology terms — ``zone:<z>`` (the worker must live in zone ``z``)
+    and ``!zone:<z>`` (the worker must not).  Zone terms constrain worker
+    *placement*, not resident tags, and are stored separately so the tag
+    machinery (occupancy tensors, pending-demand plumbing) never sees them."""
 
     affine: Tuple[str, ...] = ()
     anti_affine: Tuple[str, ...] = ()
+    zones: Tuple[str, ...] = ()  # ``zone:<z>`` terms (worker zone must match)
+    anti_zones: Tuple[str, ...] = ()  # ``!zone:<z>`` terms
 
     @staticmethod
     def from_terms(terms: Sequence[str]) -> "Affinity":
-        affine, anti = [], []
+        affine, anti, zones, anti_zones = [], [], [], []
         for t in terms:
             t = t.strip()
             if not t:
@@ -82,14 +99,47 @@ class Affinity:
                 name = t[1:].strip()
                 if not name:
                     raise AAppError("anti-affinity '!' with no tag")
-                anti.append(name)
+                if name.startswith(ZONE_PREFIX):
+                    zname = name[len(ZONE_PREFIX):].strip()
+                    if not zname:
+                        raise AAppError("'!zone:' with no zone name")
+                    anti_zones.append(zname)
+                else:
+                    anti.append(name)
+            elif t.startswith(ZONE_PREFIX):
+                zname = t[len(ZONE_PREFIX):].strip()
+                if not zname:
+                    raise AAppError("'zone:' with no zone name")
+                zones.append(zname)
             else:
                 affine.append(t)
-        return Affinity(affine=tuple(affine), anti_affine=tuple(anti))
+        return Affinity(affine=tuple(affine), anti_affine=tuple(anti),
+                        zones=tuple(zones), anti_zones=tuple(anti_zones))
 
     @property
     def empty(self) -> bool:
-        return not self.affine and not self.anti_affine
+        return (not self.affine and not self.anti_affine
+                and not self.zones and not self.anti_zones)
+
+    @property
+    def zone_free(self) -> bool:
+        return not self.zones and not self.anti_zones
+
+    def strip_zones(self) -> "Affinity":
+        """The same clause with the zone terms removed (per-shard lowering:
+        a shard's blocks are admissible by construction)."""
+        if self.zone_free:
+            return self
+        return Affinity(affine=self.affine, anti_affine=self.anti_affine)
+
+    def admits_zone(self, zone: str) -> bool:
+        """Whether a worker in ``zone`` can satisfy this clause's zone terms
+        (the tag terms are a separate, runtime question)."""
+        if self.zones and zone not in self.zones:
+            return False
+        if zone in self.anti_zones:
+            return False
+        return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +148,11 @@ class Block:
     strategy: str = STRATEGY_BEST_FIRST
     invalidate: Invalidate = dataclasses.field(default_factory=Invalidate)
     affinity: Affinity = dataclasses.field(default_factory=Affinity)
+    #: optional zone-selection hint for the sharded router (``topology:``
+    #: clause): any name in the pluggable zone-strategy registry —
+    #: ``local_first`` | ``least_loaded_zone`` | ``warmest_zone``.  Inert on
+    #: the flat (single-zone) control plane.
+    topology: Optional[str] = None
 
     def __post_init__(self):
         if not self.workers:
@@ -109,12 +164,26 @@ class Block:
         canonical = resolve_strategy_name(self.strategy)
         if canonical != self.strategy:  # normalise aliases (frozen dataclass)
             object.__setattr__(self, "strategy", canonical)
+        if self.topology is not None:
+            if not known_zone_strategy(self.topology):
+                raise AAppError(
+                    f"unknown topology strategy {self.topology!r}; "
+                    f"registered: {', '.join(zone_strategy_names())}")
+            canonical = resolve_zone_strategy_name(self.topology)
+            if canonical != self.topology:
+                object.__setattr__(self, "topology", canonical)
         if WILDCARD in self.workers and len(self.workers) > 1:
             raise AAppError("'*' cannot be mixed with explicit worker ids")
 
     @property
     def is_wildcard(self) -> bool:
         return self.workers == (WILDCARD,)
+
+    @property
+    def routed(self) -> bool:
+        """Whether the sharded router must engage for this block: it carries
+        zone terms or an explicit topology hint."""
+        return self.topology is not None or not self.affinity.zone_free
 
 
 @dataclasses.dataclass(frozen=True)

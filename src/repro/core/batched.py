@@ -125,6 +125,13 @@ class CompiledBlock:
     wildcard: bool
     worker_ids: Tuple[str, ...]  # explicit list (order = rank) if not wildcard
     block: Block  # original (for scalar re-checks)
+    zones: Tuple[str, ...] = ()  # v2 zone terms: required worker zones
+    anti_zones: Tuple[str, ...] = ()  # excluded worker zones
+
+    def admits_zone(self, zone: str) -> bool:
+        if self.zones and zone not in self.zones:
+            return False
+        return zone not in self.anti_zones
 
 
 @dataclasses.dataclass
@@ -216,6 +223,8 @@ class CompiledPolicies:
             wildcard=block.is_wildcard,
             worker_ids=() if block.is_wildcard else block.workers,
             block=block,
+            zones=block.affinity.zones,
+            anti_zones=block.affinity.anti_zones,
         )
 
 
@@ -244,6 +253,7 @@ class StateTensors:
     mem_used: np.ndarray  # [W] f64 (the scalar reference sums python floats)
     max_mem: np.ndarray  # [W] f64
     n_funcs: np.ndarray  # [W] i32
+    zones: Tuple[str, ...] = ()  # worker zones, parallel to ``workers``
     # worker -> ordered {activation key: memory}; insertion order mirrors the
     # state's activeFunctions table so the float64 sum matches from_conf's.
     _res_mem: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
@@ -279,6 +289,7 @@ class StateTensors:
             mem_used=mem_used,
             max_mem=max_mem,
             n_funcs=n_funcs,
+            zones=tuple(conf[w].zone for w in workers),
             _res_mem=res_mem,
         )
 
@@ -339,7 +350,8 @@ class StateTensors:
         self.n_funcs[i] -= 1
         self.rev += 1
 
-    def apply_add_worker(self, worker: str, max_memory: float) -> None:
+    def apply_add_worker(self, worker: str, max_memory: float,
+                         zone: str = "") -> None:
         i = len(self.workers)
         self.workers = self.workers + (worker,)
         self.widx[worker] = i
@@ -348,6 +360,7 @@ class StateTensors:
         self.mem_used = np.append(self.mem_used, 0.0)
         self.max_mem = np.append(self.max_mem, float(max_memory))
         self.n_funcs = np.append(self.n_funcs, np.int32(0)).astype(np.int32)
+        self.zones = self.zones + (zone,)
         self._res_mem[worker] = {}
         self.rev += 1
 
@@ -361,6 +374,7 @@ class StateTensors:
         self.mem_used = np.delete(self.mem_used, i)
         self.max_mem = np.delete(self.max_mem, i)
         self.n_funcs = np.delete(self.n_funcs, i)
+        self.zones = self.zones[:i] + self.zones[i + 1:]
         self._res_mem.pop(worker, None)
         self.rev += 1
 
@@ -372,6 +386,7 @@ class StateTensors:
             mem_used=self.mem_used.copy(),
             max_mem=self.max_mem.copy(),
             n_funcs=self.n_funcs.copy(),
+            zones=self.zones,
             _res_mem={w: dict(d) for w, d in self._res_mem.items()},
             rev=self.rev,
         )
@@ -389,7 +404,8 @@ class StateTensors:
             return np.concatenate(
                 [occ, np.zeros((occ.shape[0], T - occ.shape[1]), np.int32)], axis=1)
 
-        return (np.array_equal(pad(self.occ), pad(other.occ))
+        return (self.zones == other.zones
+                and np.array_equal(pad(self.occ), pad(other.occ))
                 and np.array_equal(self.mem_used, other.mem_used)
                 and np.array_equal(self.max_mem, other.max_mem)
                 and np.array_equal(self.n_funcs, other.n_funcs))
@@ -414,8 +430,11 @@ def _row_valid_scalar(
     mem_used: float,
     max_mem: float,
     n_funcs: int,
+    zone: str = "",
 ) -> bool:
     """Scalar re-check of one (function-block, worker) cell on live state."""
+    if not cb.admits_zone(zone):
+        return False
     if mem_used + f_mem > max_mem:
         return False
     if cb.cap_pct < NO_CAP and mem_used >= cb.cap_pct * 0.01 * max_mem:
@@ -490,6 +509,10 @@ def schedule_wave(
                 j = snap.widx.get(wid)
                 if j is not None:
                     wmask[r, j] = True
+        if cb.zones or cb.anti_zones:  # v2 zone terms: candidacy mask
+            for j, z in enumerate(snap.zones):
+                if not cb.admits_zone(z):
+                    wmask[r, j] = False
 
     valid = affinity_valid_np(
         snap.occ,
@@ -536,6 +559,7 @@ def schedule_wave(
                         float(live_mem[j]),
                         float(snap.max_mem[j]),
                         int(live_nfn[j]),
+                        snap.zones[j],
                     )
                 else:
                     ok = bool(valid[r, j])
@@ -698,7 +722,8 @@ class SchedulerSession:
                     self.invalidate()
                     return
                 self._snap.apply_add_worker(payload["worker"],
-                                            payload["max_memory"])
+                                            payload["max_memory"],
+                                            payload.get("zone", ""))
                 self._worker_epoch += 1
             elif kind == "fail_worker":
                 self._snap.apply_drop_worker(payload["worker"])
@@ -780,10 +805,22 @@ class SchedulerSession:
                 return None, None
             vec = np.zeros((len(snap.workers),), np.int32)
             widx = snap.widx
-            for w, r in row.items():
-                j = widx.get(w)
-                if j is not None:
-                    vec[j] = r
+            if len(row) > len(widx):
+                # cluster-wide row, zone-shard tensors: walk the smaller side
+                get = row.get
+                hit = False
+                for w, j in widx.items():
+                    r = get(w)
+                    if r is not None:
+                        vec[j] = r
+                        hit = True
+                if not hit:
+                    return None, None
+            else:
+                for w, r in row.items():
+                    j = widx.get(w)
+                    if j is not None:
+                        vec[j] = r
             return vec, None
         if warmth is None:
             return None, None
@@ -821,7 +858,12 @@ class SchedulerSession:
         return ok
 
     def _decide(self, f: str, pol: CompiledPolicies, snap: StateTensors,
-                rng, warmth) -> Optional[str]:
+                rng, warmth, only: Optional[Sequence[int]] = None
+                ) -> Optional[str]:
+        """One Listing-1 decision on the live tensors.  ``only`` (internal,
+        used by the sharded router) restricts the scan to a subset of the
+        tag's bank rows, in the given order — Listing-1 semantics over a
+        router-chosen slice of the chain."""
         self.stats["decisions"] += 1
         spec = self.reg[f]  # raises KeyError like the scalar reference
         W = len(snap.workers)
@@ -856,7 +898,8 @@ class SchedulerSession:
         else:
             rank_of = lambda j: 0
         ctx = SelectionContext(load=lambda j: int(n_funcs[j]), warmth=rank_of)
-        for b, cb in enumerate(bank.cbs):
+        for b in (range(B) if only is None else only):
+            cb = bank.cbs[b]
             row = valid[b]
             strat = get_strategy(cb.strategy)
             if cb.wildcard:
@@ -901,6 +944,10 @@ class SchedulerSession:
                     j = snap.widx.get(wid)
                     if j is not None:
                         wmask[b, j] = True
+            if cb.zones or cb.anti_zones:  # v2 zone terms: candidacy mask
+                for j, z in enumerate(snap.zones):
+                    if not cb.admits_zone(z):
+                        wmask[b, j] = False
         bank.wmask = wmask
         bank.wmask_epoch = self._worker_epoch
         return wmask

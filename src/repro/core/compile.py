@@ -40,7 +40,9 @@ compiled scripts can reject stale IR after a lowering-format change.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Tuple, Union
+
+import numpy as np
 
 from .ast import (
     AAppError,
@@ -55,7 +57,12 @@ from .batched import CompiledPolicies, TagIndex
 from .parser import parse as _parse_text
 from .state import Registry
 
-IR_VERSION = 2  # v1 = the seed's implicit (script, lazy rows) pairing
+# v1 = the seed's implicit (script, lazy rows) pairing; v2 = the explicit
+# pipeline with resolved chains + eager row banks; v3 adds the topology
+# terms (``zone:<z>`` / ``!zone:<z>`` + per-block ``topology:`` hints) and
+# the zone lowering pass (:func:`zone_plan`: per-shard row banks + the
+# zone-candidate mask consumed by the sharded router).
+IR_VERSION = 3
 
 SEVERITY_ERROR = "error"
 SEVERITY_WARNING = "warning"
@@ -167,14 +174,20 @@ def validate(
     script: AAppScript,
     resolved: Dict[str, ResolvedPolicy],
     reg: Optional[Registry] = None,
+    zones: Optional[Iterable[str]] = None,
 ) -> Tuple[Diagnostic, ...]:
     """Static semantic checks.  Returns warnings; raises
-    :class:`CompileError` when any error-severity diagnostic is found."""
+    :class:`CompileError` when any error-severity diagnostic is found.
+
+    ``zones`` (optional) is the platform's configured zone set: zone terms
+    referencing a zone outside it warn (``unknown zone``), exactly like
+    affinity terms that match no known tag."""
     diags: List[Diagnostic] = []
 
     known_tags = set(script.tags)
     if reg is not None:
         known_tags |= set(reg.tags())
+    known_zones = set(zones) if zones is not None else None
 
     for p in script.policies:
         for b in p.blocks:
@@ -184,6 +197,25 @@ def validate(
                     SEVERITY_ERROR, p.tag,
                     f"tags {sorted(both)} are both affine and anti-affine "
                     "in the same block (unsatisfiable)"))
+            zboth = set(b.affinity.zones) & set(b.affinity.anti_zones)
+            if zboth:
+                diags.append(Diagnostic(
+                    SEVERITY_ERROR, p.tag,
+                    f"zones {sorted(zboth)} are both required and excluded "
+                    "in the same block (zone-unsatisfiable)"))
+            if len(set(b.affinity.zones)) > 1:
+                diags.append(Diagnostic(
+                    SEVERITY_ERROR, p.tag,
+                    f"block requires zones {sorted(set(b.affinity.zones))} "
+                    "simultaneously — a worker lives in exactly one zone "
+                    "(zone-unsatisfiable)"))
+            if known_zones is not None:
+                for z in (*b.affinity.zones, *b.affinity.anti_zones):
+                    if z not in known_zones:
+                        diags.append(Diagnostic(
+                            SEVERITY_WARNING, p.tag,
+                            f"zone term {z!r} matches no configured zone "
+                            f"(have: {sorted(known_zones)})"))
             if reg is not None:
                 for t in (*b.affinity.affine, *b.affinity.anti_affine):
                     if t not in known_tags:
@@ -242,16 +274,18 @@ def compile_script(
     reg: Registry,
     *,
     tag_index: Optional[TagIndex] = None,
+    zones: Optional[Iterable[str]] = None,
 ) -> CompiledScript:
     """Run the full pipeline; returns the versioned :class:`CompiledScript`.
 
     Raises :class:`~repro.core.ast.AAppError` (parse) or
     :class:`CompileError` (validate) on static errors; warnings land in
-    ``.diagnostics`` without failing the compile.
+    ``.diagnostics`` without failing the compile.  ``zones`` (the platform's
+    configured zone set, optional) enables the unknown-zone diagnostics.
     """
     script, text = parse_stage(source)
     resolved = resolve(script)
-    diagnostics = validate(script, resolved, reg)
+    diagnostics = validate(script, resolved, reg, zones)
     tag_index, policies = lower(script, reg, tag_index)
     return CompiledScript(
         ir_version=IR_VERSION,
@@ -261,4 +295,154 @@ def compile_script(
         diagnostics=diagnostics,
         tag_index=tag_index,
         policies=policies,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# zone lowering (the v3 topology pass)
+# --------------------------------------------------------------------------- #
+
+#: sentinel worker id used when a zone's filtered default chain is empty: it
+#: can never match a real worker, so an (unroutable tag, zone) pair fails
+#: instead of falling back to a synthesised any-worker default
+_UNSATISFIABLE_WORKER = "__zone-unsatisfiable__"
+
+
+@dataclasses.dataclass
+class ZonePlan:
+    """One script's zone lowering against a concrete zone list.
+
+    Produced by :func:`zone_plan` and consumed by
+    :class:`repro.core.sharded.ShardedSession`'s two-level router:
+
+    * ``masks[tag]`` is the **zone-candidate mask** — a ``[B, Z]`` boolean
+      (blocks of the tag's resolved chain x zones) marking which zones each
+      block admits under its ``zone:``/``!zone:`` terms;
+    * ``zone_scripts[z]`` is the **per-shard script** — every tag's chain
+      filtered to the blocks admissible in ``z`` with the (now vacuous)
+      zone terms stripped, ``followup: fail`` (the default chain is already
+      appended by resolve), lowered by each shard into its own row banks;
+    * ``zone_pos[tag][z]`` maps an original chain position to its row in the
+      shard's filtered bank (-1 when the block is inadmissible there);
+    * ``hints[tag]`` is the chain's first per-block ``topology:`` hint (the
+      zone-selection strategy for the whole decision), ``None`` when unset.
+
+    ``routed_tags`` lists the tags whose chain carries zone terms or hints;
+    for every other tag the router must delegate to the flat session —
+    that delegation is what makes the sharded control plane bit-identical
+    to the flat one on zone-free scripts (property-tested).
+    """
+
+    zones: Tuple[str, ...]
+    chains: Dict[str, Tuple[Block, ...]]
+    masks: Dict[str, np.ndarray]  # tag -> [B, Z] bool
+    zone_scripts: Dict[str, AAppScript]
+    zone_pos: Dict[str, Dict[str, Tuple[int, ...]]]  # tag -> zone -> per-block row
+    hints: Dict[str, Optional[str]]
+    routed_tags: frozenset
+    # router-side memo for deterministic (ctx-free) zone orderings,
+    # keyed (tag, block index, origin zone) — plans are cached per script,
+    # so the memo amortises the per-decision ordering to a dict hit
+    order_cache: Dict[Tuple[str, int, Optional[str]], Tuple[str, ...]] = \
+        dataclasses.field(default_factory=dict)
+
+    def chain(self, tag: str) -> Tuple[Block, ...]:
+        got = self.chains.get(tag)
+        return got if got is not None else self.chains[DEFAULT_TAG]
+
+    def routed(self, tag: str) -> bool:
+        return (tag if tag in self.chains else DEFAULT_TAG) in self.routed_tags
+
+    def mask(self, tag: str) -> np.ndarray:
+        got = self.masks.get(tag)
+        return got if got is not None else self.masks[DEFAULT_TAG]
+
+    def hint(self, tag: str) -> Optional[str]:
+        return self.hints.get(tag if tag in self.chains else DEFAULT_TAG)
+
+    def pos(self, tag: str, zone: str, block_index: int) -> int:
+        key = tag if tag in self.zone_pos else DEFAULT_TAG
+        return self.zone_pos[key][zone][block_index]
+
+
+def _strip_zone_terms(block: Block) -> Block:
+    changed = {}
+    if not block.affinity.zone_free:
+        changed["affinity"] = block.affinity.strip_zones()
+    if block.topology is not None:
+        changed["topology"] = None  # consumed by the router, inert in-shard
+    return dataclasses.replace(block, **changed) if changed else block
+
+
+def zone_plan(script: AAppScript, zones: Iterable[str]) -> ZonePlan:
+    """Lower a script's zone constraints against a concrete zone list.
+
+    Pure function of (script, zones) — the sharded session caches it and
+    recomputes only when the platform's zone set changes."""
+    zones = tuple(dict.fromkeys(zones))
+    resolved = resolve(script)
+    zidx = {z: i for i, z in enumerate(zones)}
+
+    chains: Dict[str, Tuple[Block, ...]] = {}
+    masks: Dict[str, np.ndarray] = {}
+    hints: Dict[str, Optional[str]] = {}
+    routed: List[str] = []
+    for tag, rp in resolved.items():
+        chains[tag] = rp.blocks
+        m = np.zeros((len(rp.blocks), len(zones)), bool)
+        for bi, b in enumerate(rp.blocks):
+            for z, zi in zidx.items():
+                m[bi, zi] = b.affinity.admits_zone(z)
+        masks[tag] = m
+        hints[tag] = next((b.topology for b in rp.blocks
+                           if b.topology is not None), None)
+        if any(b.routed for b in rp.blocks):
+            routed.append(tag)
+
+    zone_scripts: Dict[str, AAppScript] = {}
+    zone_pos: Dict[str, Dict[str, Tuple[int, ...]]] = {
+        tag: {} for tag in chains}
+    if not routed:
+        # zone-free script: every decision delegates to the flat session,
+        # so the per-zone lowering below would never be consulted — skip it
+        # (serving engines synthesise a fresh script per request class; the
+        # O(zones x tags x blocks) construction must not sit on that path)
+        return ZonePlan(
+            zones=zones, chains=chains, masks=masks,
+            zone_scripts=zone_scripts, zone_pos=zone_pos, hints=hints,
+            routed_tags=frozenset())
+    for z, zi in zidx.items():
+        policies: List[TagPolicy] = []
+        for tag, blocks in chains.items():
+            filtered: List[Block] = []
+            pos: List[int] = []
+            for bi, b in enumerate(blocks):
+                if masks[tag][bi, zi]:
+                    pos.append(len(filtered))
+                    filtered.append(_strip_zone_terms(b))
+                else:
+                    pos.append(-1)
+            zone_pos[tag][z] = tuple(pos)
+            if filtered:
+                policies.append(TagPolicy(tag=tag, blocks=tuple(filtered),
+                                          followup=FOLLOWUP_FAIL))
+            else:
+                # every block of this tag excludes the zone: a poisoned chain
+                # (a worker id that cannot exist) so a shard asked anyway
+                # fails instead of inheriting a synthesised any-worker
+                # default (the router normally skips such zones entirely)
+                policies.append(TagPolicy(
+                    tag=tag,
+                    blocks=(Block(workers=(_UNSATISFIABLE_WORKER,)),),
+                    followup=FOLLOWUP_FAIL))
+        zone_scripts[z] = AAppScript(policies=tuple(policies))
+
+    return ZonePlan(
+        zones=zones,
+        chains=chains,
+        masks=masks,
+        zone_scripts=zone_scripts,
+        zone_pos=zone_pos,
+        hints=hints,
+        routed_tags=frozenset(routed),
     )

@@ -19,6 +19,8 @@ Rejection reasons (the first failing Listing-1 check, in check order):
 ``affinity:<tag>``        required affine tag not resident (lines 29-31)
 ``anti-affinity:<tag>``   anti-affine tag resident (lines 32-34)
 ``warmth-tier``           valid, but dropped by warmth-tier narrowing
+``zone-mask``             worker's zone fails the block's ``zone:`` terms
+``zone-exhausted``        a routed zone's shard yielded no valid worker
 ========================  ====================================================
 
 A valid-but-not-selected candidate carries ``reason=None`` with ``ok=True``.
@@ -33,6 +35,9 @@ REASON_MEMORY = "memory"
 REASON_CAPACITY = "invalidate:capacity"
 REASON_CONCURRENCY = "invalidate:concurrency"
 REASON_WARMTH_TIER = "warmth-tier"
+# zone-level reasons (aAPP v2 topology terms / the sharded router):
+REASON_ZONE_MASK = "zone-mask"  # worker's zone fails the block's zone terms
+REASON_ZONE_EXHAUSTED = "zone-exhausted"  # a routed zone yielded no worker
 
 
 def reason_affinity(tag: str) -> str:

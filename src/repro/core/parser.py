@@ -34,14 +34,23 @@ from .ast import (
     FOLLOWUP_FAIL,
     STRATEGY_BEST_FIRST,
 )
-from .strategies import known_strategy, resolve_strategy_name, strategy_names
+from .strategies import (
+    known_strategy,
+    known_zone_strategy,
+    resolve_strategy_name,
+    resolve_zone_strategy_name,
+    strategy_names,
+    zone_strategy_names,
+)
 
 # --------------------------------------------------------------------------- #
 # stylised-YAML pre-processing
 # --------------------------------------------------------------------------- #
 
-# `!tag` after ':', '-', ',' or '[' -> '"!tag"'
-_BANG = re.compile(r"(?P<lead>[:\-,\[]\s*)!(?P<name>[A-Za-z_][\w\-]*)")
+# `!tag` after ':', '-', ',' or '[' -> '"!tag"'; the optional `:suffix`
+# covers the v2 topology terms (`!zone:eu`), which would otherwise be cut at
+# the colon and re-read as a YAML mapping key
+_BANG = re.compile(r"(?P<lead>[:\-,\[]\s*)!(?P<name>[A-Za-z_][\w\-]*(?::[\w\-]+)?)")
 # a bare `*` value (after ':' or '-') -> '"*"'
 _STAR = re.compile(r"(?P<lead>[:\-]\s+)\*(?P<trail>\s*(?:#.*)?)$", re.MULTILINE)
 _STAR_INLINE = re.compile(r"(?P<lead>[:,\[]\s*)\*(?P<trail>\s*[,\]])")
@@ -134,7 +143,7 @@ def _parse_affinity(value: Any) -> Affinity:
     return Affinity.from_terms(_as_str_list(value, clause="affinity"))
 
 
-_BLOCK_KEYS = {"workers", "strategy", "invalidate", "affinity"}
+_BLOCK_KEYS = {"workers", "strategy", "invalidate", "affinity", "topology"}
 
 
 def _parse_block(obj: Any, *, tag: str) -> Block:
@@ -152,12 +161,21 @@ def _parse_block(obj: Any, *, tag: str) -> Block:
             f"tag {tag!r}: unknown strategy {strategy_raw!r}; registered: "
             f"{', '.join(strategy_names())}")
     strategy = resolve_strategy_name(strategy_raw)
+    topology: Optional[str] = None
+    if "topology" in obj:
+        topology_raw = str(obj["topology"]).strip()
+        if not known_zone_strategy(topology_raw):
+            raise AAppError(
+                f"tag {tag!r}: unknown topology strategy {topology_raw!r}; "
+                f"registered: {', '.join(zone_strategy_names())}")
+        topology = resolve_zone_strategy_name(topology_raw)
     invalidate = (
         _parse_invalidate(obj["invalidate"]) if "invalidate" in obj else Invalidate()
     )
     affinity = _parse_affinity(obj["affinity"]) if "affinity" in obj else Affinity()
     return Block(
-        workers=workers, strategy=strategy, invalidate=invalidate, affinity=affinity
+        workers=workers, strategy=strategy, invalidate=invalidate,
+        affinity=affinity, topology=topology,
     )
 
 
@@ -244,6 +262,18 @@ def _lint(script: AAppScript) -> None:
                     f"tag {tag!r}: tags {sorted(both)} are both affine and "
                     "anti-affine in the same block (unsatisfiable)"
                 )
+            zboth = set(b.affinity.zones) & set(b.affinity.anti_zones)
+            if zboth:
+                raise AAppError(
+                    f"tag {tag!r}: zones {sorted(zboth)} are both required "
+                    "and excluded in the same block (zone-unsatisfiable)"
+                )
+            if len(set(b.affinity.zones)) > 1:
+                raise AAppError(
+                    f"tag {tag!r}: block requires "
+                    f"{sorted(set(b.affinity.zones))} simultaneously — a "
+                    "worker lives in exactly one zone (zone-unsatisfiable)"
+                )
 
 
 def to_text(script: AAppScript, *, stylised: bool = False) -> str:
@@ -269,6 +299,8 @@ def to_text(script: AAppScript, *, stylised: bool = False) -> str:
                 for w in b.workers:
                     lines.append(f"{cont}  - {w}")
             lines.append(f"{cont}strategy: {b.strategy}")
+            if b.topology is not None:
+                lines.append(f"{cont}topology: {b.topology}")
             inv = b.invalidate
             if inv.capacity_used is not None or inv.max_concurrent_invocations is not None:
                 lines.append(f"{cont}invalidate:")
@@ -285,8 +317,12 @@ def to_text(script: AAppScript, *, stylised: bool = False) -> str:
                 lines.append(f"{cont}affinity:")
                 for t in b.affinity.affine:
                     lines.append(f"{cont}  - {t}")
+                for z in b.affinity.zones:
+                    lines.append(f"{cont}  - zone:{z}")
                 for t in b.affinity.anti_affine:
                     lines.append(f"{cont}  - {bang(t)}")
+                for z in b.affinity.anti_zones:
+                    lines.append(f"{cont}  - {bang('zone:' + z)}")
         if p.followup != FOLLOWUP_DEFAULT:
             lines.append(f"  - followup: {p.followup}")
     return "\n".join(lines) + "\n"

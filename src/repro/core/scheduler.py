@@ -63,6 +63,7 @@ from .decision import (
     REASON_MEMORY,
     REASON_UNKNOWN_WORKER,
     REASON_WARMTH_TIER,
+    REASON_ZONE_MASK,
     WorkerVerdict,
     reason_affinity,
     reason_anti_affinity,
@@ -102,6 +103,8 @@ def valid(f: str, w: str, conf: Conf, reg: Registry, block: Block) -> bool:
     view = conf.get(w)
     if view is None:  # worker unknown / failed (line 19: `w not in conf`)
         return False
+    if not block.affinity.admits_zone(view.zone):  # v2 zone terms (candidacy)
+        return False
     if view.memory_used + spec.memory > view.max_memory:  # line 19
         return False
 
@@ -138,6 +141,8 @@ def rejection_reason(
     view = conf.get(w)
     if view is None:
         return REASON_UNKNOWN_WORKER
+    if not block.affinity.admits_zone(view.zone):
+        return REASON_ZONE_MASK
     if view.memory_used + spec.memory > view.max_memory:
         return REASON_MEMORY
 

@@ -174,3 +174,115 @@ register_strategy(BestFirst(), "best-first", "platform")  # APP legacy alias
 register_strategy(Any(), "random")  # the paper's Fig. 5 spelling
 register_strategy(LeastLoaded(), "least-loaded")
 register_strategy(Warmest())
+
+
+# --------------------------------------------------------------------------- #
+# zone-selection strategies (the ``topology:`` clause)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneContext:
+    """Per-zone signals a zone-selection strategy may consult.
+
+    ``load``   — total resident function instances in the zone;
+    ``warmth`` — aggregate warm-container rank for the function being
+    scheduled across the zone's workers (0 without a pool).
+    """
+
+    load: Callable[[str], int]
+    warmth: Callable[[str], int]
+
+    @staticmethod
+    def null() -> "ZoneContext":
+        return ZoneContext(load=lambda z: 0, warmth=lambda z: 0)
+
+
+class ZoneStrategy:
+    """One zone-ordering rule for the two-level sharded router: given a
+    block's admissible zones (in the platform's stable zone order), return
+    the order in which shards should be tried.  Deterministic — zone
+    selection never consumes the decision rng."""
+
+    name: str = ""
+    #: reads the ZoneContext signals; strategies that don't (local_first)
+    #: let the router skip building them (zone load / pool warmth rollups
+    #: cost more than the ordering itself on the hot path)
+    needs_ctx: bool = True
+
+    def order(self, zones: Sequence[str], origin: "str | None",
+              ctx: ZoneContext) -> Tuple[str, ...]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<ZoneStrategy {self.name}>"
+
+
+class LocalFirst(ZoneStrategy):
+    """The request's origin zone first (when admissible), then the rest in
+    stable order — De Palma et al.'s locality default."""
+
+    name = "local_first"
+    needs_ctx = False
+
+    def order(self, zones, origin, ctx):
+        if origin is None or origin not in zones:
+            return tuple(zones)
+        return (origin,) + tuple(z for z in zones if z != origin)
+
+
+class LeastLoadedZone(ZoneStrategy):
+    """Ascending total resident instances; stable order on ties."""
+
+    name = "least_loaded_zone"
+
+    def order(self, zones, origin, ctx):
+        load = ctx.load
+        return tuple(sorted(zones, key=lambda z: (load(z), zones.index(z))))
+
+
+class WarmestZone(ZoneStrategy):
+    """Descending aggregate warmth for the function; ties broken by lower
+    zone load, then stable order."""
+
+    name = "warmest_zone"
+
+    def order(self, zones, origin, ctx):
+        load, warmth = ctx.load, ctx.warmth
+        return tuple(sorted(
+            zones, key=lambda z: (-warmth(z), load(z), zones.index(z))))
+
+
+_ZONE_REGISTRY: Dict[str, ZoneStrategy] = {}
+_ZONE_ALIASES: Dict[str, str] = {}
+
+
+def register_zone_strategy(strategy: ZoneStrategy, *aliases: str) -> ZoneStrategy:
+    if not strategy.name:
+        raise ValueError("zone strategy must set a canonical .name")
+    _ZONE_REGISTRY[strategy.name] = strategy
+    _ZONE_ALIASES[strategy.name] = strategy.name
+    for a in aliases:
+        _ZONE_ALIASES[a] = strategy.name
+    return strategy
+
+
+def resolve_zone_strategy_name(name: str) -> str:
+    return _ZONE_ALIASES[name]
+
+
+def get_zone_strategy(name: str) -> ZoneStrategy:
+    return _ZONE_REGISTRY[_ZONE_ALIASES[name]]
+
+
+def zone_strategy_names() -> Tuple[str, ...]:
+    return tuple(_ZONE_REGISTRY)
+
+
+def known_zone_strategy(name: str) -> bool:
+    return name in _ZONE_ALIASES
+
+
+register_zone_strategy(LocalFirst(), "local-first")
+register_zone_strategy(LeastLoadedZone(), "least-loaded-zone")
+register_zone_strategy(WarmestZone(), "warmest-zone")

@@ -120,6 +120,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, reduced: bool = Fal
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # older jax returns [dict], newer returns dict
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     mine = hlo_flops.analyze(text)
     colls = hlo_mod.collective_summary(text)

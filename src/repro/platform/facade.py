@@ -46,6 +46,7 @@ from repro.core.compile import CompiledScript, compile_script
 from repro.core.batched import SchedulerSession
 from repro.core.decision import Decision
 from repro.core.scheduler import explain as _explain_scalar
+from repro.core.sharded import ShardedSession
 from repro.core.state import Activation, ClusterState, Registry
 
 ClusterLike = Union[None, ClusterState, Mapping[str, float],
@@ -81,6 +82,8 @@ class Platform:
         seed: int = 0,
         clock: Optional[Callable[[], float]] = None,
         backend: str = "np",
+        zones: Optional[Mapping[str, object]] = None,
+        zone_strategy: str = "local_first",
     ):
         self.state = _as_state(cluster)
         self.registry = registry if registry is not None else Registry()
@@ -95,16 +98,34 @@ class Platform:
         self._now = 0.0
         self._owns_clock = clock is None
         self.clock: Callable[[], float] = clock or (lambda: self._now)
+        if zones:
+            # {worker: zone-name} or {worker: WorkerSpec/CellSpec}
+            self.state.set_zones(zones)
         self.compiled: Optional[CompiledScript] = None
+        zone_set = [z for z in self.state.zones() if z]
         if source is not None:
             if isinstance(source, CompiledScript):
                 self.compiled = source
             else:
-                self.compiled = compile_script(source, self.registry)
-        self.session = SchedulerSession(
-            self.state, self.registry,
-            self.compiled if self.compiled is not None else None,
-            backend=backend, pool=pool, clock=self.clock)
+                self.compiled = compile_script(
+                    source, self.registry,
+                    zones=zone_set if zone_set else None)
+        # sharded control plane whenever the cluster carries >1 zone: the
+        # session shards by zone and *delegates* zone-free decisions to its
+        # flat sub-session, so zoning a cluster never changes zone-free
+        # scheduling (bit-identical; property-tested)
+        self._sharded = len(zone_set) > 1
+        if self._sharded:
+            self.session: SchedulerSession = ShardedSession(
+                self.state, self.registry,
+                self.compiled if self.compiled is not None else None,
+                backend=backend, pool=pool, clock=self.clock,
+                zone_strategy=zone_strategy)
+        else:
+            self.session = SchedulerSession(
+                self.state, self.registry,
+                self.compiled if self.compiled is not None else None,
+                backend=backend, pool=pool, clock=self.clock)
         self._containers: Dict[str, str] = {}  # activation id -> container id
 
     # ------------------------------------------------------------------ #
@@ -152,8 +173,12 @@ class Platform:
         """Register a function: ``reg[f] = (memory, tag)`` (Listing 1)."""
         self.registry.register(name, memory=memory, tag=tag)
 
-    def add_worker(self, name: str, *, max_memory: float) -> None:
-        self.state.add_worker(name, max_memory=max_memory)
+    def add_worker(self, name: str, *, max_memory: float,
+                   zone: Optional[str] = None) -> None:
+        self.state.add_worker(name, max_memory=max_memory, zone=zone)
+
+    def zones(self) -> Tuple[str, ...]:
+        return self.state.zones()
 
     def fail_worker(self, name: str):
         """Worker crash/drain: evicts its activations (returned for
@@ -171,21 +196,35 @@ class Platform:
     # ------------------------------------------------------------------ #
 
     def decide(self, function: str, rng: Optional[random.Random] = None, *,
-               warmth="auto") -> Decision:
+               warmth="auto", zone: Optional[str] = None) -> Decision:
         """One Listing-1 decision, *not* applied (no allocation, no
         container charge).  Simulator drivers that own allocation use this
-        (or :meth:`placer`)."""
-        worker = self.session.try_schedule(
-            function, rng=rng if rng is not None else self.rng, warmth=warmth)
+        (or :meth:`placer`).  ``zone`` is the request's origin zone — the
+        sharded router's ``local_first`` locality hint (ignored on an
+        unzoned platform)."""
+        if self._sharded:
+            worker = self.session.try_schedule(
+                function, rng=rng if rng is not None else self.rng,
+                warmth=warmth, origin_zone=zone)
+        else:
+            worker = self.session.try_schedule(
+                function, rng=rng if rng is not None else self.rng,
+                warmth=warmth)
         return Decision(function, self.registry[function].tag, worker)
 
     def invoke(self, function: str, rng: Optional[random.Random] = None, *,
-               warmth="auto") -> Decision:
+               warmth="auto", zone: Optional[str] = None) -> Decision:
         """Decide *and apply*: allocate in the state tables (the session's
         tensors follow via the change feed) and, with a pool attached,
         acquire a container and charge its cold/warm/hot start."""
-        worker = self.session.try_schedule(
-            function, rng=rng if rng is not None else self.rng, warmth=warmth)
+        if self._sharded:
+            worker = self.session.try_schedule(
+                function, rng=rng if rng is not None else self.rng,
+                warmth=warmth, origin_zone=zone)
+        else:
+            worker = self.session.try_schedule(
+                function, rng=rng if rng is not None else self.rng,
+                warmth=warmth)
         if self.forecast is not None:
             self.forecast.observe(function, self.clock())
         if worker is None:
@@ -224,14 +263,18 @@ class Platform:
         return act
 
     def explain(self, function: str, *,
-                rng: Optional[random.Random] = None) -> Decision:
+                rng: Optional[random.Random] = None,
+                zone: Optional[str] = None) -> Decision:
         """Side-effect-free decision with a full explain-trace: per evaluated
         block, every considered worker's verdict (the first failing
         Listing-1 check, ``warmth-tier`` drops, or ok).  Runs the scalar
         reference path on the live conf — bit-identical semantics to the
-        session (property-tested), deliberately not the hot path.  Does not
-        consume the platform rng (``strategy: any`` draws from a private
-        deterministic generator unless ``rng`` is given)."""
+        session (property-tested), deliberately not the hot path.  On a
+        zoned platform, zone-routed tags additionally trace the router:
+        ``zone-mask`` for zones a block's terms exclude, ``zone-exhausted``
+        for routed zones that yielded no worker.  Does not consume the
+        platform rng (``strategy: any`` draws from a private deterministic
+        generator unless ``rng`` is given)."""
         if self.compiled is None:
             raise ValueError("no script loaded; reload_script() first")
         warmth_fn = None
@@ -239,19 +282,29 @@ class Platform:
             now = self.clock()
             pool = self.pool
             warmth_fn = lambda f, w: pool.warmth(f, w, now)
+        if self._sharded:
+            return self.session.explain(
+                function,
+                rng=rng if rng is not None else random.Random(self._seed),
+                warmth=warmth_fn, origin_zone=zone)
         return _explain_scalar(
             function, self.state.conf(), self.compiled.script, self.registry,
             rng=rng if rng is not None else random.Random(self._seed),
             warmth=warmth_fn)
 
     def placer(self, rng: Optional[random.Random] = None
-               ) -> Callable[[str], Optional[str]]:
+               ) -> Callable[..., Optional[str]]:
         """A ``scheduler_fn`` for the workload driver / simulator: one
         decision per call, returning the worker id (or None) — the shape
-        :class:`repro.workload.TraceWorkload` consumes."""
+        :class:`repro.workload.TraceWorkload` consumes.  Accepts an optional
+        ``zone=`` keyword (the arrival's origin zone) which the sharded
+        router uses as its locality hint."""
         rng = rng if rng is not None else self.rng
         session = self.session
-        return lambda f: session.try_schedule(f, rng=rng)
+        if self._sharded:
+            return lambda f, zone=None: session.try_schedule(
+                f, rng=rng, origin_zone=zone)
+        return lambda f, zone=None: session.try_schedule(f, rng=rng)
 
     # ------------------------------------------------------------------ #
     # script lifecycle / time
@@ -261,8 +314,10 @@ class Platform:
         """Recompile and hot-swap the platform script.  Lowers into the live
         session's tag universe, so existing state tensors and unrelated row
         banks survive; decisions after the swap use the new script."""
+        zone_set = [z for z in self.state.zones() if z]
         compiled = compile_script(source, self.registry,
-                                  tag_index=self.session.tag_index)
+                                  tag_index=self.session.tag_index,
+                                  zones=zone_set if zone_set else None)
         self.compiled = compiled
         self.session.set_default_script(compiled)
         return compiled
@@ -297,10 +352,14 @@ class Platform:
     # ------------------------------------------------------------------ #
 
     def stats(self) -> Dict:
-        """Operational counters: session data-plane stats + pool metrics."""
+        """Operational counters: session data-plane stats + pool metrics;
+        on a zoned platform, per-zone rollups (worker count, resident load,
+        shard data-plane counters) under ``"zones"``."""
         out = dict(self.session.stats)
         out["workers"] = len(self.state.workers())
         out["tags"] = len(self.session.tag_index)
+        if self._sharded:
+            out["zones"] = self.session.zone_stats()
         if self.pool is not None:
             out["pool"] = self.pool.metrics.snapshot()
         return out

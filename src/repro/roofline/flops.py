@@ -82,6 +82,21 @@ def _fusion_called_blocks(blocks: Dict[str, List[str]]) -> Set[str]:
     return out
 
 
+def _byte_transparent_blocks(blocks: Dict[str, List[str]]) -> Set[str]:
+    """Computations whose HBM traffic is charged at their call site, matching
+    XLA's 'bytes accessed': fusion bodies (``calls=``) and any ``to_apply=``
+    callee — plain ``call`` targets (the CPU backend's parallel regions) and
+    reduce/reduce-window/sort subcomputations.  While-loop bodies/conditions
+    are *not* included (``condition=``/``body=`` attributes): their traffic is
+    real per iteration and is what the loop-aware model exists to count."""
+    out = _fusion_called_blocks(blocks)
+    for lines in blocks.values():
+        for line in lines:
+            for m in _CALL_RE.finditer(line):
+                out.add(m.group(1))
+    return out
+
+
 _PARAM_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s*parameter\(")
 
 
@@ -145,7 +160,7 @@ def analyze(hlo_text: str) -> Dict[str, float]:
     """Loop-aware {'flops', 'bytes'} per device per step."""
     blocks, _entry = _parse_blocks(hlo_text)
     mult = computation_multiplicities(hlo_text)
-    fusion_blocks = _fusion_called_blocks(blocks)
+    fusion_blocks = _byte_transparent_blocks(blocks)
 
     total_flops = 0.0
     total_bytes = 0.0

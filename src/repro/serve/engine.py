@@ -50,7 +50,7 @@ from repro.core import (
     TagPolicy,
 )
 from repro.core.deprecation import warn_once
-from repro.cluster.topology import CellSpec
+from repro.cluster.topology import CellSpec, zone_map
 from repro.platform import Platform
 from repro.pool import WarmPool
 
@@ -125,7 +125,13 @@ class Engine:
                 "Engine(cells, pool=..., forecast=...) is the v1 call shape;"
                 " construct a repro.platform.Platform and pass platform=...",
             )
-            platform = Platform(cluster=None, pool=pool, forecast=forecast,
+            # the cells' zones ride along (the shared WorkerSpec/CellSpec
+            # zone protocol): a multi-pod engine gets the sharded control
+            # plane transparently, and its zone-free synthesised policies
+            # delegate to the flat path (bit-identical decisions)
+            platform = Platform(cluster={n: s.hbm_gb for n, s in cells.items()},
+                                zones=zone_map(cells),
+                                pool=pool, forecast=forecast,
                                 clock=clock, seed=seed if seed is not None
                                 else 0)
         elif pool is not None or forecast is not None:
@@ -162,7 +168,8 @@ class Engine:
         present = set(self.state.workers())
         for name, spec in cells.items():
             if name not in present:
-                self.state.add_worker(name, max_memory=spec.hbm_gb)
+                self.state.add_worker(name, max_memory=spec.hbm_gb,
+                                      zone=spec.zone)
             self._heartbeat[name] = self.clock()
         # incremental scheduling data plane (owned by the platform): state
         # tensors maintained by deltas off the ClusterState change feed,
@@ -466,7 +473,8 @@ class Engine:
 
     def add_cell(self, spec: CellSpec) -> None:
         self.cells[spec.name] = spec
-        self.state.add_worker(spec.name, max_memory=spec.hbm_gb)
+        self.state.add_worker(spec.name, max_memory=spec.hbm_gb,
+                              zone=spec.zone)
         self._heartbeat[spec.name] = self.clock()
 
     def drain_cell(self, cell: str) -> List[str]:

@@ -1,16 +1,20 @@
-"""Trace-driven workload scenarios (Poisson / bursty / diurnal / chained DAG)
-and the open-loop driver that replays them onto the cluster simulator."""
+"""Trace-driven workload scenarios (Poisson / bursty / diurnal / chained DAG
+/ multi-region skewed diurnal) and the open-loop driver that replays them
+onto the cluster simulator."""
 from .traces import (
     Arrival,
     bursty_trace,
     chained_trace,
     diurnal_trace,
+    multiregion_trace,
     poisson_trace,
 )
 from .driver import InvocationRecord, TraceWorkload, affine_terms_of
 from .scenarios import (
     COMPUTE_S,
     FUNCTION_MIX,
+    MULTIREGION,
+    MULTIREGION_ZONES,
     SCENARIOS,
     build_trace,
     register_functions,
@@ -18,7 +22,8 @@ from .scenarios import (
 
 __all__ = [
     "Arrival", "poisson_trace", "bursty_trace", "diurnal_trace",
-    "chained_trace", "InvocationRecord", "TraceWorkload", "affine_terms_of",
-    "SCENARIOS", "FUNCTION_MIX", "COMPUTE_S", "build_trace",
-    "register_functions",
+    "chained_trace", "multiregion_trace", "InvocationRecord",
+    "TraceWorkload", "affine_terms_of",
+    "SCENARIOS", "MULTIREGION", "MULTIREGION_ZONES", "FUNCTION_MIX",
+    "COMPUTE_S", "build_trace", "register_functions",
 ]

@@ -40,6 +40,7 @@ class InvocationRecord:
     latency: float
     start_kind: str  # cold | warm | hot | none (no pool) | failed
     failed: bool
+    origin_zone: Optional[str] = None  # the arrival's zone stamp (if any)
 
 
 def affine_terms_of(script: Optional[AAppScript], tag: str) -> List[str]:
@@ -95,11 +96,18 @@ class TraceWorkload:
         t0 = sim.now
         if self.forecast is not None:
             self.forecast.observe(f, t0)
-        w = self.schedule(f)
+        # zone-stamped arrivals (multi-region traces) carry their origin to
+        # the scheduler — Platform.placer accepts zone=; plain callables
+        # without the keyword keep working for zone-agnostic traces
+        if arrival.zone is not None:
+            w = self.schedule(f, zone=arrival.zone)
+        else:
+            w = self.schedule(f)
         if w is None:
             sim.failures.append(f)
             self.records.append(InvocationRecord(f, "<unschedulable>", t0,
-                                                 float("nan"), "failed", True))
+                                                 float("nan"), "failed", True,
+                                                 arrival.zone))
             return
         act = sim.state.allocate(f, w, sim.registry)
         start = sim.container_start(f, w, act.activation_id)
@@ -126,7 +134,9 @@ class TraceWorkload:
             sim.container_release(act.activation_id)
             sim.state.complete(act.activation_id)
             self.records.append(InvocationRecord(
-                f, w, t0, sim.now - t0, kind, False))
+                f, w, t0, sim.now - t0, kind, False, arrival.zone))
 
-        sim.after(sim.overhead(w) + start, lambda: sim.compute(
+        # cross-zone front-door routing (zone-stamped arrivals only)
+        route = sim.route_cost(arrival.zone, w)
+        sim.after(sim.overhead(w) + start + route, lambda: sim.compute(
             f, w, self.compute.get(f, 0.0), act.activation_id, finish))

@@ -23,6 +23,7 @@ from .traces import (
     bursty_trace,
     chained_trace,
     diurnal_trace,
+    multiregion_trace,
     poisson_trace,
 )
 
@@ -39,6 +40,13 @@ COMPUTE_S: Dict[str, float] = {n: c for n, (_m, _t, c, _w) in FUNCTION_MIX.items
 
 SCENARIOS: Tuple[str, ...] = ("poisson", "bursty", "diurnal", "chained")
 
+# the multi-region scenario is additive (zone-stamped arrivals for the
+# sharded control plane); the 4-scenario cold-start baseline stays as is
+MULTIREGION = "multiregion"
+#: default zone traffic skew: a dominant region, a mid one, a small one
+MULTIREGION_ZONES: Tuple[Tuple[str, float], ...] = (
+    ("eu", 3.0), ("us", 2.0), ("ap", 1.0))
+
 
 def register_functions(reg: Registry, names: Sequence[str] = None) -> None:
     for n in (names if names is not None else FUNCTION_MIX):
@@ -52,7 +60,9 @@ def _mix(names: Sequence[str]) -> List[Tuple[str, float]]:
 
 
 def build_trace(name: str, *, duration: float = 120.0, rate: float = 2.0,
-                seed: int = 0) -> List[Arrival]:
+                seed: int = 0,
+                zones: Sequence[Tuple[str, float]] = MULTIREGION_ZONES,
+                ) -> List[Arrival]:
     rng = random.Random(seed)
     simple = _mix(["api", "thumb", "etl"])
     if name == "poisson":
@@ -66,4 +76,9 @@ def build_trace(name: str, *, duration: float = 120.0, rate: float = 2.0,
     if name == "chained":
         return chained_trace(rate, duration, rng,
                              parent="divide", children=(("impera", 2),))
-    raise ValueError(f"unknown scenario {name!r}; have {SCENARIOS}")
+    if name == MULTIREGION:
+        return multiregion_trace(tuple(zones), 0.2 * rate, 3.0 * rate,
+                                 duration, simple, rng,
+                                 period=duration / 2.0)
+    raise ValueError(
+        f"unknown scenario {name!r}; have {SCENARIOS + (MULTIREGION,)}")

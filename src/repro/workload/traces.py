@@ -33,6 +33,10 @@ class Arrival:
     # (child function, count) pairs spawned when this invocation's compute
     # finishes — the divide -> 2 x impera DAG edge.
     children: Tuple[Tuple[str, int], ...] = ()
+    # origin zone of the request (multi-region traces); None = zone-agnostic.
+    # The workload driver forwards it to the scheduler as the sharded
+    # router's ``local_first`` locality hint.
+    zone: Optional[str] = None
 
 
 def _pick(rng: random.Random, functions: Sequence[Tuple[str, float]]) -> str:
@@ -104,6 +108,52 @@ def diurnal_trace(
         if rng.random() < lam / lam_max:
             out.append(Arrival(t=t, function=_pick(rng, functions)))
         t += rng.expovariate(lam_max)
+    return out
+
+
+def multiregion_trace(
+    zone_weights: Sequence[Tuple[str, float]],
+    base_rate: float,
+    peak_rate: float,
+    duration: float,
+    functions: Sequence[Tuple[str, float]],
+    rng: random.Random,
+    *,
+    period: float = 60.0,
+) -> List[Arrival]:
+    """Skewed per-zone diurnal arrivals (the multi-region regime of
+    Przybylski et al.'s data-driven scheduling setting).
+
+    Each zone runs its own sinusoidal day/night cycle, *phase-shifted* by
+    its position around the globe (zone ``i`` of ``Z`` is offset by
+    ``i/Z`` of a period — when one region peaks another idles) and scaled
+    by its traffic weight.  Every arrival is stamped with its origin zone,
+    which the sharded control plane's ``local_first`` router consumes.
+    Merged time-sorted with a deterministic (t, zone) tiebreak."""
+    if peak_rate < base_rate:
+        raise ValueError("peak_rate must be >= base_rate")
+    total_w = sum(w for _, w in zone_weights)
+    if total_w <= 0:
+        raise ValueError("zone weights must sum positive")
+    out: List[Arrival] = []
+    Z = len(zone_weights)
+    for i, (zone, weight) in enumerate(zone_weights):
+        scale = weight * Z / total_w  # weights redistribute, not inflate
+        lam_base = base_rate * scale
+        lam_peak = peak_rate * scale
+        lam_max = lam_peak
+        if lam_max <= 0:
+            continue
+        phase = (i / Z) * period
+        t = rng.expovariate(lam_max)
+        while t < duration:
+            lam = lam_base + (lam_peak - lam_base) * (
+                1.0 + math.sin(2.0 * math.pi * (t + phase) / period)) / 2.0
+            if rng.random() < lam / lam_max:
+                out.append(Arrival(t=t, function=_pick(rng, functions),
+                                   zone=zone))
+            t += rng.expovariate(lam_max)
+    out.sort(key=lambda a: (a.t, a.zone or ""))
     return out
 
 

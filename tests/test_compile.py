@@ -143,3 +143,49 @@ def test_session_adopts_compiled_script_and_stays_exact():
 def test_compile_rejects_non_script_input():
     with pytest.raises(AAppError):
         compile_script(42, _reg())
+
+
+# --------------------------------------------------------------------------- #
+# v3 zone pass: diagnostics + IR version
+# --------------------------------------------------------------------------- #
+
+
+def test_ir_version_is_3():
+    from repro.core.compile import IR_VERSION
+
+    assert IR_VERSION == 3
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    assert compile_script("t:\n  workers: *\n", reg).ir_version == 3
+
+
+def test_validate_warns_on_unknown_zone_term():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    compiled = compile_script(
+        "t:\n  workers: *\n  affinity: [zone:mars]\n", reg,
+        zones=("eu", "us"))
+    assert any("matches no configured zone" in d.message
+               for d in compiled.warnings)
+    # without a configured zone set the same script compiles silently
+    # (dynamic platforms may grow zones later)
+    clean = compile_script("t:\n  workers: *\n  affinity: [zone:mars]\n", reg)
+    assert not any("configured zone" in d.message for d in clean.warnings)
+
+
+def test_validate_rejects_zone_unsatisfiable_blocks():
+    from repro.core.ast import Affinity, Block, TagPolicy, AAppScript
+
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    both = AAppScript(policies=(TagPolicy(tag="t", blocks=(
+        Block(workers=("*",),
+              affinity=Affinity(zones=("eu",), anti_zones=("eu",))),)),))
+    with pytest.raises(CompileError) as ei:
+        compile_script(both, reg)
+    assert "zone-unsatisfiable" in str(ei.value)
+    two = AAppScript(policies=(TagPolicy(tag="t", blocks=(
+        Block(workers=("*",), affinity=Affinity(zones=("eu", "us"))),)),))
+    with pytest.raises(CompileError) as ei:
+        compile_script(two, reg)
+    assert "exactly one zone" in str(ei.value)

@@ -156,3 +156,88 @@ def test_new_strategies_parse_with_aliases():
     assert s["t"].blocks[0].strategy == "least_loaded"
     with pytest.raises(AAppError):
         parse("t:\n  workers: *\n  strategy: hottest\n")
+
+
+# --------------------------------------------------------------------------- #
+# v3 topology terms: zone:/!zone: affinity + the per-block topology hint
+# --------------------------------------------------------------------------- #
+
+ZONED = """
+d:
+  workers: *
+  strategy: best_first
+  topology: local_first
+  affinity: [x, zone:eu, !y, !zone:us]
+i:
+  - workers:
+      - w1
+      - w2
+    topology: least_loaded_zone
+    affinity:
+      - zone:ap
+  - followup: fail
+"""
+
+
+def test_zone_terms_parse_into_affinity_fields():
+    s = parse(ZONED)
+    a = s["d"].blocks[0].affinity
+    assert a.affine == ("x",)
+    assert a.anti_affine == ("y",)
+    assert a.zones == ("eu",)
+    assert a.anti_zones == ("us",)
+    assert not a.empty and not a.zone_free
+    assert s["d"].blocks[0].topology == "local_first"
+    assert s["i"].blocks[0].topology == "least_loaded_zone"
+    assert s["i"].blocks[0].affinity.zones == ("ap",)
+    assert s["i"].followup == "fail"
+
+
+@pytest.mark.parametrize("stylised", [False, True])
+def test_zone_terms_roundtrip(stylised):
+    s = parse(ZONED)
+    text = s.to_yaml(stylised=stylised)
+    assert parse(text) == s
+    # and a second trip is a fixed point
+    assert parse(parse(text).to_yaml(stylised=stylised)) == s
+
+
+def test_zone_terms_stylised_bare_forms():
+    s = parse(ZONED)
+    text = s.to_yaml(stylised=True)
+    assert "- zone:eu" in text
+    assert "- !zone:us" in text  # the bare bang form survives
+    assert '"' not in text
+    strict = s.to_yaml()
+    assert '- "!zone:us"' in strict
+    assert parse(strict) == s
+
+
+def test_inline_bare_bang_zone_term():
+    # the pre-processor must quote `!zone:us` inside flow lists too
+    s = parse("t:\n  workers: *\n  affinity: [!zone:us, zone:eu]\n")
+    a = s["t"].blocks[0].affinity
+    assert a.anti_zones == ("us",) and a.zones == ("eu",)
+
+
+def test_topology_hint_validation():
+    s = parse("t:\n  workers: *\n  topology: local-first\n")  # alias
+    assert s["t"].blocks[0].topology == "local_first"
+    with pytest.raises(AAppError):
+        parse("t:\n  workers: *\n  topology: nearest_star\n")
+
+
+def test_zone_unsatisfiable_is_a_parse_error():
+    with pytest.raises(AAppError):
+        parse("t:\n  workers: *\n  affinity: [zone:eu, !zone:eu]\n")
+    with pytest.raises(AAppError):
+        parse("t:\n  workers: *\n  affinity: [zone:eu, zone:us]\n")
+
+
+def test_zone_terms_never_enter_the_tag_universe():
+    from repro.core import Registry, compile_script
+
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="d")
+    compiled = compile_script(parse(ZONED), reg)
+    assert not any(t.startswith("zone:") for t in compiled.tag_index.tags)

