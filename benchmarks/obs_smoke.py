@@ -1,0 +1,171 @@
+"""Observability-plane CI smoke: traced sim run + schema + tax assertions.
+
+Three checks, each cheap enough for every CI run:
+
+1. **Chained trace** — the ``chained`` divide-et-impera scenario runs on
+   the paper testbed with a fully enabled :class:`repro.obs.Obs` bundle
+   (tracer with verdicts, stage timers) shared by the platform *and* the
+   workload driver.  Asserts the span chain is complete (every decision
+   carries begin/blocks records, every invoke a matching complete),
+   child invocations (``impera``) appear, a mid-run ``reload`` compile
+   event is recorded, the metrics registry snapshot carries every layer's
+   collectors, and two identical runs export byte-identical JSONL — the
+   tracer introduces no wall-clock or randomness under the sim's virtual
+   clock.
+
+2. **Chrome-trace schema** — :func:`repro.obs.validate_chrome_trace` over
+   the run's timeline export must return zero violations, and the export
+   must contain ``X`` (complete) duration events.
+
+3. **Disabled-path tax** — the ``overhead.py --obs`` disabled gate: an
+   attached-but-quiet Obs must stay under the <1% facade budget.
+
+Usage: ``PYTHONPATH=src python benchmarks/obs_smoke.py [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+from pathlib import Path
+from typing import Dict, Optional, Sequence
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import paper_testbed
+from repro.obs import Obs, validate_chrome_trace
+from repro.platform import Platform
+from repro.pool import StartCosts, WarmPool, make_policy
+from repro.workload import COMPUTE_S, TraceWorkload, build_trace, \
+    register_functions
+
+SCRIPT = """
+api:
+  workers: *
+  strategy: random
+d:
+  workers: *
+  strategy: random
+i:
+  workers: *
+  strategy: random
+  affinity: [d]
+"""
+
+DURATION = 60.0
+RATE = 2.0
+
+
+def run_traced(duration: float = DURATION, rate: float = RATE,
+               seed: int = 0) -> Dict:
+    """One chained-scenario sim run with the full obs plane on; returns
+    the obs bundle plus run facts the assertions consume."""
+    obs = Obs.enabled(verdicts=True)
+    pool = WarmPool(make_policy("fixed_ttl", ttl=3.0),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=512.0, hot_window=1.0)
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=seed, pool=pool)
+    register_functions(sim.registry)
+    platform = Platform.for_sim(sim, SCRIPT, obs=obs)
+    wl = TraceWorkload(sim, platform.placer(random.Random(seed + 1)),
+                       COMPUTE_S, script=platform.script, obs=obs)
+    wl.load(build_trace("chained", duration=duration, rate=rate, seed=seed))
+    # a mid-run hot reload so the compile/reload leg of the span chain is
+    # exercised (same source: decisions are unchanged, the event records)
+    sim.at(duration / 2.0, lambda: platform.reload_script(SCRIPT))
+    sim.run()
+    return {"obs": obs, "sim": sim, "wl": wl, "platform": platform}
+
+
+def check_trace(run: Dict) -> Dict[str, int]:
+    obs, wl = run["obs"], run["wl"]
+    recs = obs.tracer.records()
+    assert recs, "traced run recorded nothing"
+    by_kind: Dict[str, int] = {}
+    for r in recs:
+        by_kind[r["kind"]] = by_kind.get(r["kind"], 0) + 1
+    for kind in ("begin", "decision", "blocks", "invoke", "complete",
+                 "compile"):
+        assert by_kind.get(kind), f"no {kind!r} records in traced run"
+    ok = sum(1 for r in wl.records if not r.failed)
+    assert by_kind["invoke"] == ok, (
+        f"invoke records ({by_kind['invoke']}) != successful "
+        f"invocations ({ok})")
+    # chained children actually spawned and traced
+    assert any(r["kind"] == "invoke" and r["function"] == "impera"
+               for r in recs), "no child (impera) invokes in the trace"
+    # every invoke span closes: the sim drains all completions
+    invoked = {r["id"] for r in recs if r["kind"] == "invoke"}
+    completed = {r["id"] for r in recs if r["kind"] == "complete"}
+    assert invoked <= completed, (
+        f"{len(invoked - completed)} invoke spans never completed")
+    # verdict mode: block walks carry per-worker verdicts with the
+    # explain() rejection-reason vocabulary (None == schedulable)
+    walks = [r for r in recs if r["kind"] == "blocks"]
+    assert walks and all(r["verdicts"] is not None for r in walks)
+    return by_kind
+
+
+def check_chrome(run: Dict) -> Dict:
+    ct = run["obs"].tracer.chrome_trace()
+    errs = validate_chrome_trace(ct)
+    assert not errs, f"chrome-trace schema violations: {errs[:5]}"
+    xs = [e for e in ct["traceEvents"] if e.get("ph") == "X"]
+    assert xs, "no X (complete) events in the timeline"
+    assert all(e["dur"] >= 0 for e in xs)
+    return ct
+
+
+def check_registry(run: Dict) -> Dict:
+    snap = run["obs"].snapshot()
+    for prefix in ("session.", "platform.", "pool.", "sim."):
+        assert any(k.startswith(prefix) for k in snap), (
+            f"no {prefix}* keys in registry snapshot: collectors "
+            f"not registered")
+    assert snap["session.decisions"] > 0
+    assert snap["sim.events"] > 0
+    # sampled stage timers fed the latency histograms
+    assert any(k.startswith("sched.stage.") and k.endswith(".count")
+               for k in snap)
+    render = run["obs"].registry.render()
+    assert "session_decisions" in render
+    return snap
+
+
+def check_determinism(duration: float, rate: float) -> None:
+    a = run_traced(duration, rate).get("obs").tracer.to_jsonl()
+    b = run_traced(duration, rate).get("obs").tracer.to_jsonl()
+    assert a == b, "traced replays diverged: tracer leaked wall-clock or rng"
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter sim + fewer tax pairs (CI smoke)")
+    args = ap.parse_args(argv)
+    duration = 30.0 if args.quick else DURATION
+
+    run = run_traced(duration)
+    by_kind = check_trace(run)
+    ct = check_chrome(run)
+    snap = check_registry(run)
+    check_determinism(duration, RATE)
+    print(f"obs smoke: {sum(by_kind.values())} trace records "
+          f"({by_kind}), {len(ct['traceEvents'])} timeline events, "
+          f"{len(snap)} registry keys — chain, schema, determinism OK")
+
+    from benchmarks import overhead as oh
+    reps = 150 if args.quick else oh.OBS_REPEATS
+    dis = oh._best_of_two(oh.run_obs_disabled_microbench,
+                          oh.OBS_DISABLED_BUDGET, repeats=reps)
+    assert dis["overhead"] < oh.OBS_DISABLED_BUDGET, (
+        f"disabled obs adds {dis['overhead']*100:.2f}% "
+        f"(budget {oh.OBS_DISABLED_BUDGET*100:.0f}%): {dis}")
+    print(f"obs smoke: disabled-path tax {dis['overhead']*100:+.2f}% "
+          f"< {oh.OBS_DISABLED_BUDGET*100:.0f}% budget")
+
+
+if __name__ == "__main__":
+    main()

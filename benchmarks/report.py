@@ -3,12 +3,26 @@
 Usage: PYTHONPATH=src:. python -m benchmarks.report > EXPERIMENTS.generated.md
 (The checked-in EXPERIMENTS.md embeds this output plus the hand-written §Perf
 iteration log.)
+
+``--timeline OUT.json`` instead replays the multi-region sharded scenario
+(``benchmarks/multiregion.py``'s ``local_first`` configuration) with the
+full observability plane attached and writes the run's Chrome-trace
+timeline (open in ``chrome://tracing`` or https://ui.perfetto.dev): one
+process per zone, one track per worker plus a scheduler control track,
+``X`` spans for invocations keyed by the simulator's virtual clock.  The
+export is schema-validated before writing; the checked-in
+``artifacts/timeline_multiregion.json`` is this command's output.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
+import sys
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from benchmarks.roofline import load, run as roofline_table
 
@@ -43,7 +57,64 @@ def dryrun_summary(dir_: str = "artifacts/dryrun") -> str:
     return "\n".join(lines)
 
 
-def main() -> None:
+def export_timeline(out: str, *, duration: float = 60.0, rate: float = 4.0,
+                    zones=("eu", "us", "ap"), replicas: int = 4,
+                    seed: int = 0) -> dict:
+    """Replay the multi-region ``local_first`` scenario traced end-to-end
+    and write the validated Chrome-trace timeline to ``out``."""
+    import random
+
+    from benchmarks import multiregion as mr
+    from repro.cluster.simulator import ClusterSim, SimParams
+    from repro.cluster.topology import ZoneTopology, multizone_testbed
+    from repro.obs import Obs, validate_chrome_trace
+    from repro.platform import Platform
+    from repro.pool import WarmPool, make_policy
+    from repro.workload import (COMPUTE_S, MULTIREGION, TraceWorkload,
+                                build_trace, register_functions)
+
+    obs = Obs.enabled(verdicts=False)
+    pool = WarmPool(make_policy("fixed_ttl", ttl=mr.TTL), costs=mr.COSTS,
+                    budget_mb=mr.BUDGET_MB, hot_window=1.0)
+    topo = ZoneTopology(zones=tuple(zones), overhead={})
+    sim = ClusterSim(multizone_testbed(tuple(zones), replicas=replicas),
+                     SimParams(cross_zone_route=0.35), seed=seed, pool=pool,
+                     topology=topo)
+    register_functions(sim.registry)
+    platform = Platform.for_sim(sim, mr.SHARDED_SCRIPT, obs=obs)
+    wl = TraceWorkload(sim, platform.placer(random.Random(seed + 1)),
+                       COMPUTE_S, script=platform.script, obs=obs)
+    zone_weights = [(z, float(len(zones) - i)) for i, z in enumerate(zones)]
+    wl.load(build_trace(MULTIREGION, duration=duration, rate=rate, seed=seed,
+                        zones=zone_weights))
+    sim.run()
+
+    ct = obs.tracer.chrome_trace()
+    errs = validate_chrome_trace(ct)
+    if errs:
+        raise AssertionError(f"timeline failed schema validation: {errs[:5]}")
+    Path(out).parent.mkdir(parents=True, exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(ct, fh, indent=None, separators=(",", ":"))
+        fh.write("\n")
+    n_x = sum(1 for e in ct["traceEvents"] if e.get("ph") == "X")
+    n_route = sum(1 for e in ct["traceEvents"]
+                  if e.get("cat") == "route")
+    print(f"timeline: {len(ct['traceEvents'])} events ({n_x} invocation "
+          f"spans, {n_route} route instants, {len(wl.records)} arrivals) "
+          f"-> {out}")
+    return ct
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--timeline", metavar="OUT",
+                    help="write a traced multi-region replay's Chrome-trace "
+                         "timeline JSON to OUT instead of the report")
+    args = ap.parse_args(argv)
+    if args.timeline:
+        export_timeline(args.timeline)
+        return
     print("## §Dry-run (compile proof + per-device footprint)\n")
     print(dryrun_summary())
     print("\n## §Roofline — single-pod 16x16 (256 chips), per step per chip\n")

@@ -22,7 +22,9 @@ scheduler scaling benchmark (rewrites ``BENCH_scheduler.json``) and
 ``BENCH_simperf.json``); both honour ``--quick`` (smaller sizes, no JSON
 rewrite) and *assert* their perf criteria, so CI's quick smoke fails loudly
 on a scheduling-data-plane or simulator-engine regression instead of
-letting it rot in ``artifacts/``.  Without flags the orchestrator runs every
+letting it rot in ``artifacts/``.  ``--obs`` runs the observability-plane
+smoke (chained traced sim run, Chrome-trace schema validation, disabled-
+path tax assertion).  Without flags the orchestrator runs every
 benchmark's quick overview as before.
 """
 from __future__ import annotations
@@ -58,9 +60,14 @@ def main(argv=None) -> None:
     ap.add_argument("--simperf", action="store_true",
                     help="run the simulator-engine throughput benchmark "
                          "(writes BENCH_simperf.json; asserts perf criteria)")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability-plane smoke: chained traced sim "
+                         "run, Chrome-trace schema validation, disabled-"
+                         "path tax assertion")
     ap.add_argument("--quick", action="store_true",
                     help="with --coldstart/--scale/--shard/--multiregion/"
-                         "--simperf: reduced size, no BENCH json rewrite")
+                         "--simperf/--obs: reduced size, no BENCH json "
+                         "rewrite")
     args = ap.parse_args(argv)
 
     if args.coldstart:
@@ -72,7 +79,8 @@ def main(argv=None) -> None:
             sub += ["--policies", args.policies]
         cst.main(sub)
         return
-    if args.scale or args.shard or args.multiregion or args.simperf:
+    if args.scale or args.shard or args.multiregion or args.simperf \
+            or args.obs:
         sub = ["--quick"] if args.quick else []
         if args.scale:
             from benchmarks import scheduler_scale as sc
@@ -86,6 +94,9 @@ def main(argv=None) -> None:
         if args.simperf:
             from benchmarks import simperf as sp
             sp.main(sub)
+        if args.obs:
+            from benchmarks import obs_smoke as ob
+            ob.main(sub)
         return
 
     rows = []

@@ -205,6 +205,20 @@ class ClusterSim:
         self.migrate_cost = float(migrate_cost)
         self._planner_armed = False
 
+    def attach_obs(self, obs) -> None:
+        """Register the simulator's event counters (and, lazily, the
+        planner's epoch counters — a planner may be attached after
+        construction) as snapshot-time collectors."""
+        obs.registry.register_collector("sim", lambda: dict(self.stats))
+
+        def _planner_stats():
+            p = self.planner
+            if p is not None and hasattr(p, "stats"):
+                return dict(p.stats)
+            return {}
+
+        obs.registry.register_collector("planner", _planner_stats)
+
     # ---- event machinery -------------------------------------------------- #
 
     def at(self, t: float, fn: Callable) -> None:

@@ -43,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import random
 from collections import OrderedDict
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -53,7 +54,8 @@ from .ast import (
     STRATEGY_ANY,
     STRATEGY_BEST_FIRST,
 )
-from .scheduler import Warmth, candidate_blocks, default_rng
+from .decision import REASON_UNKNOWN_WORKER, REASON_WARMTH_TIER
+from .scheduler import Warmth, candidate_blocks, default_rng, rejection_reason
 from .state import ClusterState, Conf, Registry
 from .strategies import SelectionContext, get_strategy
 from repro.kernels.affinity import NO_CAP, NO_CONC, affinity_valid_np
@@ -669,9 +671,21 @@ class SchedulerSession:
         self._occ_cache = None
         self._last_pol: Optional[Tuple[AAppScript, CompiledPolicies]] = None
         self.stats = {"decisions": 0, "deltas": 0, "rebuilds": 0, "waves": 0}
+        # observability plane (repro.obs): None until attached — the hot
+        # paths guard with a single `is not None`, so a session without obs
+        # pays nothing (the `overhead.py --obs` disabled-path gate)
+        self._tracer = None
+        self._timers = None
         state.add_listener(self._on_event)
         if script is not None:  # AAppScript or compile.CompiledScript
             self.set_default_script(script)
+
+    def attach_obs(self, obs) -> None:
+        """Wire an :class:`repro.obs.Obs` bundle into the session: decision
+        tracing (``obs.tracer``) and hot-path stage timers (``obs.timers``).
+        Pass ``None`` to detach."""
+        self._tracer = obs.tracer if obs is not None else None
+        self._timers = obs.timers if obs is not None else None
 
     def close(self) -> None:
         """Detach from the state's change feed."""
@@ -706,6 +720,20 @@ class SchedulerSession:
     def _on_event(self, kind: str, payload: Dict) -> None:
         if self._snap is None:
             return
+        tm = self._timers
+        if tm is not None:
+            # inlined tm.sample(): this fires on every state mutation, so
+            # the unsampled passes pay only the counter advance
+            t = (tm.tick + 1) & tm.mask
+            tm.tick = t
+            if t == 0:
+                t0 = perf_counter()
+                self._apply_event(kind, payload)
+                tm.observe("delta_apply", perf_counter() - t0)
+                return
+        self._apply_event(kind, payload)
+
+    def _apply_event(self, kind: str, payload: Dict) -> None:
         try:
             if kind == "allocate":
                 a = payload["activation"]
@@ -879,7 +907,22 @@ class SchedulerSession:
                 [aff, np.zeros((B, snap.occ.shape[1] - T), np.int8)], axis=1)
             bank.aff = aff
             bank._derive()
-        wmask = self._wmask(pol, spec.tag, bank, snap)
+        tm = self._timers
+        # one sampled gate per decision: when it fires, both decision-path
+        # stages (mask build, strategy select) are timed.  Inlined
+        # tm.sample() — a method call here is measurable against the
+        # enabled-path budget
+        timed = False
+        if tm is not None:
+            _tk = (tm.tick + 1) & tm.mask
+            tm.tick = _tk
+            timed = _tk == 0
+        if timed:
+            _t0 = perf_counter()
+            wmask = self._wmask(pol, spec.tag, bank, snap)
+            tm.observe("mask_build", perf_counter() - _t0)
+        else:
+            wmask = self._wmask(pol, spec.tag, bank, snap)
         if self.backend == "np":
             valid = self._valid_rows(bank, snap, wmask, spec.memory)
         else:
@@ -898,10 +941,25 @@ class SchedulerSession:
         else:
             rank_of = lambda j: 0
         ctx = SelectionContext(load=lambda j: int(n_funcs[j]), warmth=rank_of)
+        tr = self._tracer
+        vlist = None
+        conf = None
+        if tr is not None and tr.verdicts:
+            # verdict mode (the explain-agreement surface, off the perf
+            # budget): per evaluated block, every considered worker's
+            # verdict — validity from the *tensor* row, reason strings from
+            # the scalar `rejection_reason` on the live conf, so a tensor/
+            # scalar divergence shows up as a trace-vs-explain mismatch
+            vlist = []
+            conf = self.state.conf()
+        warm_on = warm_vec is not None or warmth_fn is not None
         for b in (range(B) if only is None else only):
             cb = bank.cbs[b]
             row = valid[b]
             strat = get_strategy(cb.strategy)
+            if vlist is not None:
+                vlist.append((b, self._block_verdicts(
+                    f, cb, strat, row, snap, conf, rank_of, warm_on)))
             if cb.wildcard:
                 cand = np.flatnonzero(row)  # conf order
                 if cand.size == 0:
@@ -916,19 +974,62 @@ class SchedulerSession:
                         ranks = [warmth_fn(f, workers[j]) for j in cand]
                         best = max(ranks)
                         cand = [j for j, r in zip(cand, ranks) if r == best]
-                return workers[int(strat.select(cand, ctx, rng))]
-            widx = snap.widx
-            cand = [widx[w] for w in cb.worker_ids
-                    if w in widx and row[widx[w]]]
-            if not cand:
-                continue
-            if strat.narrow_warmth and (warm_vec is not None
-                                        or warmth_fn is not None):
-                ranks = [rank_of(j) for j in cand]
-                best = max(ranks)
-                cand = [j for j, r in zip(cand, ranks) if r == best]
-            return workers[int(strat.select(cand, ctx, rng))]
+            else:
+                widx = snap.widx
+                cand = [widx[w] for w in cb.worker_ids
+                        if w in widx and row[widx[w]]]
+                if not cand:
+                    continue
+                if strat.narrow_warmth and warm_on:
+                    ranks = [rank_of(j) for j in cand]
+                    best = max(ranks)
+                    cand = [j for j, r in zip(cand, ranks) if r == best]
+            if timed:
+                _t0 = perf_counter()
+                jj = int(strat.select(cand, ctx, rng))
+                tm.observe("strategy_select", perf_counter() - _t0)
+            else:
+                jj = int(strat.select(cand, ctx, rng))
+            w = workers[jj]
+            if tr is not None:
+                tr.blocks(f, b, w, None if vlist is None else tuple(vlist))
+            return w
+        if tr is not None:
+            tr.blocks(f, None, None,
+                      None if vlist is None else tuple(vlist))
         return None
+
+    def _block_verdicts(self, f: str, cb: CompiledBlock, strat, row,
+                        snap: StateTensors, conf, rank_of,
+                        warm_on: bool) -> Tuple:
+        """Verdict-mode trace of one block: ``(worker, ok, reason)`` per
+        considered worker in the reference candidate order, with validity
+        read off the tensor ``valid`` row and reason strings from the
+        scalar :func:`repro.core.scheduler.rejection_reason` — the same
+        vocabulary (and the same warmth-tier drop rule) `explain()` uses."""
+        widx = snap.widx
+        order = (snap.workers if cb.wildcard else cb.worker_ids)
+        entries: List[List] = []
+        for w in order:
+            j = widx.get(w)
+            if j is None:
+                entries.append([w, False, REASON_UNKNOWN_WORKER, -1])
+            elif row[j]:
+                entries.append([w, True, None, j])
+            else:
+                entries.append([w, False,
+                                rejection_reason(f, w, conf, self.reg,
+                                                 cb.block), j])
+        if warm_on and strat.narrow_warmth:
+            oks = [e for e in entries if e[1]]
+            if oks:
+                best = max(rank_of(e[3]) for e in oks)
+                if best > 0:
+                    for e in oks:
+                        if rank_of(e[3]) != best:
+                            e[1] = False
+                            e[2] = REASON_WARMTH_TIER
+        return tuple((w, ok, reason) for w, ok, reason, _j in entries)
 
     def _wmask(self, pol: CompiledPolicies, tag: str, bank: TagRows,
                snap: StateTensors) -> np.ndarray:

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import random
 from collections import OrderedDict
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .ast import AAppScript
@@ -126,8 +127,27 @@ class ShardedSession:
         if script is not None:
             self._default_script = script.script \
                 if hasattr(script, "ir_version") else script
+        # zone_masked / zone_exhausted are the router-level rejection
+        # counters: zones a block's terms excluded, and routed shard hops
+        # that came back empty — the aggregate of what `explain()` traces
+        # as zone-mask / zone-exhausted verdicts
         self.stats = {"decisions": 0, "delegated": 0, "routed": 0,
-                      "zone_hops": 0, "waves": 0}
+                      "zone_hops": 0, "zone_masked": 0, "zone_exhausted": 0,
+                      "waves": 0}
+        self._obs = None
+        self._tracer = None
+        self._timers = None
+
+    def attach_obs(self, obs) -> None:
+        """Wire an :class:`repro.obs.Obs` bundle through the sharded plane:
+        the router records route spans / shard_route stage times, the flat
+        session and every (current and future) zone shard attach too."""
+        self._obs = obs
+        self._tracer = obs.tracer if obs is not None else None
+        self._timers = obs.timers if obs is not None else None
+        self.flat.attach_obs(obs)
+        for s in self._shards.values():
+            s.attach_obs(obs)
 
     # ------------------------------------------------------------------ #
     # lifecycle / shared-session surface
@@ -190,6 +210,8 @@ class ShardedSession:
                 ZoneView(self.state, zone), self.reg, backend=self.backend,
                 pool=self.pool, clock=self.clock,
                 max_cached_scripts=self._max_cached_scripts)
+            if self._obs is not None:
+                got.attach_obs(self._obs)
             self._shards[zone] = got
         return got
 
@@ -264,19 +286,51 @@ class ShardedSession:
         self.stats["routed"] += 1
         rng = rng if rng is not None else default_rng()
         chain = plan.chain(tag)
+        stats = self.stats
+        tr = self._tracer
+        tm = self._timers
+        if tm is not None and not tm.sample():
+            tm = None  # unsampled pass: route untimed
+        if tm is not None:
+            _t0 = perf_counter()
+        masks = plan.mask(tag)
+        nz = len(plan.zones)
+        # route trace (tracer on only): per evaluated block the admitted
+        # zones, plus every (block, zone) shard hop that came back empty
+        admitted = [] if tr is not None else None
+        tried: List[Tuple[int, str]] = [] if tr is not None else None
+        hops0 = stats["zone_hops"]
+        hint = plan.hint(tag) or self.zone_strategy
+        w = None
         for bi in range(len(chain)):
+            mask = masks[bi]
+            stats["zone_masked"] += nz - int(mask.sum())
+            if admitted is not None:
+                admitted.append((bi, tuple(
+                    z for zi, z in enumerate(plan.zones) if mask[zi])))
             for z in self._zone_order(plan, tag, bi, f, origin_zone):
                 row = plan.pos(tag, z, bi)
                 if row < 0:
                     continue
-                self.stats["zone_hops"] += 1
+                stats["zone_hops"] += 1
                 shard = self._shard(z)
                 pol = shard.policies_for(plan.zone_scripts[z])
                 w = shard._decide(f, pol, shard.tensors(), rng, warmth,
                                   only=(row,))
                 if w is not None:
-                    return w
-        return None
+                    break
+                stats["zone_exhausted"] += 1
+                if tried is not None:
+                    tried.append((bi, z))
+            if w is not None:
+                break
+        if tm is not None:
+            tm.observe("shard_route", perf_counter() - _t0)
+        if tr is not None:
+            tr.route(self.clock(), f, tag, hint, tuple(admitted),
+                     tuple(tried), stats["zone_hops"] - hops0,
+                     self.state.zone_of(w) if w is not None else None)
+        return w
 
     def schedule_wave(self, fs: Sequence[str], *,
                       script: Optional[AAppScript] = None,

@@ -93,6 +93,10 @@ class ForecastPlanner:
         self.script = self.compiled.script
         self.registry = registry
         self.cfg = config
+        # planning-epoch counters — the obs registry polls these as a
+        # collector, so plan() just bumps plain dict entries
+        self.stats: Dict[str, int] = {
+            "epochs": 0, "prewarms": 0, "migrations": 0, "retires": 0}
 
     # ---- validity (the real Listing-1 rule) -------------------------------- #
 
@@ -112,6 +116,7 @@ class ForecastPlanner:
     # ---- the epoch --------------------------------------------------------- #
 
     def plan(self, conf, pool, now: float) -> List[Action]:
+        self.stats["epochs"] += 1
         cfg = self.cfg
         workers: List[str] = [w for w in conf]
         if not workers:
@@ -299,4 +304,13 @@ class ForecastPlanner:
                 residency[i, j] -= 1
                 n_retires += 1
 
+        stats = self.stats
+        for a in actions:
+            kind = type(a).__name__
+            if kind == "Prewarm":
+                stats["prewarms"] += 1
+            elif kind == "Migrate":
+                stats["migrations"] += 1
+            else:
+                stats["retires"] += 1
         return actions

@@ -84,6 +84,7 @@ class Platform:
         backend: str = "np",
         zones: Optional[Mapping[str, object]] = None,
         zone_strategy: str = "local_first",
+        obs=None,
     ):
         self.state = _as_state(cluster)
         self.registry = registry if registry is not None else Registry()
@@ -127,6 +128,42 @@ class Platform:
                 self.compiled if self.compiled is not None else None,
                 backend=backend, pool=pool, clock=self.clock)
         self._containers: Dict[str, str] = {}  # activation id -> container id
+        # observability plane (repro.obs.Obs): the tracer reference is
+        # cached so the disabled hot path pays one attribute load + None
+        # check per invoke (`overhead.py --obs` pins it under 1%)
+        self.obs = obs
+        self._tracer = None
+        if obs is not None:
+            self.attach_obs(obs)
+
+    def attach_obs(self, obs) -> None:
+        """Attach (or, with ``None``, detach) an :class:`repro.obs.Obs`
+        bundle on a live platform: wires the tracer/timers through the
+        session stack and registers every layer's counters as snapshot-time
+        collectors.  Attaching after construction observes only decisions
+        made from that point on."""
+        self.obs = obs
+        self._tracer = obs.tracer if obs is not None else None
+        self.session.attach_obs(obs)
+        if obs is not None:
+            self._register_obs(obs)
+
+    def _register_obs(self, obs) -> None:
+        """Register every layer's counters as snapshot-time collectors in
+        the obs registry — nothing here runs on the decision path."""
+        reg = obs.registry
+        reg.register_collector("session", lambda: dict(self.session.stats))
+        reg.register_collector("platform", lambda: {
+            "workers": len(self.state.workers()),
+            "tags": len(self.session.tag_index)})
+        if self.pool is not None:
+            pool = self.pool
+            reg.register_collector("pool", lambda: pool.metrics.snapshot())
+        if self._sharded:
+            reg.register_collector("zone", lambda: self.session.zone_stats())
+        if self.planner is not None and hasattr(self.planner, "stats"):
+            planner = self.planner
+            reg.register_collector("planner", lambda: dict(planner.stats))
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -153,8 +190,11 @@ class Platform:
         script compilation and decisions (``platform.placer(rng)`` is the
         ``scheduler_fn`` the workload driver wants)."""
         kwargs.setdefault("pool", sim.pool)
-        return cls(source, cluster=sim.state, registry=sim.registry,
+        plat = cls(source, cluster=sim.state, registry=sim.registry,
                    clock=lambda: sim.now, **kwargs)
+        if plat.obs is not None and hasattr(sim, "attach_obs"):
+            sim.attach_obs(plat.obs)
+        return plat
 
     # ------------------------------------------------------------------ #
     # registration / topology
@@ -202,6 +242,10 @@ class Platform:
         (or :meth:`placer`).  ``zone`` is the request's origin zone — the
         sharded router's ``local_first`` locality hint (ignored on an
         unzoned platform)."""
+        tr = self._tracer
+        if tr is not None:
+            _t = self.clock()  # one read: nothing advances time inside
+            tr.begin(_t, function, zone)
         if self._sharded:
             worker = self.session.try_schedule(
                 function, rng=rng if rng is not None else self.rng,
@@ -210,6 +254,8 @@ class Platform:
             worker = self.session.try_schedule(
                 function, rng=rng if rng is not None else self.rng,
                 warmth=warmth)
+        if tr is not None:
+            tr.decision(_t, function, worker, zone)
         return Decision(function, self.registry[function].tag, worker)
 
     def invoke(self, function: str, rng: Optional[random.Random] = None, *,
@@ -217,6 +263,10 @@ class Platform:
         """Decide *and apply*: allocate in the state tables (the session's
         tensors follow via the change feed) and, with a pool attached,
         acquire a container and charge its cold/warm/hot start."""
+        tr = self._tracer
+        if tr is not None:
+            _t = self.clock()  # one read: nothing advances time inside
+            tr.begin(_t, function, zone)
         if self._sharded:
             worker = self.session.try_schedule(
                 function, rng=rng if rng is not None else self.rng,
@@ -228,6 +278,8 @@ class Platform:
         if self.forecast is not None:
             self.forecast.observe(function, self.clock())
         if worker is None:
+            if tr is not None:
+                tr.decision(_t, function, None, zone)
             return Decision(function, self.registry[function].tag)
         act = self.state.allocate(function, worker, self.registry)
         if self.pool is not None:
@@ -235,9 +287,15 @@ class Platform:
                 function, worker, self.clock(),
                 memory=act.memory, tag=act.tag)
             self._containers[act.activation_id] = c.cid
+            if tr is not None:
+                tr.invoke(act.activation_id, _t, function, worker,
+                          kind, cost, zone)
             return Decision(function, act.tag, worker,
                             activation_id=act.activation_id,
                             start_kind=kind, start_cost=cost)
+        if tr is not None:
+            tr.invoke(act.activation_id, _t, function, worker,
+                      "none", 0.0, zone)
         return Decision(function, act.tag, worker,
                         activation_id=act.activation_id)
 
@@ -257,6 +315,8 @@ class Platform:
             if cid is not None:
                 self.pool.release(cid, self.clock())
         act = self.state.complete(aid)
+        if self._tracer is not None and act is not None:
+            self._tracer.complete(aid, self.clock())
         if (self.forecast is not None and service_time is not None
                 and act is not None):
             self.forecast.observe_service(act.function, service_time)
@@ -301,6 +361,23 @@ class Platform:
         router uses as its locality hint."""
         rng = rng if rng is not None else self.rng
         session = self.session
+        tr = self._tracer
+        if tr is not None:
+            clock = self.clock
+
+            def _traced(f, zone=None):
+                tr.begin(clock(), f, zone)
+                if self._sharded:
+                    w = session.try_schedule(f, rng=rng, origin_zone=zone)
+                else:
+                    w = session.try_schedule(f, rng=rng)
+                tr.decision(clock(), f, w, zone)
+                return w
+
+            # composition marker: a workload driver sharing this tracer
+            # must not open a second begin/decision span per arrival
+            _traced.traces_decisions = True
+            return _traced
         if self._sharded:
             return lambda f, zone=None: session.try_schedule(
                 f, rng=rng, origin_zone=zone)
@@ -320,6 +397,9 @@ class Platform:
                                   zones=zone_set if zone_set else None)
         self.compiled = compiled
         self.session.set_default_script(compiled)
+        if self._tracer is not None:
+            self._tracer.compile_event(self.clock(), "reload",
+                                       len(self.session.tag_index))
         return compiled
 
     def advance(self, dt: float = 0.0) -> float:
@@ -354,15 +434,10 @@ class Platform:
     def stats(self) -> Dict:
         """Operational counters: session data-plane stats + pool metrics;
         on a zoned platform, per-zone rollups (worker count, resident load,
-        shard data-plane counters) under ``"zones"``."""
-        out = dict(self.session.stats)
-        out["workers"] = len(self.state.workers())
-        out["tags"] = len(self.session.tag_index)
-        if self._sharded:
-            out["zones"] = self.session.zone_stats()
-        if self.pool is not None:
-            out["pool"] = self.pool.metrics.snapshot()
-        return out
+        shard data-plane counters, idle-container residency) under
+        ``"zones"``.  Shape owned by :mod:`repro.obs.schema`."""
+        from repro.obs import schema
+        return schema.platform_stats(self)
 
     def close(self) -> None:
         self.session.close()

@@ -11,7 +11,9 @@ The forecast subsystem adds its own counters: ``prewarm_starts`` containers
 started speculatively, of which ``prewarm_hits`` served at least one
 invocation and ``prewarm_wasted`` died unused; ``migrations`` counts idle
 containers moved across workers.  ``snapshot()`` is what
-``benchmarks/coldstart.py`` serialises into ``BENCH_coldstart.json``.
+``benchmarks/coldstart.py`` serialises into ``BENCH_coldstart.json`` — its
+shape now lives in :func:`repro.obs.schema.pool_snapshot` (one schema for
+every stats consumer), and this class is the thin counter-holding view.
 """
 from __future__ import annotations
 
@@ -69,23 +71,10 @@ class PoolMetrics:
             raise ValueError(f"unknown start kind {kind!r}")
 
     def snapshot(self) -> Dict[str, float]:
-        return {
-            "cold_starts": self.cold_starts,
-            "warm_hits": self.warm_hits,
-            "hot_hits": self.hot_hits,
-            "total_starts": self.total_starts,
-            "cold_start_rate": round(self.cold_start_rate, 6),
-            "warm_hit_rate": round(self.warm_hit_rate, 6),
-            "evictions_ttl": self.evictions_ttl,
-            "evictions_pressure": self.evictions_pressure,
-            "evictions_planned": self.evictions_planned,
-            "unpooled_starts": self.unpooled_starts,
-            "start_seconds": round(self.start_seconds, 6),
-            "prewarm_starts": self.prewarm_starts,
-            "prewarm_hits": self.prewarm_hits,
-            "prewarm_wasted": self.prewarm_wasted,
-            "prewarm_waste_ratio": round(self.prewarm_waste_ratio, 6),
-            "migrations": self.migrations,
-            "prewarm_seconds": round(self.prewarm_seconds, 6),
-            "migration_seconds": round(self.migration_seconds, 6),
-        }
+        from repro.obs.schema import pool_snapshot
+        return pool_snapshot(self)
+
+    def register_into(self, registry) -> None:
+        """Attach this pool's counters to a
+        :class:`repro.obs.MetricsRegistry` as a snapshot-time collector."""
+        registry.register_collector("pool", self.snapshot)

@@ -177,6 +177,9 @@ class Engine:
         # request class hash-hit)
         self.scheduler = platform.session
         self._tag_compact_at = self.TAG_COMPACT_THRESHOLD
+        # observability rides on the platform's attached obs plane
+        self._tracer = platform._tracer
+        self._last_kind = "none"
 
     # ------------------------------------------------------------------ #
     # deployment: model residency tags
@@ -221,10 +224,12 @@ class Engine:
         """Charge the container start for this invocation (0.0 without a pool
         or for long-lived train streams)."""
         if self.pool is None or req.kind == "train":
+            self._last_kind = "none"
             return 0.0
         spec = self.reg[fname]
-        c, _kind, cost = self.pool.acquire(fname, cell, self.clock(),
-                                           memory=spec.memory, tag=spec.tag)
+        c, kind, cost = self.pool.acquire(fname, cell, self.clock(),
+                                          memory=spec.memory, tag=spec.tag)
+        self._last_kind = kind
         self._containers[activation_id] = c.cid
         return cost
 
@@ -315,16 +320,24 @@ class Engine:
         if self.forecast is not None and req.kind != "train" and not req.hedged:
             self.forecast.observe(fname, req.submitted_at)
         script = self._policy_for(req)
+        tr = self._tracer
+        if tr is not None:
+            tr.begin(req.submitted_at, fname, None)
         # pool-backed warmth ranks (vectorized via WarmPool.warmth_row)
         warmth = "auto" if req.kind != "train" else None
         cell = self.scheduler.try_schedule(fname, script=script, warmth=warmth,
                                            rng=self.rng)
         if cell is None:
+            if tr is not None:
+                tr.decision(self.clock(), fname, None, None)
             comp = Completion(req.rid, "<none>", False, 0.0)
             self.completions.append(comp)
             return comp
         act = self.state.allocate(fname, cell, self.reg)
         start_cost = self._container_acquire(fname, req, cell, act.activation_id)
+        if tr is not None:
+            tr.invoke(act.activation_id, self.clock(), fname, cell,
+                      self._last_kind, start_cost, None)
         t0 = self.clock()
         result = self.runner(req, cell)
         run_latency = self.clock() - t0
@@ -364,6 +377,8 @@ class Engine:
 
         self._container_release(act.activation_id)
         self.state.complete(act.activation_id)
+        if tr is not None:
+            tr.complete(act.activation_id, self.clock())
         if req.kind == "prefill" and req.session:
             self._bind_session(req.session, req.model, cell)
         comp = Completion(req.rid, cell, True, latency, result, hedge_won)
@@ -401,10 +416,10 @@ class Engine:
                         self.reg, rng=random.Random(0), warmth=warmth_fn)
 
     def forecast_stats(self, horizon: float = 1.0) -> Dict[str, Dict]:
-        """Per-request-class forecast state (empty without an estimator)."""
-        if self.forecast is None:
-            return {}
-        return self.forecast.state(self.clock(), horizon)
+        """Per-request-class forecast state (empty without an estimator).
+        Shape owned by :func:`repro.obs.schema.forecast_stats`."""
+        from repro.obs.schema import forecast_stats
+        return forecast_stats(self.forecast, self.clock(), horizon)
 
     # ------------------------------------------------------------------ #
     # fault tolerance / elasticity

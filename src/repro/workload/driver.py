@@ -67,12 +67,21 @@ class TraceWorkload:
         *,
         script: Optional[AAppScript] = None,
         forecast=None,
+        obs=None,
     ):
         self.sim = sim
         self.schedule = scheduler_fn
         self.compute = dict(compute)
         self.script = script
         self.forecast = forecast
+        # decision/invoke/complete spans on the simulator's virtual clock —
+        # activation ids key the spans, so timelines are deterministic.
+        # A traced Platform.placer marks itself `traces_decisions`; then the
+        # driver adds only invoke/complete to the shared span, instead of
+        # opening a duplicate begin/decision per arrival
+        self._tracer = obs.tracer if obs is not None else None
+        self._place_traces = bool(
+            getattr(scheduler_fn, "traces_decisions", False))
         self.records: List[InvocationRecord] = []
 
     def load(self, trace: Sequence[Arrival]) -> None:
@@ -96,6 +105,9 @@ class TraceWorkload:
         t0 = sim.now
         if self.forecast is not None:
             self.forecast.observe(f, t0)
+        tr = self._tracer
+        if tr is not None and not self._place_traces:
+            tr.begin(t0, f, arrival.zone)
         # zone-stamped arrivals (multi-region traces) carry their origin to
         # the scheduler — Platform.placer accepts zone=; plain callables
         # without the keyword keep working for zone-agnostic traces
@@ -105,6 +117,8 @@ class TraceWorkload:
             w = self.schedule(f)
         if w is None:
             sim.failures.append(f)
+            if tr is not None and not self._place_traces:
+                tr.decision(t0, f, None, arrival.zone)
             self.records.append(InvocationRecord(f, "<unschedulable>", t0,
                                                  float("nan"), "failed", True,
                                                  arrival.zone))
@@ -112,6 +126,8 @@ class TraceWorkload:
         act = sim.state.allocate(f, w, sim.registry)
         start = sim.container_start(f, w, act.activation_id)
         kind = sim.last_start_kind if sim.pool is not None else "none"
+        if tr is not None:
+            tr.invoke(act.activation_id, t0, f, w, kind, start, arrival.zone)
         pending = self._pending_tags(arrival)
         if sim.pool is not None:
             sim.pool.pending_add(pending)
@@ -133,6 +149,8 @@ class TraceWorkload:
                 sim.pool.pending_done(pending)
             sim.container_release(act.activation_id)
             sim.state.complete(act.activation_id)
+            if tr is not None:
+                tr.complete(act.activation_id, sim.now)
             self.records.append(InvocationRecord(
                 f, w, t0, sim.now - t0, kind, False, arrival.zone))
 
