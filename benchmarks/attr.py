@@ -2,7 +2,7 @@
 dry-run cell to source ops (by HLO metadata op_name).  The §Perf iteration
 loop's "profile" on a CPU-only container.
 
-Usage: PYTHONPATH=src:. python -m benchmarks.attr --arch X --shape Y [--set k=v] [--top 15]
+Usage: PYTHONPATH=src python -m benchmarks.attr --arch X --shape Y [--set k=v] [--top 15] [--json]
 """
 from __future__ import annotations
 
@@ -86,6 +86,8 @@ def main():
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--set", action="append", default=[])
     ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the roofline summary + top entries as JSON")
     args = ap.parse_args()
 
     import repro.roofline.flops as F
@@ -105,9 +107,18 @@ def main():
         overrides[k] = v
     rec = dr.run_cell(args.arch, args.shape, args.mesh == "multi", overrides=overrides)
     r = rec["roofline"]
+    entries = attribute(cap["t"], args.top)
+    if args.json:
+        print(json.dumps({
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "roofline": r,
+            "top": [{"op": op, "op_name": opn, "bytes": b}
+                    for (op, opn), b in entries],
+        }, indent=2))
+        return
     print(f"compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
           f"collective={r['collective_s']*1e3:.1f}ms dominant={r['dominant']}")
-    for (op, opn), b in attribute(cap["t"], args.top):
+    for (op, opn), b in entries:
         print(f"{b/1e9:10.1f} GB  {op:14s} {opn}")
 
 

@@ -106,14 +106,47 @@ def export_timeline(out: str, *, duration: float = 60.0, rate: float = 4.0,
     return ct
 
 
+def attribution_report(*, duration: float = 60.0, rate: float = 2.0,
+                       seed: int = 0) -> None:
+    """Per-scenario latency attribution breakdown: replay every trace
+    scenario (plus multiregion) under ``best_first`` and print the mean
+    seconds each end-to-end latency spent in each component."""
+    from repro.obs.attribution import COMPONENTS, summarize
+    from repro.workload import (MULTIREGION, SCENARIOS, ReplayConfig,
+                                run_config)
+
+    names = list(SCENARIOS) + [MULTIREGION]
+    header = f"{'scenario':12s} " + " ".join(
+        f"{c:>11s}" for c in COMPONENTS) + f" {'e2e':>11s} {'n':>5s}"
+    print("== latency attribution (mean seconds per invocation) ==")
+    print(header)
+    for scenario in names:
+        run = run_config(ReplayConfig(scenario=scenario, duration=duration,
+                                      rate=rate, seed=seed))
+        row = summarize(run.records)["all"]
+        cells = " ".join(f"{row[c]:11.4f}" for c in COMPONENTS)
+        print(f"{scenario:12s} {cells} {row['e2e']:11.4f} {row['n']:5d}")
+        per_fn = summarize(run.records, by="function")
+        for fn in sorted(per_fn):
+            r = per_fn[fn]
+            cells = " ".join(f"{r[c]:11.4f}" for c in COMPONENTS)
+            print(f"  {fn:10s} {cells} {r['e2e']:11.4f} {r['n']:5d}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--timeline", metavar="OUT",
                     help="write a traced multi-region replay's Chrome-trace "
                          "timeline JSON to OUT instead of the report")
+    ap.add_argument("--attribution", action="store_true",
+                    help="print the per-scenario latency attribution "
+                         "breakdown instead of the report")
     args = ap.parse_args(argv)
     if args.timeline:
         export_timeline(args.timeline)
+        return
+    if args.attribution:
+        attribution_report()
         return
     print("## §Dry-run (compile proof + per-device footprint)\n")
     print(dryrun_summary())

@@ -64,10 +64,14 @@ def main(argv=None) -> None:
                     help="observability-plane smoke: chained traced sim "
                          "run, Chrome-trace schema validation, disabled-"
                          "path tax assertion")
+    ap.add_argument("--whatif", action="store_true",
+                    help="counterfactual what-if replay benchmark: same-"
+                         "policy replay bit-identity + strategy deltas "
+                         "(writes BENCH_whatif.json)")
     ap.add_argument("--quick", action="store_true",
                     help="with --coldstart/--scale/--shard/--multiregion/"
-                         "--simperf/--obs: reduced size, no BENCH json "
-                         "rewrite")
+                         "--simperf/--obs/--whatif: reduced size, no BENCH "
+                         "json rewrite")
     args = ap.parse_args(argv)
 
     if args.coldstart:
@@ -80,7 +84,7 @@ def main(argv=None) -> None:
         cst.main(sub)
         return
     if args.scale or args.shard or args.multiregion or args.simperf \
-            or args.obs:
+            or args.obs or args.whatif:
         sub = ["--quick"] if args.quick else []
         if args.scale:
             from benchmarks import scheduler_scale as sc
@@ -97,6 +101,9 @@ def main(argv=None) -> None:
         if args.obs:
             from benchmarks import obs_smoke as ob
             ob.main(sub)
+        if args.whatif:
+            from benchmarks import whatif as wi
+            wi.main(sub)
         return
 
     rows = []

@@ -1,0 +1,173 @@
+"""Counterfactual what-if replay benchmark.
+
+For each of the four trace scenarios, run the scenario-mix workload under
+``best_first``, then:
+
+1. **Determinism oracle** — replay the identical trace under the *same*
+   config and assert the rerun reproduces every decision, rng draw, and
+   per-component latency bit-identically (``replay_identical``); the CI
+   smoke (``run.py --whatif --quick``) fails loudly on any drift.
+2. **Counterfactuals** — replay the identical trace under ``warmest`` and
+   ``least_loaded`` and report each strategy's mean/p99 end-to-end latency
+   plus the per-component delta breakdown vs the base (where the latency
+   moved: boot, route, service, parent_wait), with the single biggest
+   per-activation mover and its attribution note.
+3. **Timeline contract** — the base chained run's attribution-annotated
+   Chrome-trace export must pass ``validate_replay_timeline`` (every
+   completed invoke span carries the full component taxonomy).
+
+Writes ``BENCH_whatif.json`` at the repo root on a full run.  ``--quick``
+runs shorter traces and skips the JSON rewrite; ``--json`` prints the
+payload instead of the table.
+
+Usage: ``PYTHONPATH=src python benchmarks/whatif.py [--quick] [--json]``
+(or ``python benchmarks/run.py --whatif [--quick]``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.attribution import COMPONENTS
+from repro.workload import (
+    SCENARIOS,
+    ReplayConfig,
+    replay_identical,
+    run_config,
+    validate_replay_timeline,
+    whatif,
+)
+from repro.workload.replay import chrome_trace
+
+BASE_STRATEGY = "best_first"
+ALT_STRATEGIES = ("warmest", "least_loaded")
+DURATION = 120.0
+RATE = 2.0
+SEED = 0
+
+
+def _p99(lat: List[float]) -> float:
+    if not lat:
+        return float("nan")
+    return lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+
+
+def _run_stats(run) -> Dict:
+    lat = run.latencies()
+    m = run.platform.pool.metrics
+    return {
+        "invocations": len(run.records),
+        "failures": sum(1 for r in run.records if r.failed),
+        "latency_mean_s": round(statistics.mean(lat), 4) if lat else None,
+        "latency_p99_s": round(_p99(lat), 4) if lat else None,
+        "cold_start_rate": round(m.cold_start_rate, 4),
+    }
+
+
+def run_scenario(scenario: str, *, duration: float, rate: float,
+                 seed: int = SEED) -> Dict:
+    base = run_config(ReplayConfig(scenario=scenario, strategy=BASE_STRATEGY,
+                                   duration=duration, rate=rate, seed=seed))
+    rerun = run_config(base.config, trace=base.trace)
+    drift = replay_identical(base, rerun)
+    out: Dict = {
+        "same_policy_identical": not drift,
+        "replay_drift": drift[:5],
+        "strategies": {BASE_STRATEGY: _run_stats(base)},
+    }
+    for strat in ALT_STRATEGIES:
+        d = whatif(base, strategy=strat)
+        row = _run_stats(d.alt)
+        row["mean_delta_s"] = round(d.mean_delta(), 4)
+        row["component_delta_s"] = {
+            k: round(v, 4) for k, v in d.component_deltas().items()}
+        if d.entries:
+            top = d.entries[0]
+            row["top_mover"] = {
+                "arrival_id": top["arrival_id"],
+                "function": top["function"],
+                "delta_s": round(top["delta"], 4),
+                "dominant": top["dominant"],
+                "note": top["note"],
+            }
+        out["strategies"][strat] = row
+    out["timeline_valid"] = not validate_replay_timeline(chrome_trace(base))
+    return out
+
+
+def run(*, quick: bool = False) -> Dict:
+    duration = 40.0 if quick else DURATION
+    table: Dict[str, Dict] = {}
+    for scenario in SCENARIOS:
+        table[scenario] = run_scenario(scenario, duration=duration,
+                                       rate=RATE)
+    identical_all = all(t["same_policy_identical"] for t in table.values())
+    timelines_ok = all(t["timeline_valid"] for t in table.values())
+    return {
+        "config": {"duration_s": duration, "rate": RATE, "seed": SEED,
+                   "base_strategy": BASE_STRATEGY,
+                   "alt_strategies": list(ALT_STRATEGIES),
+                   "components": list(COMPONENTS)},
+        "scenarios": table,
+        "criteria": {
+            "same_policy_replay_bit_identical": identical_all,
+            "timelines_schema_valid": timelines_ok,
+        },
+        "all_criteria_pass": identical_all and timelines_ok,
+    }
+
+
+def _print_table(payload: Dict) -> None:
+    for scenario, t in payload["scenarios"].items():
+        flag = "ok" if t["same_policy_identical"] else "DRIFT"
+        print(f"== {scenario} (same-policy replay: {flag}) ==")
+        for strat, row in t["strategies"].items():
+            line = (f"  {strat:13s} mean={row['latency_mean_s']}s "
+                    f"p99={row['latency_p99_s']}s "
+                    f"cold={row['cold_start_rate']*100:.1f}%")
+            if "mean_delta_s" in row:
+                shifts = ", ".join(
+                    f"{k}{v:+.3f}" for k, v in
+                    row["component_delta_s"].items() if v)
+                line += f" delta={row['mean_delta_s']:+.3f}s ({shifts})"
+            print(line)
+            if "top_mover" in row:
+                tm = row["top_mover"]
+                print(f"    top mover: {tm['arrival_id']} "
+                      f"({tm['function']}) {tm['delta_s']:+.3f}s — "
+                      f"{tm['note']}")
+    crit = payload["criteria"]
+    print("criteria: " + " ".join(f"{k}={v}" for k, v in crit.items()))
+    print(f"all_criteria_pass: {payload['all_criteria_pass']}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="short traces, no BENCH_whatif.json rewrite")
+    ap.add_argument("--json", action="store_true",
+                    help="print the JSON payload instead of the table")
+    args = ap.parse_args(argv)
+    payload = run(quick=args.quick)
+    if args.json:
+        print(json.dumps(payload, indent=2))
+    else:
+        _print_table(payload)
+    if not args.quick:
+        out = Path(__file__).resolve().parent.parent / "BENCH_whatif.json"
+        with open(out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {out}")
+    assert payload["all_criteria_pass"], (
+        "what-if replay criteria failed: " + json.dumps(payload["criteria"]))
+
+
+if __name__ == "__main__":
+    main()

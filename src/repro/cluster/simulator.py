@@ -513,6 +513,15 @@ class ClusterSim:
         return (self.p.invoke_overhead
                 + self.topology.overhead_of(self.workers[worker].zone))
 
+    def overhead_parts(self, worker: str) -> Tuple[float, float]:
+        """:meth:`overhead` split for latency attribution: the platform
+        front-door cost (the ``sched`` component) and the worker zone's
+        control-plane distance (charged to ``route``).  Event times keep
+        using :meth:`overhead` — same terms, same order — so attribution
+        never perturbs the schedule."""
+        return (self.p.invoke_overhead,
+                self.topology.overhead_of(self.workers[worker].zone))
+
     def route_cost(self, origin_zone: Optional[str], worker: str) -> float:
         """Extra front-door routing latency for a request that originated in
         ``origin_zone`` but was placed on a worker in another zone.  Zero

@@ -181,8 +181,12 @@ class MetricsRegistry:
         return out
 
     def render(self) -> str:
-        """Prometheus-style text exposition of :meth:`snapshot` (dots map to
-        underscores; histograms additionally expose native quantile rows)."""
+        """Prometheus text exposition of :meth:`snapshot`.  Dots map to
+        underscores; histograms emit the conformant exposition — cumulative
+        ``<name>_bucket{le="<bound>"}`` rows (closed with ``le="+Inf"``)
+        plus ``_sum`` and ``_count`` — so a real scrape target could compute
+        ``histogram_quantile`` server-side instead of trusting our
+        interpolation."""
         lines: List[str] = []
         for name, c in self._counters.items():
             n = _prom_name(name)
@@ -194,9 +198,12 @@ class MetricsRegistry:
             lines.append(f"{n} {g.value}")
         for name, h in self._histograms.items():
             n = _prom_name(name)
-            lines.append(f"# TYPE {n} summary")
-            for q in (0.5, 0.95, 0.99):
-                lines.append(f'{n}{{quantile="{q}"}} {h.quantile(q)}')
+            lines.append(f"# TYPE {n} histogram")
+            cum = 0
+            for bound, count in zip(h.bounds, h.counts):
+                cum += count
+                lines.append(f'{n}_bucket{{le="{bound}"}} {cum}')
+            lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
             lines.append(f"{n}_sum {h.sum}")
             lines.append(f"{n}_count {h.count}")
         for prefix, fn in self._collectors:

@@ -74,6 +74,9 @@ def platform_stats(platform) -> Dict:
         out["zones"] = zones
     if platform.pool is not None:
         out["pool"] = pool_snapshot(platform.pool.metrics)
+    obs = getattr(platform, "obs", None)
+    if obs is not None and getattr(obs, "slo", None) is not None:
+        out["slo"] = obs.slo.snapshot()
     return out
 
 

@@ -47,7 +47,9 @@ _SCHED_TID = 0  # per-zone control track for decision/route instants
 class Tracer:
     """Bounded ring of structured decision records.
 
-    ``capacity`` bounds memory (oldest records drop first);
+    ``capacity`` bounds memory (oldest records drop first; every eviction
+    bumps ``dropped_spans``, which the obs snapshot surfaces so a wrapped
+    ring is visible instead of silently truncating exports);
     ``verdicts=True`` additionally makes the scheduling session record a
     per-block, per-worker verdict list for every decision — the explain-
     agreement surface, deliberately *not* on the perf budget (the
@@ -56,6 +58,8 @@ class Tracer:
     def __init__(self, capacity: int = 65536, verdicts: bool = False):
         self.events: "deque[tuple]" = deque(maxlen=capacity)
         self.verdicts = verdicts
+        self.dropped_spans = 0  # records evicted by the ring bound
+        self._cap = capacity
         self._seq = 0
         self._cur = 0    # current decision seq (set by begin)
         self._cur_t = 0.0  # current decision scope's begin time
@@ -76,20 +80,28 @@ class Tracer:
         did = self._seq
         self._cur = did
         self._cur_t = t
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("begin", did, t, function, zone))
         return did
 
     def decision(self, t: float, function: str, worker: Optional[str],
                  zone: Optional[str] = None) -> None:
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("decision", self._cur, t, function, worker, zone))
 
     def invoke(self, aid: str, t: float, function: str, worker: str,
                start_kind: Optional[str], start_cost: float,
                zone: Optional[str] = None) -> None:
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("invoke", aid, t, function, worker, start_kind,
                             start_cost, zone, self._cur))
 
     def complete(self, aid: str, t: float) -> None:
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("complete", aid, t))
 
     def blocks(self, function: str, block_index: Optional[int],
@@ -100,6 +112,8 @@ class Tracer:
         Stamped with the enclosing decision scope's begin time — the walk is
         instantaneous on the recording clock, and skipping a fresh clock
         read keeps this call off the scheduler's critical-path budget."""
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("blocks", self._cur, self._cur_t, function,
                             block_index, worker, verdicts))
 
@@ -109,10 +123,14 @@ class Tracer:
         """One zone-router pass: per evaluated block the admitted zones,
         the zone-selection hint, the exhausted ``(block, zone)`` hops tried,
         and the winning zone (``None`` when the chain ran dry)."""
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("route", self._cur, t, function, tag, hint,
                             admissible, tried, hops, zone))
 
     def compile_event(self, t: float, event: str, tags: int) -> None:
+        if len(self.events) == self._cap:
+            self.dropped_spans += 1
         self.events.append(("compile", self._cur, t, event, tags))
 
     # ---- exports ----------------------------------------------------------- #

@@ -10,6 +10,16 @@ from .traces import (
     poisson_trace,
 )
 from .driver import InvocationRecord, TraceWorkload, affine_terms_of
+from .replay import (
+    ReplayConfig,
+    RunResult,
+    WhatIfDiff,
+    diff_runs,
+    replay_identical,
+    run_config,
+    validate_replay_timeline,
+    whatif,
+)
 from .scenarios import (
     COMPUTE_S,
     FUNCTION_MIX,
@@ -26,4 +36,6 @@ __all__ = [
     "TraceWorkload", "affine_terms_of",
     "SCENARIOS", "MULTIREGION", "MULTIREGION_ZONES", "FUNCTION_MIX",
     "COMPUTE_S", "build_trace", "register_functions",
+    "ReplayConfig", "RunResult", "WhatIfDiff", "diff_runs",
+    "replay_identical", "run_config", "validate_replay_timeline", "whatif",
 ]

@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.ast import AAppScript
 from repro.core.scheduler import candidate_blocks
+from repro.obs.attribution import LatencyAttributor, build as build_attribution
 
 from .traces import Arrival
 
@@ -41,6 +42,18 @@ class InvocationRecord:
     start_kind: str  # cold | warm | hot | none (no pool) | failed
     failed: bool
     origin_zone: Optional[str] = None  # the arrival's zone stamp (if any)
+    # deterministic activation key for replay diffs: roots are "a<i>" in
+    # trace order, DAG children "<parent>/<fn><k>" — stable across runs
+    arrival_id: Optional[str] = None
+    # root arrival time of the chain (== t_submit for roots); the
+    # attribution window of a chained child starts here
+    t_root: Optional[float] = None
+    # latency attribution (repro.obs.attribution.COMPONENTS); None only
+    # for failed records.  Invariant: sum(components) in canonical order
+    # == latency + components["parent_wait"], bit-exactly.
+    components: Optional[Dict[str, float]] = None
+    # the simulator activation id — joins records to tracer invoke spans
+    activation_id: Optional[str] = None
 
 
 def affine_terms_of(script: Optional[AAppScript], tag: str) -> List[str]:
@@ -82,11 +95,19 @@ class TraceWorkload:
         self._tracer = obs.tracer if obs is not None else None
         self._place_traces = bool(
             getattr(scheduler_fn, "traces_decisions", False))
+        # attribution always runs (pure arithmetic on values the driver
+        # already holds — no clock reads, no rng, no event-time changes);
+        # the histogram/SLO feeds only exist with an obs bundle attached
+        self._attr = LatencyAttributor(obs.registry) if obs is not None \
+            else None
+        self._slo = obs.slo if obs is not None else None
         self.records: List[InvocationRecord] = []
 
     def load(self, trace: Sequence[Arrival]) -> None:
-        for a in trace:
-            self.sim.at(a.t, lambda a=a: self.submit(a))
+        for i, a in enumerate(trace):
+            aid = f"a{i}"
+            self.sim.at(a.t, lambda a=a, aid=aid: self.submit(
+                a, arrival_id=aid))
 
     # ------------------------------------------------------------------ #
 
@@ -99,10 +120,14 @@ class TraceWorkload:
                 tags.append(ct)
         return tags
 
-    def submit(self, arrival: Arrival) -> None:
+    def submit(self, arrival: Arrival, arrival_id: Optional[str] = None,
+               root_t: Optional[float] = None) -> None:
         sim = self.sim
         f = arrival.function
         t0 = sim.now
+        # attribution window anchor: chained children charge the span back
+        # to the root arrival of their chain as parent_wait
+        t_root = root_t if root_t is not None else t0
         if self.forecast is not None:
             self.forecast.observe(f, t0)
         tr = self._tracer
@@ -121,7 +146,8 @@ class TraceWorkload:
                 tr.decision(t0, f, None, arrival.zone)
             self.records.append(InvocationRecord(f, "<unschedulable>", t0,
                                                  float("nan"), "failed", True,
-                                                 arrival.zone))
+                                                 arrival.zone, arrival_id,
+                                                 t_root))
             return
         act = sim.state.allocate(f, w, sim.registry)
         start = sim.container_start(f, w, act.activation_id)
@@ -131,6 +157,12 @@ class TraceWorkload:
         pending = self._pending_tags(arrival)
         if sim.pool is not None:
             sim.pool.pending_add(pending)
+        # phase boundary stamps for attribution — the same terms the event
+        # schedule below charges, split by name.  The compute-begin stamp
+        # is taken when the compute event fires (the service phase's left
+        # edge); service then absorbs the exact-sum float residue.
+        sched_cost, zone_cost = sim.overhead_parts(w)
+        t_exec = [t0]
 
         def finish():
             if self.forecast is not None:
@@ -140,21 +172,42 @@ class TraceWorkload:
                 self.forecast.observe_service(f, sim.now - t0 - start)
             # children first, so their tags take over the pending demand
             # before the parent's refcounts drop
+            spawn_idx: Dict[str, int] = {}
             for child, n in arrival.children:
                 if self.forecast is not None:
                     self.forecast.observe_edge(f, child, n, sim.now - t0)
                 for _ in range(n):
-                    self.submit(Arrival(t=sim.now, function=child))
+                    k = spawn_idx.get(child, 0)
+                    spawn_idx[child] = k + 1
+                    cid = (f"{arrival_id}/{child}{k}"
+                           if arrival_id is not None else None)
+                    self.submit(Arrival(t=sim.now, function=child),
+                                arrival_id=cid, root_t=t_root)
             if sim.pool is not None:
                 sim.pool.pending_done(pending)
             sim.container_release(act.activation_id)
             sim.state.complete(act.activation_id)
             if tr is not None:
                 tr.complete(act.activation_id, sim.now)
-            self.records.append(InvocationRecord(
-                f, w, t0, sim.now - t0, kind, False, arrival.zone))
+            latency = sim.now - t0
+            components = build_attribution(
+                sched=sched_cost, boot=start, migrate=0.0,
+                route=zone_cost + route, service=sim.now - t_exec[0],
+                parent_wait=t0 - t_root, latency=latency)
+            record = InvocationRecord(f, w, t0, latency, kind, False,
+                                      arrival.zone, arrival_id, t_root,
+                                      components, act.activation_id)
+            self.records.append(record)
+            if self._attr is not None:
+                self._attr.observe(record, zone=sim.workers[w].zone)
+            if self._slo is not None:
+                self._slo.observe(f, sim.now, latency)
+
+        def begin_compute():
+            t_exec[0] = sim.now
+            sim.compute(f, w, self.compute.get(f, 0.0), act.activation_id,
+                        finish)
 
         # cross-zone front-door routing (zone-stamped arrivals only)
         route = sim.route_cost(arrival.zone, w)
-        sim.after(sim.overhead(w) + start + route, lambda: sim.compute(
-            f, w, self.compute.get(f, 0.0), act.activation_id, finish))
+        sim.after(sim.overhead(w) + start + route, begin_compute)

@@ -1,0 +1,343 @@
+"""Latency attribution, the SLO burn-rate engine, and what-if replay.
+
+Three contracts from the observability PR:
+
+* **exact-sum attribution** — for every invocation record, the canonical
+  component sum reproduces the end-to-end latency *bit-exactly*
+  (``total(components) == latency + parent_wait``), property-tested over
+  seeds on the chained and multiregion scenarios, with the per-phase
+  values pinned to the simulator charges they name (sched = front-door
+  overhead, boot = the pool's cold/warm/hot cost, route = the zone terms);
+* **SLO engine** — sliding-window burn rates, multi-window alerting, and
+  error-budget accounting on virtual time, surfaced through
+  ``Obs.snapshot()``/``render()`` and ``Platform.stats()``;
+* **what-if replay** — a same-policy replay reproduces decisions, rng
+  draws, and per-component latencies bit-identically; an alternate-policy
+  replay yields per-activation diffs whose deltas decompose into shifted
+  components; the attribution-annotated timeline validates (and a span
+  stripped of its components fails).
+"""
+import dataclasses
+
+import pytest
+
+try:  # seed sweeps use hypothesis when present
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.cluster.simulator import SimParams
+from repro.obs import Obs, SloEngine, SloObjective
+from repro.obs.attribution import (
+    COMPONENTS,
+    build,
+    check,
+    summarize,
+    total,
+)
+from repro.platform import Platform
+from repro.workload import (
+    ReplayConfig,
+    diff_runs,
+    replay_identical,
+    run_config,
+    validate_replay_timeline,
+    whatif,
+)
+from repro.workload.replay import chrome_trace
+
+# --------------------------------------------------------------------------- #
+# exact-sum invariant
+# --------------------------------------------------------------------------- #
+
+
+def _run(scenario, seed, duration=30.0):
+    return run_config(ReplayConfig(scenario=scenario, seed=seed,
+                                   duration=duration))
+
+
+def _assert_exact(run):
+    assert run.records, "scenario produced no records"
+    for r in run.records:
+        check(r)
+        if not r.failed:
+            assert total(r.components) == r.latency + \
+                r.components["parent_wait"]
+
+
+def test_exact_sum_chained_and_multiregion():
+    for scenario in ("chained", "multiregion"):
+        _assert_exact(_run(scenario, seed=0))
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_exact_sum_chained_property(seed):
+        _assert_exact(_run("chained", seed, duration=20.0))
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_exact_sum_multiregion_property(seed):
+        _assert_exact(_run("multiregion", seed, duration=20.0))
+else:
+    def test_exact_sum_seed_sweep_fallback():
+        for seed in range(4):
+            _assert_exact(_run("chained", seed, duration=20.0))
+            _assert_exact(_run("multiregion", seed, duration=20.0))
+
+
+def test_components_name_the_simulator_charges():
+    run = _run("poisson", seed=0)
+    costs = {"cold": 0.5, "warm": 0.1, "hot": 0.0}
+    for r in run.records:
+        if r.failed:
+            continue
+        c = r.components
+        # sched is exactly the platform front-door overhead
+        assert c["sched"] == SimParams().invoke_overhead
+        # boot is the warm pool's charged start cost (the exact-sum
+        # closure may nudge it by a half-ulp-scale tie-break residue)
+        assert abs(c["boot"] - costs[r.start_kind]) < 1e-12
+        # no policy charges invocation-path migrations yet
+        assert c["migrate"] == 0.0
+        # roots never wait on a parent
+        assert c["parent_wait"] == 0.0
+        assert c["service"] >= -1e-9  # residual closure is sub-ulp only
+
+
+def test_route_component_zone_terms():
+    # paper testbed: control plane in eu, us workers pay us_overhead;
+    # zone-agnostic arrivals never pay the cross-zone front-door hop
+    run = _run("poisson", seed=3)
+    for r in run.records:
+        if r.failed:
+            continue
+        expected = SimParams().us_overhead if "us" in r.worker else 0.0
+        assert r.components["route"] == expected
+    # multiregion: zone-stamped arrivals placed outside their origin zone
+    # add the cross-zone hop on top of the control-plane distance
+    mrun = _run("multiregion", seed=0)
+    zone_cost = {"eu": 0.0, "us": SimParams().us_overhead,
+                 "ap": SimParams().us_overhead}
+    cross = 0.35  # the replay stack's multiregion cross_zone_route
+    hops = 0
+    for r in mrun.records:
+        if r.failed:
+            continue
+        wz = r.worker[len("worker"):][:2]
+        hop = 0.0
+        if r.origin_zone is not None and r.origin_zone != wz:
+            hop = cross
+            hops += 1
+        assert r.components["route"] == zone_cost[wz] + hop
+    assert hops, "no cross-zone placements in the skewed multiregion trace"
+
+
+def test_chained_parent_wait_extends_to_root():
+    run = _run("chained", seed=1)
+    children = [r for r in run.records
+                if not r.failed and r.arrival_id and "/" in r.arrival_id]
+    assert children, "chained scenario spawned no children"
+    for r in children:
+        assert r.components["parent_wait"] > 0.0
+        assert r.components["parent_wait"] == r.t_submit - r.t_root
+
+
+def test_build_closes_tie_locked_floats():
+    # regression: this chained-run case once left the window's partial sum
+    # exactly half an ulp off the target's grid, so every service candidate
+    # was a round-to-even tie and the naive closure looped forever
+    service = 7.518728815810424 - 0.9
+    comps = build(sched=0.05, boot=0.5, migrate=0.0, route=0.35,
+                  service=service, parent_wait=0.3500000000000003,
+                  latency=7.518728815810424)
+    assert total(comps) == 7.518728815810424 + comps["parent_wait"]
+    # the tie-break perturbations stay far below any physical quantity
+    assert abs(comps["boot"] - 0.5) < 1e-9
+    assert abs(comps["service"] - service) < 1e-6
+    assert comps["parent_wait"] == 0.3500000000000003  # never adjusted
+
+
+def test_check_rejects_broken_components():
+    run = _run("poisson", seed=0, duration=10.0)
+    r = next(x for x in run.records if not x.failed)
+    broken = dict(r.components)
+    broken["boot"] += 0.1
+    bad = dataclasses.replace(r, components=broken)
+    with pytest.raises(AssertionError):
+        check(bad)
+
+
+def test_attributor_registry_histograms_and_summary():
+    run = _run("multiregion", seed=0)
+    snap = run.obs.snapshot()
+    keys = [k for k in snap if k.startswith("attr.")]
+    assert any(".api.boot_s.count" in k for k in keys)
+    assert any(k.startswith("attr.eu.") for k in keys)  # zone-labelled
+    # histogram counts add up to the successful record count per function
+    n_api = sum(snap[k] for k in keys if ".api.service_s.count" in k)
+    assert n_api == sum(1 for r in run.records
+                        if r.function == "api" and not r.failed)
+    by_fn = summarize(run.records, by="function")
+    assert set(by_fn) <= {"api", "thumb", "etl", "divide", "impera"}
+    for row in by_fn.values():
+        assert row["e2e"] == pytest.approx(
+            sum(row[c] for c in COMPONENTS))
+
+
+# --------------------------------------------------------------------------- #
+# SLO engine
+# --------------------------------------------------------------------------- #
+
+
+def test_slo_objective_validation():
+    with pytest.raises(ValueError):
+        SloObjective("f", threshold_s=1.0, compliance=1.0)
+    with pytest.raises(ValueError):
+        SloObjective("f", threshold_s=0.0)
+    o = SloObjective("f", threshold_s=1.0, compliance=0.99)
+    assert o.error_budget == pytest.approx(0.01)
+    assert o.target_quantile == 0.99
+
+
+def test_slo_burn_rates_and_alerting():
+    eng = SloEngine({"api": SloObjective("api", threshold_s=1.0,
+                                         compliance=0.9)},
+                    fast_window=10.0, slow_window=100.0, alert_burn=1.0)
+    # steady compliant traffic: no burn
+    for i in range(100):
+        eng.observe("api", float(i), 0.5)
+    assert eng.burn_rates("api") == (0.0, 0.0)
+    assert eng.alerts() == []
+    assert eng.budget_remaining("api") == 1.0
+    # a breach spike saturates the fast window but dilutes in the slow one
+    for i in range(100, 110):
+        eng.observe("api", float(i), 5.0)
+    fast, slow = eng.burn_rates("api")
+    assert fast > 1.0
+    assert slow < fast
+    # multi-window AND: the fast spike alone must not alert
+    assert slow < 1.0 and not eng.alerting("api")
+    # sustained burn trips both windows
+    for i in range(110, 220):
+        eng.observe("api", float(i), 5.0)
+    assert eng.alerting("api")
+    assert eng.alerts() == ["api"]
+    assert eng.budget_remaining("api") < 1.0
+
+
+def test_slo_window_slides_on_virtual_time():
+    eng = SloEngine({"api": 1.0}, fast_window=10.0, slow_window=50.0)
+    for i in range(10):
+        eng.observe("api", float(i), 9.0)  # all breaches
+    assert eng.burn_rates("api")[0] > 0.0
+    # quiet period: the windows slide past the breaches
+    eng.observe("api", 200.0, 0.1)
+    assert eng.burn_rates("api") == (0.0, 0.0)
+
+
+def test_slo_snapshot_render_and_platform_stats():
+    slo = SloEngine({"divide": 0.5}, fast_window=5.0, slow_window=20.0)
+    obs = Obs.enabled(slo=slo, timers=False)
+    plat = Platform.from_yaml(
+        "d:\n  workers: *\n  strategy: best_first\n",
+        cluster={"w0": 8.0}, obs=obs)
+    plat.register("divide", memory=1.0, tag="d")
+    slo.observe("divide", 1.0, 0.2)
+    slo.observe("divide", 2.0, 0.9)
+    stats = plat.stats()
+    assert stats["slo"]["divide"]["observed"] == 2
+    assert stats["slo"]["divide"]["breaches"] == 1
+    # alerting exports as 0/1 so the Prometheus render keeps the row
+    assert isinstance(stats["slo"]["divide"]["alerting"], int)
+    snap = obs.snapshot()
+    assert snap["slo.divide.observed"] == 2
+    assert "slo_divide_burn_fast" in obs.render()
+
+
+def test_slo_unknown_function_is_ignored():
+    eng = SloEngine({"api": 1.0})
+    eng.observe("other", 1.0, 99.0)  # no objective: free no-op
+    assert "other" not in eng and "api" in eng
+    assert set(eng.snapshot()) == {"api"}
+
+
+def test_slo_fed_by_workload_driver():
+    run = run_config(ReplayConfig(scenario="poisson", duration=30.0,
+                                  slo={"api": 0.6, "etl": 2.0}))
+    slo = run.obs.slo.snapshot()
+    n_api = sum(1 for r in run.records
+                if r.function == "api" and not r.failed)
+    assert n_api and slo["api"]["observed"] == n_api
+    assert run.platform.stats()["slo"]["api"]["observed"] == n_api
+
+
+# --------------------------------------------------------------------------- #
+# what-if replay
+# --------------------------------------------------------------------------- #
+
+
+def test_same_policy_replay_bit_identical():
+    base = _run("chained", seed=2)
+    again = run_config(base.config, trace=base.trace)
+    assert replay_identical(base, again) == []
+
+
+def test_alternate_strategy_diff_decomposes_deltas():
+    base = _run("chained", seed=0)
+    d = whatif(base, strategy="least_loaded")
+    assert d.entries, "counterfactual produced no comparable activations"
+    _assert_exact(d.alt)  # the invariant holds under the alternate policy
+    for e in d.entries:
+        assert e["dominant"] in COMPONENTS
+        # the latency delta is the component deltas minus the parent_wait
+        # shift (which extends the window, not the measured latency)
+        recomposed = sum(e["components_delta"][k] for k in COMPONENTS)
+        assert recomposed - e["components_delta"]["parent_wait"] == \
+            pytest.approx(e["delta"], abs=1e-9)
+        assert e["note"]
+    # the diff is sorted biggest-mover-first
+    deltas = [abs(e["delta"]) for e in d.entries]
+    assert deltas == sorted(deltas, reverse=True)
+
+
+def test_whatif_keepalive_counterfactual():
+    base = _run("bursty", seed=1)
+    d = whatif(base, keepalive="affinity")
+    # same trace, same front door: the sched charge can never shift
+    assert all(e["components_delta"]["sched"] == 0.0 for e in d.entries)
+    assert d.alt.config.keepalive == "affinity"
+    _assert_exact(d.alt)
+
+
+def test_replay_timeline_valid_and_negative():
+    base = _run("chained", seed=0, duration=20.0)
+    obj = chrome_trace(base)
+    assert validate_replay_timeline(obj) == []
+    # negative: strip one invoke span's components entirely
+    for ev in obj["traceEvents"]:
+        if ev.get("cat") == "invoke" and ev.get("ph") == "X":
+            del ev["args"]["components"]
+            break
+    errs = validate_replay_timeline(obj)
+    assert errs and "missing components" in errs[0]
+    # a partially-stripped taxonomy is named, not just flagged
+    obj2 = chrome_trace(base)
+    for ev in obj2["traceEvents"]:
+        if ev.get("cat") == "invoke" and ev.get("ph") == "X":
+            del ev["args"]["components"]["boot"]
+            break
+    errs2 = validate_replay_timeline(obj2)
+    assert errs2 and "boot" in errs2[0]
+
+
+def test_diff_runs_skips_failed_and_unmatched():
+    a = _run("poisson", seed=0, duration=15.0)
+    b = run_config(a.config, trace=a.trace)
+    entries = diff_runs(a, b)
+    assert all(e["delta"] == 0.0 for e in entries)
+    ids = {e["arrival_id"] for e in entries}
+    failed = {r.arrival_id for r in a.records if r.failed}
+    assert not (ids & failed)

@@ -112,8 +112,28 @@ def test_registry_prometheus_render():
     text = reg.render()
     assert "# TYPE sched_decisions counter" in text
     assert "sched_decisions 1" in text
-    assert 'stage_mask_s{quantile="0.5"}' in text
+    # conformant histogram exposition: cumulative le-buckets + sum/count
+    assert "# TYPE stage_mask_s histogram" in text
+    assert 'stage_mask_s_bucket{le="0.001"} 1' in text
+    assert 'stage_mask_s_bucket{le="+Inf"} 1' in text
+    assert "stage_mask_s_sum 0.001" in text
     assert "stage_mask_s_count 1" in text
+
+
+def test_registry_prometheus_render_golden(tmp_path):
+    # a tiny registry with custom bounds, rendered against the checked-in
+    # golden file — any exposition-format drift must be deliberate
+    from pathlib import Path
+
+    reg = MetricsRegistry()
+    reg.counter("requests").inc(5)
+    reg.gauge("inflight").set(2.0)
+    h = reg.histogram("latency_s", bounds=(0.001, 0.01, 0.1, 1.0))
+    for x in (0.0005, 0.005, 0.005, 0.05, 2.0):
+        h.observe(x)
+    reg.register_collector("pool", lambda: {"cold": 3, "rate": 0.5})
+    golden = Path(__file__).parent / "golden" / "metrics.prom"
+    assert reg.render() == golden.read_text()
 
 
 def test_stage_timers_sampling():
@@ -156,6 +176,17 @@ def test_tracer_ring_bound():
         tr.complete(f"act-{i}", float(i))
     assert len(tr.events) == 4
     assert tr.records()[0]["id"] == "act-6"  # oldest dropped first
+    assert tr.dropped_spans == 6  # every eviction is counted, not silent
+
+
+def test_tracer_dropped_spans_in_snapshot():
+    obs = Obs(tracer=Tracer(capacity=4))
+    for i in range(7):
+        obs.tracer.complete(f"act-{i}", float(i))
+    snap = obs.snapshot()
+    assert snap["tracer.records"] == 4
+    assert snap["tracer.dropped_spans"] == 3
+    assert "tracer_dropped_spans 3" in obs.render()
 
 
 def test_chrome_trace_layout():
