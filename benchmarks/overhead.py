@@ -399,6 +399,68 @@ def run_obs_enabled_microbench(W: int = OBS_W, n: int = OBS_N,
         lambda: Obs.enabled(verdicts=False), W, n, repeats, level="session")
 
 
+RES_DISABLED_BUDGET = 0.01  # an attached-but-disabled Resilience(): < 1%
+
+
+def run_resilience_disabled_microbench(W: int = FACADE_W, n: int = OBS_N,
+                                       repeats: int = OBS_REPEATS
+                                       ) -> Dict[str, float]:
+    """The resilience layer's disabled-path tax: a disabled
+    :class:`repro.resilience.Resilience` bundle attached via
+    :meth:`Platform.attach_resilience` collapses to ``None`` references,
+    so the full facade invoke/complete cycle pays only the per-invoke
+    ``is not None`` guard — same single-instance alternating-chunk
+    protocol as the obs tax, budget < 1%."""
+    from repro.pool import StartCosts, WarmPool, make_policy
+    from repro.resilience import Resilience
+
+    mix_rng = random.Random(2)
+    fs = [mix_rng.choice(["f_lat", "f_train", "f_batch"]) for _ in range(n)]
+
+    st, reg = _facade_setup(W)
+    pool = WarmPool(make_policy("fixed_ttl", ttl=1e9),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=256.0, hot_window=1e9)
+    plat = Platform(FACADE_SCRIPT, cluster=st, registry=reg,
+                    pool=pool, seed=3)
+    res = Resilience()  # the disabled shape: every sub-component None
+
+    def mk_run(attached: bool):
+        def go() -> float:
+            plat.attach_resilience(res if attached else None)
+            rng = random.Random(3)
+            t0 = time.process_time()
+            for f in fs:
+                d = plat.invoke(f, rng)
+                if d.worker is not None:
+                    plat.complete(d)
+            return (time.process_time() - t0) / n * 1e6
+
+        return go
+
+    r = _paired_overhead(mk_run(False), mk_run(True), repeats)
+    plat.close()
+    return r
+
+
+def resilience_main(quick: bool = False) -> Dict[str, float]:
+    reps = 150 if quick else OBS_REPEATS
+    r = _best_of_two(run_resilience_disabled_microbench,
+                     RES_DISABLED_BUDGET, n=OBS_N, repeats=reps)
+    print(f"resilience disabled (facade cycle, W={FACADE_W}, "
+          f"{reps} chunk pairs of n={OBS_N}):")
+    print(f"  detached : {r['base_us']:8.2f} us/cycle (best)")
+    print(f"  disabled : {r['obs_us']:8.2f} us/cycle (best)")
+    print(f"  overhead : {r['overhead']*100:+7.2f}% "
+          f"(budget {RES_DISABLED_BUDGET*100:.0f}%)")
+    assert r["overhead"] < RES_DISABLED_BUDGET, (
+        f"disabled resilience adds {r['overhead']*100:.2f}% "
+        f"(budget {RES_DISABLED_BUDGET*100:.0f}%): {r}")
+    print(f"disabled resilience tax < {RES_DISABLED_BUDGET*100:.0f}% — the "
+          "zero-overhead-when-off contract holds at the facade layer")
+    return r
+
+
 def _best_of_two(bench, budget: float, **kw) -> Dict[str, float]:
     """Run ``bench``; on a budget miss, measure once more and keep the
     better estimate.  A single re-measure only fires on failure, so it
@@ -449,6 +511,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="run only the facade-vs-direct-session microbench")
     ap.add_argument("--obs", action="store_true",
                     help="run only the observability-plane tax microbenches")
+    ap.add_argument("--resilience", action="store_true",
+                    help="run only the disabled-resilience tax microbench")
     ap.add_argument("--quick", action="store_true",
                     help="shorter runs (CI smoke)")
     args = ap.parse_args(argv)
@@ -457,6 +521,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         return
     if args.obs:
         obs_main(quick=args.quick)
+        return
+    if args.resilience:
+        resilience_main(quick=args.quick)
         return
 
     table = run()

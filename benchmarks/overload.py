@@ -1,0 +1,432 @@
+"""Overload & failure-resilience benchmark (the robustness layer's claims).
+
+Three experiment families, each resilient-vs-baseline on identical traces:
+
+1. **Overload** — a single-zone 8-vCPU testbed driven at 2x/3x/5x its
+   ~32 rps capacity by three tenants (gold/silver/bronze).  The resilient
+   run attaches per-tenant token-bucket admission (caps summing to ~0.8x
+   capacity), the weighted-fair queue, and SLO-aware shedding; the
+   baseline dispatches everything.  Claims asserted at *every* factor:
+   the resilient run sheds (visibly, per tenant), completes more work
+   within the SLO (**goodput**), and keeps the admitted-work **p99**
+   under the baseline's — shedding the excess beats degrading everyone.
+2. **Zone outage (chaos)** — the N-zone testbed loses its ``ap`` zone
+   mid-run (``ChaosHarness`` kill + heal on the virtual clock).  With
+   retry/backoff attached, every activation the dead workers were running
+   is rescued (``permanent_lost == 0``, ``retries > 0``) and the windowed
+   normalised p99 returns under the SLO within the recovery budget; the
+   baseline (no retry) permanently loses in-flight work.
+3. **Disabled layer** — the zero-overhead contract: a disabled
+   ``Resilience()`` bundle attached to the driver + facade leaves every
+   decision, start kind, latency component, and rng draw bit-identical,
+   and the facade-cycle tax stays under 1%
+   (``benchmarks/overhead.py --resilience`` protocol).
+
+Writes ``BENCH_overload.json`` at the repo root on a full run.
+``--quick`` runs one overload factor and shorter traces and skips the
+JSON rewrite; ``--json`` prints the payload instead of the table.
+
+Usage: ``PYTHONPATH=src python benchmarks/overload.py [--quick] [--json]``
+(or ``python benchmarks/run.py --overload [--quick]``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import WorkerSpec, multizone_testbed, paper_testbed
+from repro.obs import Obs, SloEngine
+from repro.platform import Platform
+from repro.resilience import (
+    ChaosHarness,
+    Fault,
+    HEAL_ZONE,
+    KILL_ZONE,
+    Resilience,
+    RetryPolicy,
+    TenantPolicy,
+)
+from repro.workload import COMPUTE_S, TraceWorkload, build_trace, overload_trace
+from repro.workload.replay import build_script
+from repro.workload.scenarios import register_functions
+from repro.workload.traces import poisson_trace
+
+SEED = 0
+
+# ---- overload: 4 x (2 vCPU / 2 GB) in one zone; api costs 0.25 cpu-s ----- #
+OVERLOAD_WORKERS = 4
+CAPACITY_RPS = OVERLOAD_WORKERS * 2 / COMPUTE_S["api"]  # = 32
+OVERLOAD_FACTORS = (2.0, 3.0, 5.0)
+OVERLOAD_DURATION = 60.0
+SLO_API_S = 1.0
+#: offered-load split and admitted caps (sum 25 rps ~= 0.78x capacity)
+TENANTS: Tuple[Tuple[str, float, TenantPolicy], ...] = (
+    ("gold", 0.5, TenantPolicy(weight=2.0, rate=12.0, burst=12.0)),
+    ("silver", 0.3, TenantPolicy(weight=1.0, rate=8.0, burst=8.0)),
+    ("bronze", 0.2, TenantPolicy(weight=1.0, rate=5.0, burst=8.0)),
+)
+
+OVERLOAD_SCRIPT = """
+api:
+  workers: *
+  strategy: least_loaded
+"""
+
+# ---- zone outage: the 3-zone testbed loses ap mid-run -------------------- #
+OUTAGE_ZONES = ("eu", "us", "ap")
+OUTAGE_DURATION = 90.0
+OUTAGE_KILL_T = 30.0
+OUTAGE_HEAL_T = 55.0
+#: ~5.25 cpu-s/s offered over 15 vCPUs — busy enough (the 2.5s etl jobs
+#: keep several activations in flight) that the zone kill always destroys
+#: running work, yet light enough that the surviving 10 vCPUs can still
+#: meet the SLO: the breach is the kill transient, and recovery happens
+#: *while the zone is still dead*, not merely after the heal
+OUTAGE_RATE = 6.0
+OUTAGE_MIX = (("api", 3.0), ("thumb", 2.0), ("etl", 1.0))
+#: thresholds sit ~1.3x above the testbed's steady-state windowed p99
+#: (0.4s zone+invoke overhead plus 2-3-way sharing on the 1-vCPU node
+#: class), so a breach means the fault transient — wasted elapsed time
+#: plus the retried attempt — not background processor-sharing noise
+OUTAGE_SLO = {"api": 1.5, "thumb": 3.5, "etl": 7.0}
+RECOVERY_BUDGET_S = 20.0  # p99 back under SLO within this after the kill
+RECOVERY_WINDOW_S = 5.0
+
+OUTAGE_SCRIPT = """
+api:
+  workers: *
+  strategy: least_loaded
+img:
+  workers: *
+  strategy: least_loaded
+etl:
+  workers: *
+  strategy: least_loaded
+"""
+
+
+def _overload_testbed() -> Dict[str, WorkerSpec]:
+    return {f"ow{i}": WorkerSpec(f"ow{i}", "eu", 2, 2048.0)
+            for i in range(OVERLOAD_WORKERS)}
+
+
+def _p99(xs: List[float]) -> Optional[float]:
+    if not xs:
+        return None
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+
+def _e2e(r) -> float:
+    """End-to-end seconds from the root arrival: dispatch latency plus any
+    queue wait / retry backoff charged as parent_wait."""
+    wait = (r.t_submit - r.t_root) if r.t_root is not None else 0.0
+    return r.latency + wait
+
+
+def _run(topo, script, trace, compute, names, *, resilience=None,
+         slo=None, faults: Sequence[Fault] = (), seed: int = SEED):
+    """One trace replay on fresh state; returns (workload, harness)."""
+    sim = ClusterSim(topo, SimParams(), seed=seed)
+    register_functions(sim.registry, names)
+    obs = None
+    if slo is not None:
+        obs = Obs.enabled(verdicts=False, timers=False, slo=SloEngine(slo))
+    platform = Platform.for_sim(sim, script, obs=obs, resilience=resilience)
+    rng = random.Random(seed + 1)
+    wl = TraceWorkload(sim, platform.placer(rng), compute,
+                       script=platform.script, obs=obs, resilience=resilience)
+    harness = None
+    if faults:
+        harness = ChaosHarness(faults)
+        harness.arm(wl)
+    wl.load(trace)
+    sim.run()
+    return wl, harness
+
+
+def _run_stats(wl, duration: float, slo: Dict[str, float],
+               res: Optional[Resilience]) -> Dict:
+    recs = wl.records
+    done = [r for r in recs if not r.failed]
+    good = [r for r in done if _e2e(r) <= slo[r.function]]
+    out = {
+        "submitted": sum(1 for r in recs if r.attempts == 1),
+        "completed": len(done),
+        "goodput_rps": round(len(good) / duration, 4),
+        "p99_s": round(_p99([_e2e(r) for r in done]), 4) if done else None,
+        "shed": sum(1 for r in recs if r.start_kind == "shed"),
+        "unschedulable": sum(1 for r in recs if r.start_kind == "failed"),
+        "lost": sum(1 for r in recs if r.start_kind == "lost"),
+        "permanent_lost": wl.permanent_lost,
+    }
+    n_sub = out["submitted"] + out["shed"]  # shed roots never dispatch
+    out["shed_rate"] = round(out["shed"] / n_sub, 4) if n_sub else 0.0
+    if res is not None:
+        out["resilience"] = res.snapshot()
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# 1. overload: admission + fairness vs dispatch-everything
+# --------------------------------------------------------------------------- #
+
+
+def run_overload(factor: float, *, duration: float) -> Dict:
+    offered = factor * CAPACITY_RPS
+    rates = [(t, share * offered) for t, share, _pol in TENANTS]
+    trace = overload_trace(rates, duration, [("api", 1.0)],
+                           random.Random(SEED + 10))
+    topo = _overload_testbed()
+    slo = {"api": SLO_API_S}
+
+    base_wl, _ = _run(topo, OVERLOAD_SCRIPT, trace, COMPUTE_S, ["api"])
+    base = _run_stats(base_wl, duration, slo, None)
+
+    slo_engine = SloEngine(slo)
+    res = Resilience.enabled(
+        tenants={t: pol for t, _s, pol in TENANTS},
+        default=TenantPolicy(rate=2.0), slo=slo_engine,
+        budget_floor=0.05, pressure_depth=4)
+    res_wl, _ = _run(topo, OVERLOAD_SCRIPT, trace, COMPUTE_S, ["api"],
+                     resilience=res, slo=slo)
+    resil = _run_stats(res_wl, duration, slo, res)
+
+    return {
+        "factor": factor,
+        "offered_rps": round(offered, 2),
+        "capacity_rps": CAPACITY_RPS,
+        "baseline": base,
+        "resilient": resil,
+        "goodput_improves": resil["goodput_rps"] > base["goodput_rps"],
+        "p99_improves": (base["p99_s"] is None
+                         or (resil["p99_s"] is not None
+                             and resil["p99_s"] < base["p99_s"])),
+        "sheds_under_pressure": resil["shed"] > 0,
+    }
+
+
+# --------------------------------------------------------------------------- #
+# 2. zone outage: chaos kill/heal with retry rescue
+# --------------------------------------------------------------------------- #
+
+
+def _windowed_norm_p99(recs, width: float,
+                       slo: Dict[str, float]) -> Dict[int, float]:
+    """Per completion-time window, the p99 of ``e2e / slo_threshold``
+    (<= 1.0 means the window's tail met its objective)."""
+    buckets: Dict[int, List[float]] = {}
+    for r in recs:
+        if r.failed:
+            continue
+        w = int((r.t_submit + r.latency) // width)
+        buckets.setdefault(w, []).append(_e2e(r) / slo[r.function])
+    return {w: _p99(v) for w, v in sorted(buckets.items())}
+
+
+def run_outage(*, duration: float, kill_t: float, heal_t: float) -> Dict:
+    trace = poisson_trace(OUTAGE_RATE, duration, list(OUTAGE_MIX),
+                          random.Random(SEED + 20))
+    names = [n for n, _w in OUTAGE_MIX]
+    faults = (Fault(kill_t, KILL_ZONE, "ap"), Fault(heal_t, HEAL_ZONE, "ap"))
+
+    def mk_topo():
+        return multizone_testbed(OUTAGE_ZONES)
+
+    base_wl, base_h = _run(mk_topo(), OUTAGE_SCRIPT, trace, COMPUTE_S, names,
+                           faults=faults)
+    base = _run_stats(base_wl, duration, OUTAGE_SLO, None)
+
+    res = Resilience.enabled(retry=RetryPolicy(), queue=True)
+    res_wl, res_h = _run(mk_topo(), OUTAGE_SCRIPT, trace, COMPUTE_S, names,
+                         resilience=res, faults=faults)
+    resil = _run_stats(res_wl, duration, OUTAGE_SLO, res)
+
+    windows = _windowed_norm_p99(res_wl.records, RECOVERY_WINDOW_S,
+                                 OUTAGE_SLO)
+    breach = [w for w, p in windows.items()
+              if p is not None and p > 1.0
+              and (w + 1) * RECOVERY_WINDOW_S > kill_t]
+    recovery_s = (max(breach) + 1) * RECOVERY_WINDOW_S - kill_t if breach \
+        else 0.0
+    retries = resil["resilience"]["retries"]
+
+    return {
+        "kill_t": kill_t, "heal_t": heal_t,
+        "chaos_log": [list(e) for e in (res_h.log if res_h else [])],
+        "baseline": base,
+        "resilient": resil,
+        "windows_norm_p99": {str(w): round(p, 4) for w, p in windows.items()
+                             if p is not None},
+        "recovery_s": round(recovery_s, 2),
+        "baseline_loses_work": base["permanent_lost"] > 0,
+        "zero_permanent_loss": resil["permanent_lost"] == 0,
+        "retries_used": retries > 0,
+        "recovered_within_budget": recovery_s <= RECOVERY_BUDGET_S,
+        "chaos_fired": (res_h is not None and len(res_h.log) == 2
+                        and base_h is not None and len(base_h.log) == 2),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# 3. disabled layer: bit-identity + facade tax
+# --------------------------------------------------------------------------- #
+
+
+def run_bit_identity() -> Dict:
+    """A disabled ``Resilience()`` attached to both the driver and the
+    facade must leave records (``repr`` covers NaN fields) and the placer
+    rng stream bit-identical to no bundle at all."""
+
+    def go(attach_disabled: bool):
+        sim = ClusterSim(paper_testbed(), SimParams(), seed=3)
+        register_functions(sim.registry)
+        res = Resilience() if attach_disabled else None
+        platform = Platform.for_sim(sim, build_script("best_first"),
+                                    resilience=res)
+        rng = random.Random(7)
+        wl = TraceWorkload(sim, platform.placer(rng), COMPUTE_S,
+                           script=platform.script, resilience=res)
+        wl.load(build_trace("poisson", duration=30.0, rate=2.0, seed=5))
+        sim.run()
+        return ([repr(r) for r in wl.records],
+                tuple(rng.random() for _ in range(4)))
+
+    bare, disabled = go(False), go(True)
+    return {
+        "records": len(bare[0]),
+        "records_identical": bare[0] == disabled[0],
+        "rng_identical": bare[1] == disabled[1],
+        "bit_identical": bare == disabled,
+    }
+
+
+def run_disabled_tax(*, quick: bool) -> Dict:
+    from benchmarks import overhead as oh
+    reps = 150 if quick else oh.OBS_REPEATS
+    r = oh._best_of_two(oh.run_resilience_disabled_microbench,
+                        oh.RES_DISABLED_BUDGET, n=oh.OBS_N, repeats=reps)
+    r["budget"] = oh.RES_DISABLED_BUDGET
+    r["under_budget"] = r["overhead"] < oh.RES_DISABLED_BUDGET
+    return r
+
+
+# --------------------------------------------------------------------------- #
+
+
+def run(*, quick: bool = False) -> Dict:
+    factors = (2.0,) if quick else OVERLOAD_FACTORS
+    o_dur = 30.0 if quick else OVERLOAD_DURATION
+    z_dur, kill_t, heal_t = ((60.0, 20.0, 35.0) if quick
+                             else (OUTAGE_DURATION, OUTAGE_KILL_T,
+                                   OUTAGE_HEAL_T))
+    overload = [run_overload(f, duration=o_dur) for f in factors]
+    outage = run_outage(duration=z_dur, kill_t=kill_t, heal_t=heal_t)
+    ident = run_bit_identity()
+    tax = run_disabled_tax(quick=quick)
+    criteria = {
+        "overload_goodput_improves": all(r["goodput_improves"]
+                                         for r in overload),
+        "overload_p99_improves": all(r["p99_improves"] for r in overload),
+        "overload_sheds_under_pressure": all(r["sheds_under_pressure"]
+                                             for r in overload),
+        "outage_chaos_fired": outage["chaos_fired"],
+        "outage_baseline_loses_work": outage["baseline_loses_work"],
+        "outage_zero_permanent_loss": outage["zero_permanent_loss"],
+        "outage_retries_used": outage["retries_used"],
+        "outage_recovered_within_budget": outage["recovered_within_budget"],
+        "disabled_bit_identical": ident["bit_identical"],
+        "disabled_tax_under_budget": tax["under_budget"],
+    }
+    return {
+        "config": {
+            "seed": SEED, "capacity_rps": CAPACITY_RPS,
+            "factors": list(factors), "overload_duration_s": o_dur,
+            "slo_api_s": SLO_API_S,
+            "tenants": {t: {"share": s, "rate": pol.rate,
+                            "weight": pol.weight}
+                        for t, s, pol in TENANTS},
+            "outage": {"duration_s": z_dur, "kill_t": kill_t,
+                       "heal_t": heal_t, "zones": list(OUTAGE_ZONES),
+                       "recovery_budget_s": RECOVERY_BUDGET_S},
+        },
+        "overload": overload,
+        "zone_outage": outage,
+        "bit_identity": ident,
+        "disabled_tax": tax,
+        "criteria": criteria,
+        "all_criteria_pass": all(criteria.values()),
+    }
+
+
+def _print_table(payload: Dict) -> None:
+    for row in payload["overload"]:
+        b, r = row["baseline"], row["resilient"]
+        print(f"== overload {row['factor']}x "
+              f"({row['offered_rps']:.0f} rps offered, "
+              f"{row['capacity_rps']:.0f} rps capacity) ==")
+        print(f"  baseline : goodput={b['goodput_rps']:6.2f} rps "
+              f"p99={b['p99_s']}s shed={b['shed']} "
+              f"unschedulable={b['unschedulable']}")
+        print(f"  resilient: goodput={r['goodput_rps']:6.2f} rps "
+              f"p99={r['p99_s']}s shed={r['shed']} "
+              f"(rate={r['shed_rate']*100:.1f}%) "
+              f"queue_max={r['resilience']['queue_max_depth']}")
+        per_t = r["resilience"]["tenants"]
+        cells = " ".join(
+            f"{t}={c['admitted']}ok/{c['rate'] + c['slo']}shed"
+            for t, c in per_t.items())
+        print(f"    tenants: {cells}")
+    z = payload["zone_outage"]
+    b, r = z["baseline"], z["resilient"]
+    print(f"== zone outage (kill ap @{z['kill_t']}s, heal @{z['heal_t']}s) ==")
+    print(f"  baseline : permanent_lost={b['permanent_lost']} "
+          f"completed={b['completed']}")
+    print(f"  resilient: permanent_lost={r['permanent_lost']} "
+          f"retries={r['resilience']['retries']} "
+          f"completed={r['completed']} recovery={z['recovery_s']}s "
+          f"(budget {RECOVERY_BUDGET_S}s)")
+    i, t = payload["bit_identity"], payload["disabled_tax"]
+    print(f"== disabled layer ==")
+    print(f"  bit-identity: {i['records']} records, "
+          f"identical={i['bit_identical']}")
+    print(f"  facade tax  : {t['overhead']*100:+.2f}% "
+          f"(budget {t['budget']*100:.0f}%)")
+    crit = payload["criteria"]
+    print("criteria: " + " ".join(f"{k}={v}" for k, v in crit.items()))
+    print(f"all_criteria_pass: {payload['all_criteria_pass']}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="one factor, short traces, no BENCH json rewrite")
+    ap.add_argument("--json", action="store_true",
+                    help="print the JSON payload instead of the table")
+    args = ap.parse_args(argv)
+    payload = run(quick=args.quick)
+    if args.json:
+        print(json.dumps(payload, indent=2))
+    else:
+        _print_table(payload)
+    if not args.quick:
+        out = Path(__file__).resolve().parent.parent / "BENCH_overload.json"
+        with open(out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {out}")
+    assert payload["all_criteria_pass"], (
+        "overload/resilience criteria failed: "
+        + json.dumps(payload["criteria"]))
+
+
+if __name__ == "__main__":
+    main()

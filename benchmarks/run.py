@@ -68,10 +68,16 @@ def main(argv=None) -> None:
                     help="counterfactual what-if replay benchmark: same-"
                          "policy replay bit-identity + strategy deltas "
                          "(writes BENCH_whatif.json)")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload & failure-resilience benchmark: "
+                         "admission/fairness vs dispatch-everything at "
+                         "2-5x capacity, zone-outage chaos with retry "
+                         "rescue, disabled-layer bit-identity + tax "
+                         "(writes BENCH_overload.json)")
     ap.add_argument("--quick", action="store_true",
                     help="with --coldstart/--scale/--shard/--multiregion/"
-                         "--simperf/--obs/--whatif: reduced size, no BENCH "
-                         "json rewrite")
+                         "--simperf/--obs/--whatif/--overload: reduced "
+                         "size, no BENCH json rewrite")
     args = ap.parse_args(argv)
 
     if args.coldstart:
@@ -84,7 +90,7 @@ def main(argv=None) -> None:
         cst.main(sub)
         return
     if args.scale or args.shard or args.multiregion or args.simperf \
-            or args.obs or args.whatif:
+            or args.obs or args.whatif or args.overload:
         sub = ["--quick"] if args.quick else []
         if args.scale:
             from benchmarks import scheduler_scale as sc
@@ -104,6 +110,9 @@ def main(argv=None) -> None:
         if args.whatif:
             from benchmarks import whatif as wi
             wi.main(sub)
+        if args.overload:
+            from benchmarks import overload as ol
+            ol.main(sub)
         return
 
     rows = []

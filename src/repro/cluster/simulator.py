@@ -194,6 +194,11 @@ class ClusterSim:
         self._docs: Dict[str, List[Dict[str, float]]] = {}
         self._connections: Dict[Tuple[str, str], bool] = {}
         self.failures: List[str] = []
+        # fault injection (chaos harness): workers currently dead, plus the
+        # cpu-seconds of compute their deaths destroyed — conservation under
+        # chaos is delivered + lost == submitted, per worker
+        self._dead: set = set()
+        self._lost_work: Dict[str, float] = {}
         # container lifecycle (optional)
         self.pool = pool
         self.last_start_kind: Optional[str] = None
@@ -274,6 +279,10 @@ class ClusterSim:
 
     def compute(self, fname: str, worker: str, work: float, activation_id: str,
                 on_done: Callable) -> None:
+        if worker in self._dead:
+            raise RuntimeError(
+                f"compute scheduled on failed worker {worker!r} — the "
+                "caller must drop or reschedule work for dead workers")
         task = _Task(fname, worker, on_done, activation_id)
         task.work = work
         self._submitted_work[worker] = self._submitted_work.get(worker, 0.0) + work
@@ -424,6 +433,82 @@ class ClusterSim:
             return
         self.pool.sweep(self.now)
         self._kick_janitor()
+
+    # ---- fault injection (chaos harness) ------------------------------------- #
+
+    def fail_worker(self, worker: str):
+        """Kill ``worker`` at the current virtual time: evict its
+        activations from the state tables (returned, as
+        :meth:`ClusterState.fail_worker` promises, for rescheduling),
+        destroy the containers of its in-flight invocations, drain its
+        idle containers, and cancel its compute in whichever core is
+        active.  The cancelled tasks' ``on_done`` callbacks never fire —
+        the caller (the workload driver's loss handler) owns turning the
+        returned activations into retries or honest loss records.
+
+        Destroyed compute is accounted in :meth:`lost_work`, keeping the
+        conservation invariant ``delivered + lost == submitted``."""
+        if worker not in self.workers:
+            raise KeyError(f"unknown worker {worker!r}")
+        lost = self.state.fail_worker(worker)
+        if self.pool is not None:
+            for act in lost:
+                cid = self._containers.pop(act.activation_id, None)
+                if cid is not None:
+                    self.pool.destroy(cid)
+            self.pool.evict_worker(worker)
+        lost_cpu = 0.0
+        if self.engine == "legacy":
+            for task in self._running.get(worker, ()):
+                lost_cpu += max(task.remaining, 0.0)
+                self._task_removed(task)
+            self._running[worker] = []
+            # the single armed completion may have been one of the killed
+            # tasks (it would drop as stale without rearming and stall the
+            # survivors) — rearm over the remaining population
+            self._reschedule_completions()
+        else:
+            vw = self._vw[worker]
+            vw.touch(self.now)
+            for _vf, _id, task in vw.heap:
+                lost_cpu += max(task.vfinish - vw.vclock, 0.0)
+                self._task_removed(task)
+            vw.heap.clear()
+            vw.n = 0
+            vw.token += 1  # any armed completion event is now stale
+        if lost_cpu:
+            self._lost_work[worker] = \
+                self._lost_work.get(worker, 0.0) + lost_cpu
+        self._dead.add(worker)
+        return lost
+
+    def heal_worker(self, worker: str) -> None:
+        """Bring a previously failed worker back (its spec's memory and
+        zone re-join the state tables via the ``add_worker`` re-join path).
+        A healed worker is a fresh machine: its DB sessions are gone, so
+        the first connection per replica pays ``conn_setup`` again.
+        No-op when the worker is alive."""
+        if worker not in self.workers:
+            raise KeyError(f"unknown worker {worker!r}")
+        if worker not in self._dead:
+            return
+        self._dead.discard(worker)
+        spec = self.workers[worker]
+        self.state.add_worker(worker, max_memory=spec.memory_mb,
+                              zone=spec.zone)
+        if self.engine != "legacy":
+            self._vw[worker].touch(self.now)
+        for key in [k for k in self._connections if k[0] == worker]:
+            del self._connections[key]
+
+    @property
+    def dead_workers(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._dead))
+
+    def lost_work(self, worker: str) -> float:
+        """CPU-seconds of compute destroyed by killing ``worker`` (the
+        conservation ledger's chaos column)."""
+        return self._lost_work.get(worker, 0.0)
 
     # ---- predictive control plane (forecast planner epochs) ------------------ #
 

@@ -57,7 +57,10 @@ def platform_stats(platform) -> Dict:
     """The ``Platform.stats()`` dict: session data-plane counters, cluster
     shape, per-zone rollups (with idle-container residency when a pool is
     attached — the counters ``explain()`` could show but nothing
-    aggregated), and the pool snapshot."""
+    aggregated), the pool snapshot, the worker-failure loss counter, and —
+    with an active resilience bundle attached — its
+    ``shed / retries / queue_depth`` block with per-tenant admission
+    counters (:meth:`repro.resilience.Resilience.snapshot`)."""
     out = dict(platform.session.stats)
     out["workers"] = len(platform.state.workers())
     out["tags"] = len(platform.session.tag_index)
@@ -77,6 +80,10 @@ def platform_stats(platform) -> Dict:
     obs = getattr(platform, "obs", None)
     if obs is not None and getattr(obs, "slo", None) is not None:
         out["slo"] = obs.slo.snapshot()
+    out["lost_activations"] = getattr(platform, "lost_activations", 0)
+    res = getattr(platform, "resilience", None)
+    if res is not None and res.active:
+        out["resilience"] = res.snapshot()
     return out
 
 

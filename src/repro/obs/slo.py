@@ -17,9 +17,11 @@ on the simulator's **virtual clock**:
   are noise, slow-only burn is stale.  A burn rate of 1.0 is "exactly
   budget-exhausting pace"; >1 eats the budget early.
 
-The engine is deliberately passive: callers (the workload driver today,
-admission control in the overload PR next) push ``observe(function, t,
-latency)`` and read ``burn_rates`` / ``alerts`` / ``snapshot``.  Attached
+The engine is deliberately passive: callers (the workload driver, and the
+resilience layer's admission control — :mod:`repro.resilience.admission`
+sheds against :meth:`SloEngine.budget_remaining` under backlog pressure)
+push ``observe(function, t, latency)`` and read ``burn_rates`` /
+``alerts`` / ``snapshot``.  Attached
 to an :class:`repro.obs.Obs` bundle it registers as a snapshot-time
 collector, so burn rates and budgets flow through ``Obs.snapshot()``, the
 Prometheus ``render()``, and ``Platform.stats()["slo"]`` — the
@@ -196,8 +198,16 @@ class SloEngine:
         return [fn for fn in self._slos if self.alerting(fn, now)]
 
     def budget_remaining(self, function: str) -> float:
-        """Cumulative error-budget fraction left (negative = blown)."""
-        s = self._slos[function]
+        """Cumulative error-budget fraction left (negative = blown) — the
+        signal admission control sheds on.  Raises ``KeyError`` for a
+        function with no registered objective: a shed decision against a
+        budget that does not exist would be silent garbage (guard with
+        ``function in engine``)."""
+        s = self._slos.get(function)
+        if s is None:
+            raise KeyError(
+                f"no SLO objective registered for function {function!r}; "
+                f"have {sorted(self._slos)}")
         if s.total == 0:
             return 1.0
         return 1.0 - (s.breaches / s.total) / s.obj.error_budget

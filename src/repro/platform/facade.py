@@ -48,6 +48,7 @@ from repro.core.decision import Decision
 from repro.core.scheduler import explain as _explain_scalar
 from repro.core.sharded import ShardedSession
 from repro.core.state import Activation, ClusterState, Registry
+from repro.resilience import DEFAULT_TENANT, LostActivation
 
 ClusterLike = Union[None, ClusterState, Mapping[str, float],
                     Iterable[Tuple[str, float]]]
@@ -85,6 +86,7 @@ class Platform:
         zones: Optional[Mapping[str, object]] = None,
         zone_strategy: str = "local_first",
         obs=None,
+        resilience=None,
     ):
         self.state = _as_state(cluster)
         self.registry = registry if registry is not None else Registry()
@@ -131,10 +133,34 @@ class Platform:
         # observability plane (repro.obs.Obs): the tracer reference is
         # cached so the disabled hot path pays one attribute load + None
         # check per invoke (`overhead.py --obs` pins it under 1%)
+        # resilience layer (repro.resilience.Resilience): same cached-None
+        # pattern as the tracer — a missing (or disabled) bundle costs the
+        # hot path one attribute load + None check (`overhead.py
+        # --resilience` pins it under 1%), and decisions + rng draws stay
+        # bit-identical (property-tested)
+        self.resilience = None
+        self._res = None  # the *active* bundle, or None
+        self._res_meta: Dict[str, Tuple[str, float]] = {}  # aid -> (tenant, t)
+        self.lost_activations = 0  # activations lost to worker failures
         self.obs = obs
         self._tracer = None
         if obs is not None:
             self.attach_obs(obs)
+        if resilience is not None:
+            self.attach_resilience(resilience)
+
+    def attach_resilience(self, resilience) -> None:
+        """Attach (or, with ``None``, detach) a
+        :class:`repro.resilience.Resilience` bundle.  An *active* bundle
+        turns on per-invoke admission (token buckets + SLO-aware shed) and
+        tenant/elapsed bookkeeping for :meth:`fail_worker`'s structured
+        loss records; a disabled bundle (``Resilience()``) leaves every
+        hot path on its ``None`` fast branch."""
+        self.resilience = resilience
+        active = resilience is not None and resilience.active
+        self._res = resilience if active else None
+        if self.obs is not None and resilience is not None:
+            resilience.register_into(self.obs.registry)
 
     def attach_obs(self, obs) -> None:
         """Attach (or, with ``None``, detach) an :class:`repro.obs.Obs`
@@ -155,7 +181,10 @@ class Platform:
         reg.register_collector("session", lambda: dict(self.session.stats))
         reg.register_collector("platform", lambda: {
             "workers": len(self.state.workers()),
-            "tags": len(self.session.tag_index)})
+            "tags": len(self.session.tag_index),
+            "lost_activations": self.lost_activations})
+        if self.resilience is not None:
+            self.resilience.register_into(reg)
         if self.pool is not None:
             pool = self.pool
             reg.register_collector("pool", lambda: pool.metrics.snapshot())
@@ -221,12 +250,32 @@ class Platform:
         return self.state.zones()
 
     def fail_worker(self, name: str):
-        """Worker crash/drain: evicts its activations (returned for
-        rescheduling) and drains its idle containers."""
+        """Worker crash/drain.  Returns one structured
+        :class:`~repro.resilience.LostActivation` per in-flight activation
+        the worker took down (function, tag, tenant, seconds in flight —
+        tenant/elapsed are live with a resilience bundle attached, default
+        otherwise), destroys those activations' busy containers, drains
+        the worker's idle containers, and bumps the
+        ``platform.lost_activations`` counter."""
+        now = self.clock()
         lost = self.state.fail_worker(name)
+        out = []
+        track = self._res is not None
+        for act in lost:
+            if self.pool is not None:
+                cid = self._containers.pop(act.activation_id, None)
+                if cid is not None:
+                    self.pool.destroy(cid)
+            meta = self._res_meta.pop(act.activation_id, None) \
+                if track else None
+            out.append(LostActivation(
+                act.activation_id, act.function, act.tag, name,
+                meta[0] if meta is not None else DEFAULT_TENANT,
+                now - meta[1] if meta is not None else 0.0))
         if self.pool is not None:
             self.pool.evict_worker(name)
-        return lost
+        self.lost_activations += len(out)
+        return out
 
     def workers(self) -> Tuple[str, ...]:
         return self.state.workers()
@@ -259,10 +308,25 @@ class Platform:
         return Decision(function, self.registry[function].tag, worker)
 
     def invoke(self, function: str, rng: Optional[random.Random] = None, *,
-               warmth="auto", zone: Optional[str] = None) -> Decision:
+               warmth="auto", zone: Optional[str] = None,
+               tenant: Optional[str] = None) -> Decision:
         """Decide *and apply*: allocate in the state tables (the session's
         tensors follow via the change feed) and, with a pool attached,
-        acquire a container and charge its cold/warm/hot start."""
+        acquire a container and charge its cold/warm/hot start.
+
+        ``tenant`` stamps the request's owner for the resilience layer;
+        with an active bundle attached the request first passes the
+        tenant's token-bucket admission (a shed request returns an
+        unplaced :class:`Decision`, counted in the bundle's shed
+        counters)."""
+        res = self._res
+        if res is not None:
+            _tn = tenant if tenant is not None else DEFAULT_TENANT
+            if res.admission is not None:
+                ok, _reason = res.admission.admit(
+                    _tn, function, self.clock(), queue_depth=0)
+                if not ok:
+                    return Decision(function, self.registry[function].tag)
         tr = self._tracer
         if tr is not None:
             _t = self.clock()  # one read: nothing advances time inside
@@ -282,6 +346,8 @@ class Platform:
                 tr.decision(_t, function, None, zone)
             return Decision(function, self.registry[function].tag)
         act = self.state.allocate(function, worker, self.registry)
+        if res is not None:
+            self._res_meta[act.activation_id] = (_tn, self.clock())
         if self.pool is not None:
             c, kind, cost = self.pool.acquire(
                 function, worker, self.clock(),
@@ -314,6 +380,8 @@ class Platform:
             cid = self._containers.pop(aid, None)
             if cid is not None:
                 self.pool.release(cid, self.clock())
+        if self._res is not None:
+            self._res_meta.pop(aid, None)
         act = self.state.complete(aid)
         if self._tracer is not None and act is not None:
             self._tracer.complete(aid, self.clock())

@@ -7,6 +7,7 @@ from .traces import (
     chained_trace,
     diurnal_trace,
     multiregion_trace,
+    overload_trace,
     poisson_trace,
 )
 from .driver import InvocationRecord, TraceWorkload, affine_terms_of
@@ -32,7 +33,8 @@ from .scenarios import (
 
 __all__ = [
     "Arrival", "poisson_trace", "bursty_trace", "diurnal_trace",
-    "chained_trace", "multiregion_trace", "InvocationRecord",
+    "chained_trace", "multiregion_trace", "overload_trace",
+    "InvocationRecord",
     "TraceWorkload", "affine_terms_of",
     "SCENARIOS", "MULTIREGION", "MULTIREGION_ZONES", "FUNCTION_MIX",
     "COMPUTE_S", "build_trace", "register_functions",

@@ -165,6 +165,8 @@ def replay_identical(a: RunResult, b: RunResult) -> List[str]:
             errs.append(f"{aid}: start {x.start_kind} != {y.start_kind}")
         if x.failed != y.failed:
             errs.append(f"{aid}: failed {x.failed} != {y.failed}")
+        if x.tenant != y.tenant:
+            errs.append(f"{aid}: tenant {x.tenant} != {y.tenant}")
         if x.failed or y.failed:
             continue
         if x.latency != y.latency:

@@ -12,7 +12,10 @@ Each generator yields a time-sorted list of :class:`Arrival` events over
   thinning a dominating Poisson process;
 * **chained** — divide-et-impera DAG roots: each arrival is a parent function
   whose *children* are declared on the arrival (spawned by the driver when the
-  parent finishes computing, as OpenWhisk sequences/compositions do).
+  parent finishes computing, as OpenWhisk sequences/compositions do);
+* **overload** — multi-tenant Poisson streams (one per tenant) whose summed
+  rate is meant to exceed capacity — the admission-control/fair-queueing
+  regime of ``benchmarks/overload.py``.
 
 All randomness flows through an explicit ``random.Random`` so traces are
 reproducible across the simulator, the benchmarks and the tests.
@@ -37,6 +40,10 @@ class Arrival:
     # The workload driver forwards it to the scheduler as the sharded
     # router's ``local_first`` locality hint.
     zone: Optional[str] = None
+    # owning tenant (admission control / weighted-fair queueing); None maps
+    # to the default tenant, so pre-existing traces are unchanged objects
+    # and bit-identity of every existing run is preserved.
+    tenant: Optional[str] = None
 
 
 def _pick(rng: random.Random, functions: Sequence[Tuple[str, float]]) -> str:
@@ -154,6 +161,31 @@ def multiregion_trace(
                                    zone=zone))
             t += rng.expovariate(lam_max)
     out.sort(key=lambda a: (a.t, a.zone or ""))
+    return out
+
+
+def overload_trace(
+    tenant_rates: Sequence[Tuple[str, float]],
+    duration: float,
+    functions: Sequence[Tuple[str, float]],
+    rng: random.Random,
+) -> List[Arrival]:
+    """Multi-tenant open-loop overload: each tenant is an independent
+    constant-rate Poisson stream (``[(tenant, rate), ...]``) over the
+    shared function mix — drive the sum past cluster capacity and the
+    admission/fairness layer decides who gets shed.  Merged time-sorted
+    with a deterministic ``(t, tenant)`` tiebreak.  A fresh generator
+    (new rng stream), so no existing trace's draws are disturbed."""
+    out: List[Arrival] = []
+    for tenant, rate in tenant_rates:
+        if rate <= 0:
+            continue
+        t = rng.expovariate(rate)
+        while t < duration:
+            out.append(Arrival(t=t, function=_pick(rng, functions),
+                               tenant=tenant))
+            t += rng.expovariate(rate)
+    out.sort(key=lambda a: (a.t, a.tenant or ""))
     return out
 
 

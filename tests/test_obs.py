@@ -132,6 +132,11 @@ def test_registry_prometheus_render_golden(tmp_path):
     for x in (0.0005, 0.005, 0.005, 0.05, 2.0):
         h.observe(x)
     reg.register_collector("pool", lambda: {"cold": 3, "rate": 0.5})
+    # nested collector (the resilience bundle's snapshot shape): nested
+    # dicts dot-join, dots become underscores in the exposition
+    reg.register_collector("resilience", lambda: {
+        "shed": 2, "queue_depth": 1,
+        "tenants": {"gold": {"admitted": 4, "rate": 2}}})
     golden = Path(__file__).parent / "golden" / "metrics.prom"
     assert reg.render() == golden.read_text()
 

@@ -1,0 +1,571 @@
+"""Overload & failure resilience tests (`repro.resilience`).
+
+Covers the admission controller (token-bucket refill/burst, SLO-aware
+shedding under backlog pressure, per-tenant counters), the SCFQ fair queue
+(weighted drain order, bounded backlogs, requeue-front), retry/backoff
+(hedge-once delay ladder, per-tenant retry budgets), the simulator's
+worker-failure semantics (conservation of work under kills on both
+engines, dead-worker guards, heal re-join), the workload driver's loss
+handling (chaos kill -> retry -> completion, honest ``"lost"`` records,
+shed records, bounded-queue backpressure), the platform facade's
+structured loss records + warm-pool purge, the sharded control plane's
+zone drop-out, the stats/Prometheus surfaces, and the invariant the whole
+layer hangs on: a disabled bundle is bit-identical in decisions, records
+and rng draws to no bundle at all.
+"""
+import math
+import random
+
+import pytest
+
+from repro.cluster.simulator import ClusterSim, SimParams
+from repro.cluster.topology import WorkerSpec
+from repro.core import (
+    ClusterState,
+    Registry,
+    SchedulerSession,
+    ShardedSession,
+    parse,
+)
+from repro.obs import Obs
+from repro.obs.slo import SloEngine
+from repro.platform import Platform
+from repro.pool import StartCosts, WarmPool, make_policy
+from repro.resilience import (
+    ADMIT,
+    DEFAULT_TENANT,
+    HEAL_WORKER,
+    KILL_WORKER,
+    AdmissionController,
+    ChaosHarness,
+    FairQueue,
+    Fault,
+    Resilience,
+    RetryLedger,
+    RetryPolicy,
+    SHED_RATE,
+    SHED_SLO,
+    TenantPolicy,
+    TokenBucket,
+)
+from repro.workload import Arrival, TraceWorkload, overload_trace, poisson_trace
+
+COMPUTE = {"api": 0.25, "etl": 2.0}
+
+DSCRIPT = """
+api:
+  workers: *
+  strategy: least_loaded
+etl:
+  workers: *
+  strategy: least_loaded
+"""
+
+PSCRIPT = """
+d:
+  workers: *
+  strategy: best_first
+"""
+
+
+def _sim(workers=None, engine="virtual"):
+    topo = workers if workers is not None else {
+        "wa": WorkerSpec("wa", "eu", 1, 1024.0),
+    }
+    sim = ClusterSim(topo, SimParams(), seed=0, engine=engine)
+    sim.registry.register("api", memory=128.0, tag="api")
+    sim.registry.register("etl", memory=256.0, tag="etl")
+    return sim
+
+
+def _driver(sim, resilience, seed=1):
+    plat = Platform.for_sim(sim, DSCRIPT, resilience=resilience)
+    return TraceWorkload(sim, plat.placer(random.Random(seed)), COMPUTE,
+                         script=plat.script, resilience=resilience)
+
+
+def _pool():
+    return WarmPool(make_policy("fixed_ttl", ttl=100.0),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=64.0, hot_window=100.0)
+
+
+# --------------------------------------------------------------------------- #
+# admission: token buckets, policies, SLO-aware shed
+# --------------------------------------------------------------------------- #
+
+
+def test_token_bucket_refill_and_burst_cap():
+    b = TokenBucket(rate=2.0, burst=4.0)
+    assert [b.allow(0.0) for _ in range(5)] == [True] * 4 + [False]
+    assert b.allow(0.5)  # 0.5 s * 2/s = one token back
+    assert not b.allow(0.5)
+    # refill never exceeds the burst depth
+    assert [b.allow(100.0) for _ in range(5)] == [True] * 4 + [False]
+
+
+def test_admission_rate_shed_and_per_tenant_counters():
+    adm = AdmissionController({"t": TenantPolicy(rate=1.0, burst=1.0)})
+    assert adm.admit("t", "api", 0.01) == (True, ADMIT)
+    assert adm.admit("t", "api", 0.02) == (False, SHED_RATE)
+    assert adm.admit("t", "api", 0.03) == (False, SHED_RATE)
+    # the default policy carries no rate: unknown tenants are never shed
+    assert adm.admit("other", "api", 0.03) == (True, ADMIT)
+    assert adm.counters["t"] == {"admitted": 1, SHED_RATE: 2, SHED_SLO: 0}
+    assert adm.shed == 2 and adm.admitted == 2
+    assert list(adm.snapshot()) == ["other", "t"]  # stable key order
+
+
+def test_admission_slo_shed_only_under_pressure():
+    eng = SloEngine({"api": 1.0})
+    for i in range(100):  # burn the whole error budget
+        eng.observe("api", 0.1 * i, 5.0)
+    assert eng.budget_remaining("api") < 0.0
+    adm = AdmissionController(slo=eng, budget_floor=0.0, pressure_depth=4)
+    assert adm.admit("t", "api", 20.0, queue_depth=4) == (False, SHED_SLO)
+    # below the pressure threshold the blown budget does not shed
+    assert adm.admit("t", "api", 20.0, queue_depth=3) == (True, ADMIT)
+    # functions without an objective never consult the budget
+    assert adm.admit("t", "other", 20.0, queue_depth=9) == (True, ADMIT)
+    assert adm.counters["t"] == {"admitted": 2, SHED_RATE: 0, SHED_SLO: 1}
+
+
+def test_tenant_policy_validation():
+    for bad in (dict(weight=0.0), dict(rate=0.0), dict(burst=0.0),
+                dict(queue_cap=0)):
+        with pytest.raises(ValueError):
+            TenantPolicy(**bad)
+
+
+def test_slo_budget_remaining_negative_for_unregistered_function():
+    eng = SloEngine({"api": 1.0})
+    assert eng.budget_remaining("api") == 1.0  # no traffic: full budget
+    with pytest.raises(KeyError, match="no SLO objective"):
+        eng.budget_remaining("nope")
+
+
+# --------------------------------------------------------------------------- #
+# fair queue: weighted drain, bounds, requeue
+# --------------------------------------------------------------------------- #
+
+
+def test_fair_queue_weighted_drain_order():
+    pols = {"gold": TenantPolicy(weight=2.0), "silver": TenantPolicy()}
+    q = FairQueue(lambda t: pols[t])
+    for i in range(4):
+        assert q.push("gold", f"g{i}", 1.0)
+    for i in range(4):
+        assert q.push("silver", f"s{i}", 1.0)
+    order = []
+    while True:
+        head = q.pop()
+        if head is None:
+            break
+        order.append(head[0])
+    # SCFQ finish tags: weight-2 gold drains twice per silver slot
+    assert order == ["gold", "gold", "silver", "gold", "gold",
+                     "silver", "silver", "silver"]
+    assert q.depth == 0 and q.max_depth == 8
+
+
+def test_fair_queue_bounded_backlog_and_fifo():
+    q = FairQueue(lambda t: TenantPolicy(queue_cap=2))
+    assert q.push("t", "a", 1.0)
+    assert q.push("t", "b", 1.0)
+    assert not q.push("t", "c", 1.0)  # cap reached: caller sheds
+    assert q.dropped == {"t": 1} and q.dropped_total == 1
+    assert q.depth == 2 and q.depth_of("t") == 2
+    assert q.pop()[3] == "a"  # FIFO within a tenant
+    assert q.pop()[3] == "b"
+
+
+def test_fair_queue_requeue_front_preserves_position():
+    q = FairQueue(lambda t: TenantPolicy())
+    q.push("t", "a", 1.0)
+    q.push("t", "b", 1.0)
+    tenant, tag, seq, item = q.pop()
+    assert item == "a"
+    q.requeue_front(tenant, tag, seq, item)
+    assert q.depth == 2
+    assert q.pop() == (tenant, tag, seq, "a")  # still the head, same tag
+    assert q.pop()[3] == "b"
+
+
+# --------------------------------------------------------------------------- #
+# retry: backoff ladder + budgets
+# --------------------------------------------------------------------------- #
+
+
+def test_retry_policy_delay_ladder():
+    p = RetryPolicy()  # hedge on
+    with pytest.raises(ValueError):
+        p.delay(1)  # attempt 1 is the original submission
+    assert p.delay(2) == 0.0  # hedge-once: immediate first retry
+    assert p.delay(3) == 0.25
+    assert p.delay(4) == 0.5
+    assert p.delay(10) == 4.0  # capped
+    flat = RetryPolicy(hedge=False)
+    assert flat.delay(2) == 0.25 and flat.delay(3) == 0.5
+    with pytest.raises(ValueError):
+        RetryPolicy(base_delay=5.0, max_delay=4.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(factor=0.5)
+
+
+def test_retry_ledger_budget():
+    led = RetryLedger()
+    pol = TenantPolicy()  # retry_budget 0.25, floor of one rescue
+    assert led.allowed("t", pol)  # first loss is always worth one retry
+    led.note_retry("t")
+    assert not led.allowed("t", pol)  # budget max(1, 0.25*0) exhausted
+    for _ in range(8):
+        led.note_admitted("t")
+    assert led.allowed("t", pol)  # budget now max(1, 0.25*8) = 2
+    assert led.total_retries == 1
+
+
+# --------------------------------------------------------------------------- #
+# simulator: kill/heal semantics + conservation of work
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("engine", ["virtual", "legacy"])
+def test_sim_kill_conserves_work_and_survivors_finish(engine):
+    topo = {"w0": WorkerSpec("w0", "eu", 1, 1024.0),
+            "w1": WorkerSpec("w1", "eu", 1, 1024.0)}
+    sim = ClusterSim(topo, SimParams(), seed=0, engine=engine)
+    done = []
+    sim.at(0.0, lambda: sim.compute("f", "w0", 1.0, "a1",
+                                    lambda: done.append("a1")))
+    sim.at(0.0, lambda: sim.compute("f", "w1", 2.0, "a2",
+                                    lambda: done.append("a2")))
+    sim.at(0.5, lambda: sim.fail_worker("w0"))
+    sim.run()
+    assert done == ["a2"]  # the dead worker's callback never fires
+    assert sim.dead_workers == ("w0",)
+    # conservation: delivered + lost == submitted, per worker
+    assert sim.delivered_work("w0") == pytest.approx(0.5)
+    assert sim.lost_work("w0") == pytest.approx(0.5)
+    assert sim.delivered_work("w0") + sim.lost_work("w0") == \
+        pytest.approx(sim.submitted_work("w0"))
+    assert sim.delivered_work("w1") == pytest.approx(sim.submitted_work("w1"))
+    with pytest.raises(RuntimeError, match="failed worker"):
+        sim.compute("f", "w0", 1.0, "a3", lambda: None)
+    with pytest.raises(KeyError):
+        sim.fail_worker("nope")
+    sim.heal_worker("w1")  # alive: no-op
+    sim.heal_worker("w0")  # healed workers accept work again
+    assert sim.dead_workers == ()
+    sim.at(sim.now, lambda: sim.compute("f", "w0", 1.0, "a4",
+                                        lambda: done.append("a4")))
+    sim.run()
+    assert done == ["a2", "a4"]
+
+
+# --------------------------------------------------------------------------- #
+# driver: chaos kill -> retry -> completion; honest loss; sheds
+# --------------------------------------------------------------------------- #
+
+
+def test_driver_chaos_kill_retries_lost_work_to_completion():
+    sim = _sim()
+    res = Resilience.enabled(retry=RetryPolicy())
+    wl = _driver(sim, res)
+    harness = ChaosHarness([Fault(1.0, KILL_WORKER, "wa"),
+                            Fault(2.0, HEAL_WORKER, "wa")])
+    harness.arm(wl)
+    wl.load([Arrival(t=0.1, function="etl")])
+    sim.run()
+    assert harness.log == [(1.0, KILL_WORKER, "wa"),
+                           (2.0, HEAL_WORKER, "wa")]
+    done = [r for r in wl.records if not r.failed]
+    assert len(done) == 1 and len(wl.records) == 1
+    r = done[0]
+    # hedge retry at the kill instant, queued until the heal re-adds
+    # capacity, then the full compute replays on the healed worker
+    assert r.attempts == 2 and r.worker == "wa"
+    assert r.t_submit == pytest.approx(2.0)
+    assert r.t_root == pytest.approx(0.1)
+    assert r.components["parent_wait"] == pytest.approx(1.9)
+    assert wl.permanent_lost == 0 and res.permanent_lost == 0
+    assert res.ledger.total_retries == 1
+    assert res.snapshot()["retries"] == 1
+    # the destroyed first attempt stays on the conservation ledger: the
+    # etl ran 0.85 s of its 2.0 before the kill, the remaining 1.15 is lost
+    assert sim.lost_work("wa") == pytest.approx(1.15)
+    assert sim.delivered_work("wa") + sim.lost_work("wa") == \
+        pytest.approx(sim.submitted_work("wa"))
+
+
+def test_driver_without_retry_writes_honest_lost_record():
+    sim = _sim()
+    res = Resilience.enabled(retry=None, queue=False)
+    wl = _driver(sim, res)
+    lost_box = []
+    sim.at(1.0, lambda: lost_box.extend(wl.fail_worker("wa")))
+    wl.load([Arrival(t=0.1, function="etl", tenant="gold")])
+    sim.run()
+    assert len(lost_box) == 1
+    la = lost_box[0]
+    assert (la.function, la.tag, la.worker) == ("etl", "etl", "wa")
+    assert la.tenant == "gold"
+    assert la.elapsed == pytest.approx(0.9)  # in flight since t=0.1
+    [r] = wl.records
+    assert r.start_kind == "lost" and r.failed
+    assert r.worker == "wa" and r.tenant == "gold" and r.attempts == 1
+    assert math.isnan(r.latency)
+    assert wl.permanent_lost == 1 and res.permanent_lost == 1
+    assert res.snapshot()["permanent_lost"] == 1
+
+
+def test_driver_without_bundle_still_honours_loss_contract():
+    sim = _sim()
+    wl = _driver(sim, None)
+    sim.at(1.0, lambda: wl.fail_worker("wa"))
+    wl.load([Arrival(t=0.1, function="etl")])
+    sim.run()
+    [r] = wl.records
+    assert r.start_kind == "lost" and wl.permanent_lost == 1
+
+
+def test_driver_admission_shed_records():
+    sim = _sim()
+    res = Resilience.enabled(
+        tenants={"t": TenantPolicy(rate=1.0, burst=1.0)}, retry=None)
+    wl = _driver(sim, res)
+    wl.load([Arrival(t=0.01 * (i + 1), function="api", tenant="t")
+             for i in range(3)])
+    sim.run()
+    sheds = [r for r in wl.records if r.start_kind == "shed"]
+    assert len(sheds) == 2  # one token in the bucket, ~no refill in 20 ms
+    for r in sheds:
+        assert r.worker == "<shed>" and r.failed and r.tenant == "t"
+        assert math.isnan(r.latency)
+    assert res.admission.counters["t"] == \
+        {"admitted": 1, SHED_RATE: 2, SHED_SLO: 0}
+    assert res.snapshot()["shed"] == 2
+    done = [r for r in wl.records if not r.failed]
+    assert len(done) == 1 and done[0].tenant == "t"
+
+
+def test_driver_bounded_queue_sheds_instead_of_growing():
+    # a cluster nothing fits on: admitted work parks in the fair queue and
+    # the tenant's bounded backlog sheds the overflow (no failure records,
+    # no unbounded heap)
+    sim = _sim({"wa": WorkerSpec("wa", "eu", 1, 64.0)})  # api needs 128 MB
+    res = Resilience.enabled(tenants={"t": TenantPolicy(queue_cap=1)},
+                             retry=None)
+    wl = _driver(sim, res)
+    wl.load([Arrival(t=0.01, function="api", tenant="t"),
+             Arrival(t=0.02, function="api", tenant="t")])
+    sim.run()
+    assert res.queue_shed == 1
+    assert res.queue.depth == 1 and res.queue.depth_of("t") == 1
+    assert res.queue.dropped == {"t": 1}
+    snap = res.snapshot()
+    assert snap["shed"] == 1 and snap["queue_shed"] == 1
+    assert snap["queue_depth"] == 1
+    assert [r.start_kind for r in wl.records] == ["shed"]
+    assert sim.failures == []  # backpressure, not unschedulable failures
+
+
+# --------------------------------------------------------------------------- #
+# platform facade: structured loss + pool purge
+# --------------------------------------------------------------------------- #
+
+
+def test_platform_fail_worker_structured_loss_and_pool_purge():
+    tnow = [0.0]
+    pool = _pool()
+    res = Resilience.enabled(retry=None, queue=False)
+    plat = Platform.from_yaml(PSCRIPT, cluster={"w0": 8.0}, pool=pool,
+                              resilience=res, clock=lambda: tnow[0])
+    plat.register("divide", memory=1.0, tag="d")
+    a = plat.invoke("divide", tenant="gold")
+    tnow[0] = 1.0
+    plat.complete(a)  # parks an idle container on w0
+    tnow[0] = 2.5
+    b = plat.invoke("divide", tenant="silver")  # in flight at kill time
+    c = plat.invoke("divide")
+    tnow[0] = 3.0
+    plat.complete(c)  # a second idle container on w0
+    tnow[0] = 4.0
+    lost = plat.fail_worker("w0")
+    [la] = lost  # only the in-flight activation is lost
+    assert la.activation_id == b.activation_id
+    assert (la.function, la.tag, la.worker) == ("divide", "d", "w0")
+    assert la.tenant == "silver"
+    assert la.elapsed == pytest.approx(1.5)  # invoked at 2.5, killed at 4.0
+    assert plat.lost_activations == 1
+    assert "w0" not in plat.workers()
+    # the busy container is destroyed, the idle ones drained
+    assert pool.busy_counts() == {}
+    assert pool.residency_counts() == {}
+    assert plat.stats()["lost_activations"] == 1
+
+
+def test_platform_fail_worker_defaults_without_bundle():
+    plat = Platform.from_yaml(PSCRIPT, cluster={"w0": 8.0})
+    plat.register("divide", memory=1.0, tag="d")
+    d = plat.invoke("divide")
+    [la] = plat.fail_worker("w0")
+    assert la.activation_id == d.activation_id
+    assert la.tenant == DEFAULT_TENANT and la.elapsed == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# sharded control plane: zone drop-out
+# --------------------------------------------------------------------------- #
+
+
+def test_sharded_session_zone_dropout():
+    script = parse("t:\n  workers: *\n  strategy: best_first\n")
+    state = ClusterState()
+    reg = Registry()
+    reg.register("fn", memory=1.0, tag="t")
+    for w, z in (("e0", "eu"), ("e1", "eu"), ("u0", "us")):
+        state.add_worker(w, max_memory=8.0, zone=z)
+    sharded = ShardedSession(state, reg, script)
+    assert state.zones() == ("eu", "us")
+    assert sharded.try_schedule("fn", rng=random.Random(0)) is not None
+    for w in ("e0", "e1"):
+        state.fail_worker(w)
+    # the zone vanishes from the alive set and the router stops offering it
+    assert state.zones() == ("us",)
+    got = sharded.try_schedule("fn", rng=random.Random(1))
+    assert got == "u0"
+    flat = SchedulerSession(state, reg, script)
+    assert flat.try_schedule("fn", rng=random.Random(1)) == got
+
+
+# --------------------------------------------------------------------------- #
+# chaos schedule plumbing
+# --------------------------------------------------------------------------- #
+
+
+def test_fault_validation_and_sorted_schedule():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(1.0, "explode", "w0")
+    h = ChaosHarness([Fault(2.0, HEAL_WORKER, "wa"),
+                      Fault(1.0, KILL_WORKER, "wa")])
+    assert [f.t for f in h.faults] == [1.0, 2.0]
+
+
+# --------------------------------------------------------------------------- #
+# stats / Prometheus surfaces
+# --------------------------------------------------------------------------- #
+
+
+def test_platform_stats_and_prometheus_expose_resilience():
+    obs = Obs.enabled(verdicts=False, timers=False)
+    res = Resilience.enabled(tenants={"gold": TenantPolicy(rate=5.0)})
+    plat = Platform.from_yaml(PSCRIPT, cluster={"w0": 8.0},
+                              obs=obs, resilience=res)
+    plat.register("divide", memory=1.0, tag="d")
+    plat.invoke("divide", tenant="gold")
+    r = plat.stats()["resilience"]
+    assert r["shed"] == 0 and r["retries"] == 0 and r["permanent_lost"] == 0
+    assert r["admitted"] == 1
+    assert r["tenants"]["gold"]["admitted"] == 1
+    text = obs.registry.render()
+    assert "resilience_shed 0" in text
+    assert "resilience_queue_depth 0" in text
+    assert "resilience_tenants_gold_admitted 1" in text
+
+
+def test_disabled_bundle_is_inert():
+    res = Resilience()
+    assert not res.active
+    snap = res.snapshot()
+    assert snap["shed"] == 0 and "tenants" not in snap
+    plat = Platform.from_yaml(PSCRIPT, cluster={"w0": 8.0}, resilience=res)
+    plat.register("divide", memory=1.0, tag="d")
+    assert plat.invoke("divide", tenant="gold").worker == "w0"
+    assert "resilience" not in plat.stats()  # no dead keys in stats
+
+
+# --------------------------------------------------------------------------- #
+# the zero-overhead contract: disabled == absent, bit for bit
+# --------------------------------------------------------------------------- #
+
+BSCRIPT = """
+d:
+  workers: *
+  strategy: random
+i:
+  workers: *
+  strategy: random
+  affinity: [d]
+"""
+
+
+def _facade_fingerprint(resilience):
+    plat = Platform.from_yaml(BSCRIPT,
+                              cluster={"w0": 8.0, "w1": 8.0, "w2": 8.0},
+                              pool=_pool(), resilience=resilience)
+    plat.register("divide", memory=1.0, tag="d")
+    plat.register("impera", memory=1.0, tag="i")
+    rng = random.Random(7)
+    mix = random.Random(11)
+    out = []
+    for _ in range(40):
+        f = mix.choice(["divide", "impera"])
+        d = plat.invoke(f, rng, tenant=mix.choice([None, "gold"]))
+        out.append((f, d.worker, d.start_kind))
+        if d.worker is not None:
+            plat.complete(d)
+    # the rng's post-run stream is part of the fingerprint: the disabled
+    # layer must consume exactly the same draws as no layer at all
+    return out, [rng.random() for _ in range(3)]
+
+
+def test_disabled_resilience_is_bit_identical_on_the_facade():
+    assert _facade_fingerprint(None) == _facade_fingerprint(Resilience())
+
+
+RSCRIPT = """
+api:
+  workers: *
+  strategy: random
+etl:
+  workers: *
+  strategy: random
+  affinity: [api]
+"""
+
+
+def _driver_fingerprint(resilience):
+    sim = _sim({"wa": WorkerSpec("wa", "eu", 1, 1024.0),
+                "wb": WorkerSpec("wb", "eu", 1, 1024.0)})
+    plat = Platform.for_sim(sim, RSCRIPT, resilience=resilience)
+    rng = random.Random(5)
+    wl = TraceWorkload(sim, plat.placer(rng), COMPUTE,
+                       script=plat.script, resilience=resilience)
+    trace = poisson_trace(3.0, 10.0, [("api", 2.0), ("etl", 1.0)],
+                          random.Random(9))
+    wl.load(trace)
+    sim.run()
+    # repr() keeps NaN-latency failure records comparable
+    return [repr(r) for r in wl.records], [rng.random() for _ in range(3)]
+
+
+def test_disabled_resilience_is_bit_identical_in_the_driver():
+    assert _driver_fingerprint(None) == _driver_fingerprint(Resilience())
+
+
+# --------------------------------------------------------------------------- #
+# overload trace generator
+# --------------------------------------------------------------------------- #
+
+
+def test_overload_trace_tenants_and_determinism():
+    rates = [("gold", 5.0), ("silver", 2.0), ("idle", 0.0)]
+    fns = [("api", 1.0)]
+    t1 = overload_trace(rates, 20.0, fns, random.Random(4))
+    t2 = overload_trace(rates, 20.0, fns, random.Random(4))
+    assert t1 == t2  # same rng stream, same trace
+    assert {a.tenant for a in t1} == {"gold", "silver"}  # zero-rate skipped
+    assert all(0.0 <= a.t < 20.0 for a in t1)
+    assert all(t1[i].t <= t1[i + 1].t for i in range(len(t1) - 1))
+    gold = sum(1 for a in t1 if a.tenant == "gold")
+    assert gold > len(t1) - gold  # the 5 rps stream dominates the 2 rps one
