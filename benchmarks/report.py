@@ -133,6 +133,25 @@ def attribution_report(*, duration: float = 60.0, rate: float = 2.0,
             print(f"  {fn:10s} {cells} {r['e2e']:11.4f} {r['n']:5d}")
 
 
+def cost_report() -> None:
+    """Print the static cost-calculus table for the cold-start benchmark's
+    script against the paper testbed: per-tag/per-chain worst-case cold and
+    warm bounds (lifecycle + measured service times) plus the reachability
+    diagnostics under the 512 MB keep-alive budget."""
+    from repro.analysis import analyze
+    from repro.core import parse
+    from repro.core.state import Registry
+    from repro.cluster.topology import paper_testbed
+    from repro.workload import COMPUTE_S, register_functions
+    from benchmarks.coldstart import BUDGET_MB, SCRIPT
+
+    reg = Registry()
+    register_functions(reg)
+    report = analyze(parse(SCRIPT), reg, workers=paper_testbed(),
+                     budget_mb=BUDGET_MB, service_times=COMPUTE_S)
+    print(report.format(), end="")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--timeline", metavar="OUT",
@@ -141,12 +160,19 @@ def main(argv=None) -> None:
     ap.add_argument("--attribution", action="store_true",
                     help="print the per-scenario latency attribution "
                          "breakdown instead of the report")
+    ap.add_argument("--cost", action="store_true",
+                    help="print the static per-chain cost table for the "
+                         "cold-start benchmark script (paper testbed, "
+                         "512 MB keep-alive budget) instead of the report")
     args = ap.parse_args(argv)
     if args.timeline:
         export_timeline(args.timeline)
         return
     if args.attribution:
         attribution_report()
+        return
+    if args.cost:
+        cost_report()
         return
     print("## §Dry-run (compile proof + per-device footprint)\n")
     print(dryrun_summary())

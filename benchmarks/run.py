@@ -24,8 +24,11 @@ rewrite) and *assert* their perf criteria, so CI's quick smoke fails loudly
 on a scheduling-data-plane or simulator-engine regression instead of
 letting it rot in ``artifacts/``.  ``--obs`` runs the observability-plane
 smoke (chained traced sim run, Chrome-trace schema validation, disabled-
-path tax assertion).  Without flags the orchestrator runs every
-benchmark's quick overview as before.
+path tax assertion).  ``--verify`` runs the static-analysis smoke
+(``benchmarks/verify_smoke.py``): compiles every shipped script through the
+v4 pipeline against the paper testbeds and asserts the expected
+diagnostics.  Without flags the orchestrator runs every benchmark's quick
+overview as before.
 """
 from __future__ import annotations
 
@@ -74,12 +77,22 @@ def main(argv=None) -> None:
                          "2-5x capacity, zone-outage chaos with retry "
                          "rescue, disabled-layer bit-identity + tax "
                          "(writes BENCH_overload.json)")
+    ap.add_argument("--verify", action="store_true",
+                    help="static-analysis smoke: compile every shipped "
+                         "script (examples/ + benchmark scripts) through "
+                         "the v4 pipeline and assert the expected "
+                         "diagnostics (chained colocation warning present, "
+                         "everything else clean)")
     ap.add_argument("--quick", action="store_true",
                     help="with --coldstart/--scale/--shard/--multiregion/"
                          "--simperf/--obs/--whatif/--overload: reduced "
                          "size, no BENCH json rewrite")
     args = ap.parse_args(argv)
 
+    if args.verify:
+        from benchmarks import verify_smoke as vs
+        vs.main([])
+        return
     if args.coldstart:
         from benchmarks import coldstart as cst
         sub = []

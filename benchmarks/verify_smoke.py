@@ -1,0 +1,111 @@
+"""Static-analysis smoke: compile every shipped script, assert diagnostics.
+
+``benchmarks/run.py --verify`` (wired into CI) runs the v4 compile pipeline
+— cost calculus + reachability — over every script the repo ships:
+
+* every ``examples/*.yaml`` file, against the paper testbed with the
+  measured service times (must compile with **zero** diagnostics);
+* the cold-start benchmark's script (the one all four trace scenarios —
+  poisson/bursty/diurnal/chained — schedule through), against the paper
+  testbed and its 512 MB keep-alive budget: the **only** finding must be
+  the chained scenario's ``budget-bound-colocation`` warning on tag ``i``
+  (divide 256 MB + 2 x impera 192 MB = 640 MB > 512 MB), and the
+  poisson/bursty/diurnal tags (api/img/etl) must be clean;
+* the multi-region benchmark's flat and ``local_first`` sharded scripts,
+  against the multi-zone testbed (clean);
+* back-compat: the cold-start script with **no** cluster shape must
+  produce zero diagnostics — the v4 bump adds nothing to a plain compile.
+
+Exits non-zero (and names the check) on any unexpected diagnostic, so CI
+fails loudly when a script and the testbed drift apart.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core import CompileError, compile_script
+from repro.core.state import Registry
+from repro.cluster.topology import multizone_testbed, paper_testbed
+from repro.workload import COMPUTE_S, register_functions
+
+from benchmarks.coldstart import BUDGET_MB, SCRIPT as COLDSTART_SCRIPT
+from benchmarks.multiregion import FLAT_SCRIPT, SHARDED_SCRIPT
+
+
+def _registry() -> Registry:
+    reg = Registry()
+    register_functions(reg)
+    return reg
+
+
+def _codes(compiled):
+    return [(d.severity, d.tag, d.code) for d in compiled.diagnostics]
+
+
+def run(verbose: bool = True):
+    """Run every check; returns a list of failure strings (empty = pass)."""
+    reg = _registry()
+    failures = []
+
+    def check(name: str, fn, expect):
+        try:
+            compiled = fn()
+        except CompileError as e:
+            failures.append(f"{name}: compile failed: {e}")
+            if verbose:
+                print(f"  FAIL {name}: {e}")
+            return
+        got = _codes(compiled)
+        status = "ok" if got == expect else "FAIL"
+        if got != expect:
+            failures.append(f"{name}: diagnostics {got!r} != {expect!r}")
+        if verbose:
+            suffix = "clean" if not got else "; ".join(
+                f"{s} [{t}] {c}" for s, t, c in got)
+            print(f"  {status:4s} {name}: {suffix}")
+
+    for path in sorted((ROOT / "examples").glob("*.yaml")):
+        check(f"examples/{path.name}",
+              lambda p=path: compile_script(
+                  p.read_text(), reg, workers=paper_testbed(),
+                  budget_mb=None, service_times=COMPUTE_S),
+              expect=[])
+
+    check("coldstart script (paper testbed, 512 MB budget)",
+          lambda: compile_script(
+              COLDSTART_SCRIPT, reg, workers=paper_testbed(),
+              budget_mb=BUDGET_MB, service_times=COMPUTE_S),
+          expect=[("warning", "i", "budget-bound-colocation")])
+
+    check("coldstart script (no cluster shape — back-compat)",
+          lambda: compile_script(COLDSTART_SCRIPT, reg),
+          expect=[])
+
+    zones = ("eu", "us", "ap")
+    for name, script in (("multiregion flat", FLAT_SCRIPT),
+                         ("multiregion local_first", SHARDED_SCRIPT)):
+        check(f"{name} script (multi-zone testbed)",
+              lambda s=script: compile_script(
+                  s, reg, zones=zones,
+                  workers=multizone_testbed(zones, replicas=2),
+                  budget_mb=BUDGET_MB, service_times=COMPUTE_S),
+              expect=[])
+    return failures
+
+
+def main(argv=None) -> None:
+    print("== static analysis smoke (compile + verify every shipped script) ==")
+    failures = run()
+    if failures:
+        print(f"verify smoke: {len(failures)} check(s) failed")
+        raise SystemExit(1)
+    print("verify smoke: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

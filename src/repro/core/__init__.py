@@ -11,6 +11,7 @@ from .ast import (
     AAppScript,
     Affinity,
     Block,
+    CostSpec,
     Invalidate,
     SchedulingFailure,
     TagPolicy,
@@ -56,6 +57,9 @@ from .compile import (
     ResolvedPolicy,
     ZonePlan,
     compile_script,
+    diagnostic_sort_key,
+    require_ir,
+    sort_diagnostics,
     zone_plan,
 )
 from .sharded import ShardedSession, ZoneView
@@ -74,6 +78,8 @@ __all__ = [
     "strategy_names",
     "CompiledScript", "CompileError", "Diagnostic", "IR_VERSION",
     "ResolvedPolicy", "compile_script",
+    # v4 analysis surface
+    "CostSpec", "require_ir", "sort_diagnostics", "diagnostic_sort_key",
     # v3 zone-sharded control plane
     "ZonePlan", "zone_plan", "ShardedSession", "ZoneView",
 ]

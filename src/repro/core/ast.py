@@ -6,9 +6,12 @@ default ``default``).  Each ``Block`` selects candidate ``workers`` (explicit id
 or the wildcard ``*``), a ``strategy`` (any name in the pluggable
 :mod:`repro.core.strategies` registry — the paper's ``best_first`` | ``any``
 (alias ``random``) plus ``least_loaded`` and ``warmest``), ``invalidate``
-options (``capacity_used n%`` | ``max_concurrent_invocations n``) and the novel
+options (``capacity_used n%`` | ``max_concurrent_invocations n``), the novel
 ``affinity`` clause: a list of tag ids (affine) and ``!``-negated tag ids
-(anti-affine).  Affinity is *directional* (footnote 2) — no symmetry is imposed.
+(anti-affine) — affinity is *directional* (footnote 2), no symmetry is imposed —
+and, since IR v4, an optional ``cost:`` clause (``budget <s>s`` |
+``rate <r> $/GB-s``) consumed by the compile-time cost calculus
+(:mod:`repro.analysis`).
 """
 from __future__ import annotations
 
@@ -73,6 +76,34 @@ class Invalidate:
                 "max_concurrent_invocations must be >= 1, got "
                 f"{self.max_concurrent_invocations}"
             )
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSpec:
+    """The optional ``cost:`` clause of a block (the v4 cost calculus).
+
+    ``budget_s`` is a worst-case end-to-end latency budget in seconds for the
+    tag's *chain* (the tag plus its transitive affinity anchors): the compile
+    pipeline's cost pass derives the chain's worst-case cold-path cost and
+    attaches an ``over-budget`` diagnostic when the derivation exceeds it.
+    ``rate_per_gb_s`` is a $/GB-s price the pass uses to derive per-invocation
+    dollar cost (reported, never diagnosed — a rate is not a bound).
+    """
+
+    budget_s: Optional[float] = None
+    rate_per_gb_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.budget_s is not None and not self.budget_s > 0:
+            raise AAppError(
+                f"cost: budget must be > 0 seconds, got {self.budget_s}")
+        if self.rate_per_gb_s is not None and self.rate_per_gb_s < 0:
+            raise AAppError(
+                f"cost: rate must be >= 0 $/GB-s, got {self.rate_per_gb_s}")
+
+    @property
+    def empty(self) -> bool:
+        return self.budget_s is None and self.rate_per_gb_s is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +184,9 @@ class Block:
     #: ``local_first`` | ``least_loaded_zone`` | ``warmest_zone``.  Inert on
     #: the flat (single-zone) control plane.
     topology: Optional[str] = None
+    #: optional ``cost:`` annotation (latency budget / $-rate) consumed by
+    #: the v4 compile-time cost calculus; inert at decision time
+    cost: Optional[CostSpec] = None
 
     def __post_init__(self):
         if not self.workers:

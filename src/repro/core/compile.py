@@ -61,8 +61,13 @@ from .state import Registry
 # pipeline with resolved chains + eager row banks; v3 adds the topology
 # terms (``zone:<z>`` / ``!zone:<z>`` + per-block ``topology:`` hints) and
 # the zone lowering pass (:func:`zone_plan`: per-shard row banks + the
-# zone-candidate mask consumed by the sharded router).
-IR_VERSION = 3
+# zone-candidate mask consumed by the sharded router); v4 adds the static
+# analysis section (:mod:`repro.analysis`): per-block ``cost:`` annotations
+# in the AST, the cost-calculus pass, the cluster-shape reachability pass
+# (``compile_script(workers=...)``), coded/sorted diagnostics, and the
+# ``analysis`` report on the product.  Consumers pinned to an older IR use
+# :func:`require_ir` for a clear rejection.
+IR_VERSION = 4
 
 SEVERITY_ERROR = "error"
 SEVERITY_WARNING = "warning"
@@ -81,10 +86,33 @@ class Diagnostic:
     severity: str  # SEVERITY_ERROR | SEVERITY_WARNING
     tag: Optional[str]
     message: str
+    #: machine-readable code (the analysis passes' vocabulary —
+    #: ``over-budget`` | ``budget-bound-colocation`` | ``unplaceable-chain``
+    #: | ``ir-version``); validate-stage diagnostics keep ""
+    code: str = ""
+    #: author block index the finding anchors to, when one exists
+    block: Optional[int] = None
 
     def __str__(self) -> str:
         where = f" [tag {self.tag!r}]" if self.tag else ""
-        return f"{self.severity}{where}: {self.message}"
+        what = f" {self.code}" if self.code else ""
+        return f"{self.severity}{where}{what}: {self.message}"
+
+
+_SEVERITY_RANK = {SEVERITY_ERROR: 0, SEVERITY_WARNING: 1}
+
+
+def diagnostic_sort_key(d: "Diagnostic") -> Tuple:
+    """(severity, tag, block index, code, message) — errors first, then
+    tag/block/code/message lexicographically.  Total and input-order-free,
+    so a diagnostics tuple (and any report rendered from it) is byte-stable
+    across runs."""
+    return (_SEVERITY_RANK.get(d.severity, 9), d.tag or "",
+            -1 if d.block is None else d.block, d.code, d.message)
+
+
+def sort_diagnostics(diags: Iterable["Diagnostic"]) -> Tuple["Diagnostic", ...]:
+    return tuple(sorted(diags, key=diagnostic_sort_key))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,9 +133,13 @@ class CompiledScript:
     script: AAppScript
     source: Optional[str]  # original text (None for programmatic ASTs)
     resolved: Dict[str, ResolvedPolicy]  # tag -> chain; always has DEFAULT_TAG
-    diagnostics: Tuple[Diagnostic, ...]  # warnings (errors raise)
+    diagnostics: Tuple[Diagnostic, ...]  # warnings, sorted (errors raise)
     tag_index: TagIndex
     policies: CompiledPolicies  # lowered row banks over tag_index
+    #: the v4 static-analysis section (:class:`repro.analysis.AnalysisReport`:
+    #: per-tag cost rows + the analysis diagnostics); None only on products
+    #: built by pre-v4 constructors
+    analysis: "object" = None
 
     @property
     def warnings(self) -> Tuple[Diagnostic, ...]:
@@ -240,7 +272,7 @@ def validate(
 
     errors = tuple(d for d in diags if d.severity == SEVERITY_ERROR)
     if errors:
-        raise CompileError(errors)
+        raise CompileError(sort_diagnostics(errors))
     return tuple(diags)
 
 
@@ -275,17 +307,43 @@ def compile_script(
     *,
     tag_index: Optional[TagIndex] = None,
     zones: Optional[Iterable[str]] = None,
+    workers=None,
+    budget_mb: Optional[float] = None,
+    service_times=None,
+    analysis=None,
 ) -> CompiledScript:
     """Run the full pipeline; returns the versioned :class:`CompiledScript`.
 
     Raises :class:`~repro.core.ast.AAppError` (parse) or
-    :class:`CompileError` (validate) on static errors; warnings land in
-    ``.diagnostics`` without failing the compile.  ``zones`` (the platform's
-    configured zone set, optional) enables the unknown-zone diagnostics.
+    :class:`CompileError` (validate/analysis) on static errors; warnings
+    land in ``.diagnostics`` — sorted by (severity, tag, block) — without
+    failing the compile.  ``zones`` (the platform's configured zone set,
+    optional) enables the unknown-zone diagnostics.
+
+    The v4 analysis section (:mod:`repro.analysis`) always runs the cost
+    calculus (``cost:`` budgets against derived worst-case chain cost; a
+    script with no annotations gains zero diagnostics) and, when
+    ``workers`` supplies a concrete cluster shape, the static reachability
+    pass: proven-unplaceable chains are ``unplaceable-chain`` *errors*
+    (this compile raises), budget-bound warm co-residency —
+    ``min(worker memory, budget_mb)`` cannot hold a tag's affinity group at
+    the configured fan-out — is a ``budget-bound-colocation`` *warning*.
+    ``service_times`` feeds the cost oracle (a mapping or a
+    :class:`repro.analysis.ServiceOracle`); ``analysis`` overrides the
+    :class:`repro.analysis.AnalysisConfig` knobs.
     """
     script, text = parse_stage(source)
     resolved = resolve(script)
     diagnostics = validate(script, resolved, reg, zones)
+    # lazy import: repro.analysis imports this module for Diagnostic et al.
+    from repro.analysis import analyze
+    report = analyze(script, reg, resolved=resolved, workers=workers,
+                     budget_mb=budget_mb, service_times=service_times,
+                     config=analysis)
+    errors = report.errors
+    if errors:
+        raise CompileError(sort_diagnostics(errors))
+    diagnostics = sort_diagnostics(diagnostics + report.diagnostics)
     tag_index, policies = lower(script, reg, tag_index)
     return CompiledScript(
         ir_version=IR_VERSION,
@@ -295,7 +353,26 @@ def compile_script(
         diagnostics=diagnostics,
         tag_index=tag_index,
         policies=policies,
+        analysis=report,
     )
+
+
+def require_ir(compiled: CompiledScript, version: int = IR_VERSION
+               ) -> CompiledScript:
+    """Back-compat guard for consumers that persist or exchange compiled
+    scripts pinned to a specific IR version: pass the product through, or
+    raise a :class:`CompileError` naming both versions (code
+    ``ir-version``) instead of letting a stale consumer misread the IR."""
+    got = getattr(compiled, "ir_version", None)
+    if got != version:
+        raise CompileError((Diagnostic(
+            SEVERITY_ERROR, None,
+            f"compiled-script IR version mismatch: consumer requires "
+            f"v{version}, product carries v{got} (v4 added the cost/"
+            "reachability analysis section — recompile the source with "
+            "repro.core.compile_script)",
+            code="ir-version"),))
+    return compiled
 
 
 # --------------------------------------------------------------------------- #

@@ -27,6 +27,7 @@ from .ast import (
     AAppScript,
     Affinity,
     Block,
+    CostSpec,
     Invalidate,
     TagPolicy,
     WILDCARD,
@@ -143,7 +144,52 @@ def _parse_affinity(value: Any) -> Affinity:
     return Affinity.from_terms(_as_str_list(value, clause="affinity"))
 
 
-_BLOCK_KEYS = {"workers", "strategy", "invalidate", "affinity", "topology"}
+_NUM = r"\d+(?:\.\d+)?(?:[eE][+-]?\d+)?"
+_BUDGET_RE = re.compile(rf"^budget\s+(?P<n>{_NUM})\s*s?$")
+_RATE_RE = re.compile(rf"^rate\s+(?P<n>{_NUM})\s*(?:\$/GB-s)?$")
+
+
+def _parse_cost(value: Any) -> CostSpec:
+    budget: Optional[float] = None
+    rate: Optional[float] = None
+
+    def eat(item: Any) -> None:
+        nonlocal budget, rate
+        if isinstance(item, dict):
+            for k, v in item.items():
+                eat(f"{k} {v}")
+            return
+        if isinstance(item, (int, float)):
+            raise AAppError(
+                f"cost: bare number {item!r}; write 'budget {item}s' or "
+                f"'rate {item} $/GB-s'")
+        if not isinstance(item, str):
+            raise AAppError(f"cost: unexpected item {item!r}")
+        s = item.strip()
+        m = _BUDGET_RE.match(s)
+        if m:
+            if budget is not None:
+                raise AAppError("cost: duplicate budget")
+            budget = float(m.group("n"))
+            return
+        m = _RATE_RE.match(s)
+        if m:
+            if rate is not None:
+                raise AAppError("cost: duplicate rate")
+            rate = float(m.group("n"))
+            return
+        raise AAppError(f"cost: cannot parse option {s!r}")
+
+    if isinstance(value, (list, tuple)):
+        for item in value:
+            eat(item)
+    else:
+        eat(value)
+    return CostSpec(budget_s=budget, rate_per_gb_s=rate)
+
+
+_BLOCK_KEYS = {"workers", "strategy", "invalidate", "affinity", "topology",
+               "cost"}
 
 
 def _parse_block(obj: Any, *, tag: str) -> Block:
@@ -173,9 +219,12 @@ def _parse_block(obj: Any, *, tag: str) -> Block:
         _parse_invalidate(obj["invalidate"]) if "invalidate" in obj else Invalidate()
     )
     affinity = _parse_affinity(obj["affinity"]) if "affinity" in obj else Affinity()
+    cost = _parse_cost(obj["cost"]) if "cost" in obj else None
+    if cost is not None and cost.empty:
+        raise AAppError(f"tag {tag!r}: empty cost clause")
     return Block(
         workers=workers, strategy=strategy, invalidate=invalidate,
-        affinity=affinity, topology=topology,
+        affinity=affinity, topology=topology, cost=cost,
     )
 
 
@@ -313,6 +362,14 @@ def to_text(script: AAppScript, *, stylised: bool = False) -> str:
                         f"{cont}  - max_concurrent_invocations "
                         f"{inv.max_concurrent_invocations}"
                     )
+            if b.cost is not None and not b.cost.empty:
+                # repr() round-trips floats exactly: parse(to_text(s)) == s
+                lines.append(f"{cont}cost:")
+                if b.cost.budget_s is not None:
+                    lines.append(f"{cont}  - budget {b.cost.budget_s!r}s")
+                if b.cost.rate_per_gb_s is not None:
+                    lines.append(
+                        f"{cont}  - rate {b.cost.rate_per_gb_s!r} $/GB-s")
             if not b.affinity.empty:
                 lines.append(f"{cont}affinity:")
                 for t in b.affinity.affine:

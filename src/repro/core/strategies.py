@@ -31,6 +31,16 @@ tensor column indices (batched/session paths):
 * ``warmest`` — the candidate with the highest warmth rank (0 cold / 1 warm
   / 2 hot); ties broken by lowest load, then candidate order.  Deterministic;
   consumes the warmth signal directly instead of the narrowing pre-pass.
+* ``min_cost`` (alias ``min-cost``) — the candidate minimizing the derived
+  incremental cost of placing one more invocation there: the lifecycle
+  boot charge its warmth tier implies (``LIFECYCLE_S``, mirroring the warm
+  pool's cold/warm/hot ``StartCosts``) plus a congestion term linear in
+  resident load (``CONGESTION_S`` per instance).  Unlike ``warmest`` the
+  trade is *scalar*, not lexicographic: a hot-but-congested worker loses to
+  a warm idle one once the queue charge exceeds the boot saving.  First-on-
+  tie; deterministic.  A caller may override the derivation through
+  ``SelectionContext.cost`` (the v4 cost-calculus hook) — all built-in
+  paths leave it unset, so scalar/wave/session stay bit-identical.
 
 ``narrow_warmth`` preserves the seed behaviour bit for bit: the legacy
 strategies keep the highest-tier pre-narrowing, the new ones opt out and
@@ -39,7 +49,7 @@ read the raw signals themselves.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Sequence, Tuple, TypeVar
+from typing import Callable, Dict, Optional, Sequence, Tuple, TypeVar
 
 C = TypeVar("C")  # candidate: a worker name (scalar) or a column index (batched)
 
@@ -52,10 +62,15 @@ class SelectionContext:
     (the scalar reference's ``len(view.fs)`` / the tensors' ``n_funcs``).
     ``warmth`` — container-pool warmth rank of the candidate for the function
     being scheduled (0 when no warmth source is attached).
+    ``cost``   — optional per-candidate incremental-cost oracle (seconds);
+    when unset, ``min_cost`` derives it from the two signals above.  None of
+    the built-in dispatch paths set it — it exists so a cost-calculus caller
+    can plug a compile-derived model without a new strategy class.
     """
 
     load: Callable[[object], int]
     warmth: Callable[[object], int]
+    cost: Optional[Callable[[object], float]] = None
 
     @staticmethod
     def null() -> "SelectionContext":
@@ -131,6 +146,41 @@ class Warmest(Strategy):
         return best
 
 
+#: lifecycle boot charge by warmth rank (cold, warm, hot), seconds — mirrors
+#: the warm pool's default :class:`repro.pool.StartCosts` and the analysis
+#: package's :class:`repro.analysis.LifecycleCosts`
+LIFECYCLE_S: Tuple[float, float, float] = (0.5, 0.1, 0.0)
+#: congestion charge per resident function instance, seconds — what makes
+#: min_cost a scalar trade instead of warmest's lexicographic one
+CONGESTION_S: float = 0.05
+
+
+def incremental_cost(warmth_rank: int, load: int) -> float:
+    """The derived incremental cost ``min_cost`` minimizes: boot charge of
+    the candidate's warmth tier + linear congestion.  Exposed so the
+    analysis package and the strategy stay one formula."""
+    rank = 2 if warmth_rank > 2 else (0 if warmth_rank < 0 else warmth_rank)
+    return LIFECYCLE_S[rank] + CONGESTION_S * load
+
+
+class MinCost(Strategy):
+    name = "min_cost"
+    narrow_warmth = False
+
+    def select(self, candidates, ctx, rng):
+        cost = ctx.cost
+        if cost is None:
+            load, warmth = ctx.load, ctx.warmth
+            cost = lambda c: incremental_cost(warmth(c), load(c))
+        best = candidates[0]
+        best_cost = cost(best)
+        for c in candidates[1:]:
+            x = cost(c)
+            if x < best_cost:  # strict: first-on-tie
+                best, best_cost = c, x
+        return best
+
+
 # --------------------------------------------------------------------------- #
 # registry
 # --------------------------------------------------------------------------- #
@@ -174,6 +224,7 @@ register_strategy(BestFirst(), "best-first", "platform")  # APP legacy alias
 register_strategy(Any(), "random")  # the paper's Fig. 5 spelling
 register_strategy(LeastLoaded(), "least-loaded")
 register_strategy(Warmest())
+register_strategy(MinCost(), "min-cost")  # the v4 cost-calculus strategy
 
 
 # --------------------------------------------------------------------------- #

@@ -41,7 +41,7 @@ from __future__ import annotations
 import random
 from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple, Union
 
-from repro.core.ast import AAppScript
+from repro.core.ast import AAppError, AAppScript
 from repro.core.compile import CompiledScript, compile_script
 from repro.core.batched import SchedulerSession
 from repro.core.decision import Decision
@@ -455,14 +455,45 @@ class Platform:
     # script lifecycle / time
     # ------------------------------------------------------------------ #
 
+    def verify(self, *, budget_mb: Optional[float] = None,
+               service_times=None, config=None):
+        """Run the v4 static passes against the *live* cluster shape.
+
+        Returns an :class:`repro.analysis.AnalysisReport` — never raises on
+        findings (errors ride on ``report.errors``), so operators can probe
+        a running platform: per-tag worst-case cost rows, ``over-budget``
+        checks, and the reachability verdicts (``unplaceable-chain``,
+        ``budget-bound-colocation``) against the workers currently in the
+        cluster.  ``budget_mb`` defaults to the attached warm pool's
+        tightest per-worker keep-alive budget."""
+        from repro.analysis import analyze
+
+        if self.compiled is None:
+            raise AAppError("verify() needs a loaded script")
+        conf = self.state.conf()
+        if budget_mb is None and self.pool is not None:
+            budgets = [b for b in (self.pool.budget_of(w) for w in conf)
+                       if b is not None]
+            if budgets:
+                budget_mb = min(budgets)
+        return analyze(self.compiled.script, self.registry,
+                       resolved=self.compiled.resolved,
+                       workers=dict(conf) if conf else None,
+                       budget_mb=budget_mb, service_times=service_times,
+                       config=config)
+
     def reload_script(self, source: Union[str, AAppScript]) -> CompiledScript:
         """Recompile and hot-swap the platform script.  Lowers into the live
         session's tag universe, so existing state tensors and unrelated row
-        banks survive; decisions after the swap use the new script."""
+        banks survive; decisions after the swap use the new script (and the
+        v4 static passes re-run against the live cluster shape, so a script
+        whose chains cannot be placed is rejected before the swap)."""
         zone_set = [z for z in self.state.zones() if z]
+        conf = self.state.conf()
         compiled = compile_script(source, self.registry,
                                   tag_index=self.session.tag_index,
-                                  zones=zone_set if zone_set else None)
+                                  zones=zone_set if zone_set else None,
+                                  workers=dict(conf) if conf else None)
         self.compiled = compiled
         self.session.set_default_script(compiled)
         if self._tracer is not None:

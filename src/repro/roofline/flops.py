@@ -156,6 +156,17 @@ def _fusion_read_bytes(lines: List[str]) -> float:
     return reads
 
 
+def roofline_seconds(flops: float, bytes_: float, *,
+                     peak_flops_s: float, peak_bytes_s: float) -> float:
+    """Roofline execution-time bound for one step: the slower of the compute
+    and memory terms.  This is the service-time oracle entry the v4 cost
+    calculus uses for model functions
+    (:class:`repro.analysis.RooflineOracle`)."""
+    if peak_flops_s <= 0 or peak_bytes_s <= 0:
+        raise ValueError("roofline peaks must be positive")
+    return max(flops / peak_flops_s, bytes_ / peak_bytes_s)
+
+
 def analyze(hlo_text: str) -> Dict[str, float]:
     """Loop-aware {'flops', 'bytes'} per device per step."""
     blocks, _entry = _parse_blocks(hlo_text)

@@ -1,0 +1,206 @@
+"""The v4 static-analysis subsystem: cost calculus + reachability.
+
+Pins the acceptance criterion end-to-end: compiling the cold-start
+benchmark's script against the paper testbed and its 512 MB keep-alive
+budget must emit the chained scenario's ``budget-bound-colocation``
+warning *at compile time*, naming the binding constraint.  Plus: the cost
+calculus' arithmetic, chain closure, worker-shape normalisation,
+deterministic report bytes (golden file, via ``Platform.verify()``), and
+the service-time oracles.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.core import CompileError, Registry, compile_script, parse
+from repro.analysis import (
+    AnalysisConfig,
+    LifecycleCosts,
+    RooflineOracle,
+    TableOracle,
+    WorkerShape,
+    affinity_chain,
+    analyze,
+    as_worker_shapes,
+)
+from repro.cluster.topology import paper_testbed
+from repro.workload import COMPUTE_S, register_functions
+
+from benchmarks.coldstart import BUDGET_MB, SCRIPT as COLDSTART_SCRIPT
+
+GOLDEN = Path(__file__).parent / "golden" / "verify_coldstart.txt"
+
+
+def _reg():
+    reg = Registry()
+    register_functions(reg)
+    return reg
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance criterion: the chained scenario's 512 MB floor, statically
+# --------------------------------------------------------------------------- #
+
+
+def test_chained_scenario_colocation_flagged_at_compile_time():
+    cs = compile_script(COLDSTART_SCRIPT, _reg(), workers=paper_testbed(),
+                        budget_mb=BUDGET_MB, service_times=COMPUTE_S)
+    assert cs.ir_version == 4
+    assert len(cs.diagnostics) == 1
+    d = cs.diagnostics[0]
+    assert (d.severity, d.tag, d.code) == (
+        "warning", "i", "budget-bound-colocation")
+    # divide(256) + 2 x impera(192) = 640 > 512: the keep-alive budget is
+    # the binding constraint (workers go up to 2048 MB), and the warning
+    # must say so with the numbers
+    assert "640 MB" in d.message
+    assert "keep-alive budget = 512 MB" in d.message
+    assert "capped at 1x" in d.message
+
+
+def test_worker_memory_binds_when_budget_is_loose():
+    # budget above the biggest worker: the constraint flips to worker memory
+    report = analyze(parse(COLDSTART_SCRIPT), _reg(),
+                     workers={"w0": 500.0}, budget_mb=4096.0)
+    [d] = report.diagnostics
+    assert d.code == "budget-bound-colocation"
+    assert "worker memory = 500 MB" in d.message
+    # and with room for the full fan-out there is nothing to say
+    assert analyze(parse(COLDSTART_SCRIPT), _reg(),
+                   workers={"w0": 2048.0}, budget_mb=2048.0).ok
+
+
+# --------------------------------------------------------------------------- #
+# cost calculus arithmetic
+# --------------------------------------------------------------------------- #
+
+COSTED = """
+d:
+  workers: *
+  cost:
+    - budget 0.6s
+i:
+  - workers: *
+    affinity: [d]
+    cost:
+      - budget 2.0s
+      - rate 0.5 $/GB-s
+  - followup: fail
+"""
+
+
+def test_cost_pass_derives_chain_worst_case_and_flags_over_budget():
+    reg = Registry()
+    reg.register("divide", memory=256.0, tag="d")
+    reg.register("impera", memory=512.0, tag="i")
+    report = analyze(parse(COSTED), reg,
+                     service_times={"divide": 0.3, "impera": 1.5})
+    rows = {t.tag: t for t in report.tags}
+    # d: cold 0.5 + 0.3, warm 0.1 + 0.3; chain is itself
+    assert rows["d"].cold_s == pytest.approx(0.8)
+    assert rows["d"].warm_s == pytest.approx(0.4)
+    assert rows["d"].chain == ("d",)
+    # i: chain i->d, cold (0.5+1.5)+(0.5+0.3)=2.8, warm (0.1+1.5)+(0.1+0.3)=2.0
+    assert rows["i"].chain == ("i", "d")
+    assert rows["i"].chain_cold_s == pytest.approx(2.8)
+    assert rows["i"].chain_warm_s == pytest.approx(2.0)
+    # usd = GB x cold_s x rate = 0.5 x 2.0 x 0.5
+    assert rows["i"].usd_per_invoke == pytest.approx(0.5)
+
+    # d over budget (0.8 > 0.6) and i over budget (2.8 > 2.0), sorted by tag
+    assert [(d.tag, d.code) for d in report.diagnostics] == [
+        ("d", "over-budget"), ("i", "over-budget")]
+    assert "exceeds budget 2s by 0.800s" in report.diagnostics[1].message
+
+
+def test_affinity_chain_is_transitive_and_deterministic():
+    s = parse("a:\n  workers: *\n  affinity: [b]\n"
+              "b:\n  workers: *\n  affinity: [c, a]\n"
+              "c:\n  workers: *\n")
+    assert affinity_chain("a", s) == ("a", "b", "c")
+    assert affinity_chain("c", s) == ("c",)
+
+
+def test_lifecycle_defaults_mirror_the_warm_pool():
+    from repro.pool import StartCosts
+
+    life, costs = LifecycleCosts(), StartCosts()
+    assert (life.cold, life.warm, life.hot) == (
+        costs.cold, costs.warm, costs.hot)
+
+
+# --------------------------------------------------------------------------- #
+# oracles + worker shapes
+# --------------------------------------------------------------------------- #
+
+
+def test_roofline_oracle_takes_the_binding_term():
+    o = RooflineOracle(peak_flops_s=100.0, peak_bytes_s=10.0,
+                       table={"tiny": 0.25})
+    o.add_counts("fn", flops=1000.0, bytes_=10.0)  # compute-bound: 10s
+    assert o.service_s("fn") == pytest.approx(10.0)
+    o.add_counts("io", flops=10.0, bytes_=1000.0)  # memory-bound: 100s
+    assert o.service_s("io") == pytest.approx(100.0)
+    assert o.service_s("tiny") == 0.25  # table fallback
+    assert o.service_s("ghost") is None
+    assert TableOracle({"x": 1.0}).service_s("x") == 1.0
+
+
+def test_as_worker_shapes_normalises_and_sorts():
+    shapes = as_worker_shapes({"b": 512, "a": paper_testbed()["workereu1"]})
+    assert shapes == (WorkerShape("a", "eu", 1024.0),
+                      WorkerShape("b", "", 512.0))
+    assert as_worker_shapes(shapes) == shapes  # already-shaped passthrough
+    with pytest.raises(TypeError):
+        as_worker_shapes({"w": object()})
+
+
+# --------------------------------------------------------------------------- #
+# determinism + the golden verify report (Platform.verify path)
+# --------------------------------------------------------------------------- #
+
+
+def _platform():
+    from repro.platform import Platform
+    from repro.pool import StartCosts, WarmPool, make_policy
+
+    testbed = paper_testbed()
+    pool = WarmPool(make_policy("fixed_ttl", ttl=4.0),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=BUDGET_MB)
+    plat = Platform.from_yaml(
+        COLDSTART_SCRIPT,
+        cluster={w.name: float(w.memory_mb) for w in testbed.values()},
+        zones={w.name: w.zone for w in testbed.values()},
+        pool=pool)
+    register_functions(plat.registry)
+    return plat
+
+
+def test_platform_verify_matches_the_golden_report():
+    report = _platform().verify(service_times=COMPUTE_S)
+    assert report.format() == GOLDEN.read_text()
+
+
+def test_report_is_deterministic_across_worker_orderings():
+    reg = _reg()
+    fwd = dict(sorted(paper_testbed().items()))
+    rev = dict(sorted(paper_testbed().items(), reverse=True))
+    a = analyze(parse(COLDSTART_SCRIPT), reg, workers=fwd,
+                budget_mb=BUDGET_MB, service_times=COMPUTE_S)
+    b = analyze(parse(COLDSTART_SCRIPT), reg, workers=rev,
+                budget_mb=BUDGET_MB, service_times=COMPUTE_S)
+    assert a.format() == b.format()
+    assert a.diagnostics == b.diagnostics
+
+
+def test_search_budget_exhaustion_stays_silent():
+    # an absurdly small state budget: the search proves nothing, so the
+    # pass must emit nothing (no unproven diagnostics, no false errors)
+    report = analyze(parse(COLDSTART_SCRIPT), _reg(),
+                     workers=paper_testbed(), budget_mb=BUDGET_MB,
+                     config=AnalysisConfig(max_states=1))
+    assert not any(d.code == "unplaceable-chain" for d in report.diagnostics)

@@ -47,7 +47,7 @@ def random_script(rng: random.Random) -> AAppScript:
                 # the full registered strategy set: the equivalence sweeps
                 # cover the new least_loaded / warmest rules too
                 strategy=rng.choice(["best_first", "any",
-                                     "least_loaded", "warmest"]),
+                                     "least_loaded", "warmest", "min_cost"]),
                 invalidate=Invalidate(
                     capacity_used=rng.choice([None, 40.0, 80.0]),
                     max_concurrent_invocations=rng.choice([None, 1, 4]),

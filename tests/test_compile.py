@@ -150,13 +150,13 @@ def test_compile_rejects_non_script_input():
 # --------------------------------------------------------------------------- #
 
 
-def test_ir_version_is_3():
+def test_ir_version_is_4():
     from repro.core.compile import IR_VERSION
 
-    assert IR_VERSION == 3
+    assert IR_VERSION == 4
     reg = Registry()
     reg.register("f", memory=1.0, tag="t")
-    assert compile_script("t:\n  workers: *\n", reg).ir_version == 3
+    assert compile_script("t:\n  workers: *\n", reg).ir_version == 4
 
 
 def test_validate_warns_on_unknown_zone_term():
@@ -189,3 +189,65 @@ def test_validate_rejects_zone_unsatisfiable_blocks():
     with pytest.raises(CompileError) as ei:
         compile_script(two, reg)
     assert "exactly one zone" in str(ei.value)
+
+
+# --------------------------------------------------------------------------- #
+# v4 analysis section: back-compat, require_ir, deterministic ordering
+# --------------------------------------------------------------------------- #
+
+
+def test_v4_products_carry_an_analysis_section():
+    cs = compile_script(SCRIPT, _reg())
+    assert cs.analysis is not None
+    rows = {t.tag: t for t in cs.analysis.tags}
+    assert rows["i"].chain == ("i", "d")  # transitive affinity anchors
+    assert cs.analysis.workers_analysed == 0  # no cluster shape given
+
+
+def test_old_scripts_compile_with_zero_new_diagnostics():
+    # the v3 zone-era script, untouched: the v4 passes must stay silent
+    cs = compile_script(SCRIPT, _reg())
+    assert cs.diagnostics == ()
+    # ... even with a cluster shape, when everything is placeable
+    cs = compile_script(SCRIPT, _reg(),
+                        workers={"w_big": 8.0, "w1": 8.0, "w2": 8.0})
+    assert [d for d in cs.diagnostics if d.severity == "error"] == []
+
+
+def test_require_ir_rejects_version_pinned_consumers():
+    from repro.core import require_ir
+
+    cs = compile_script(SCRIPT, _reg())
+    require_ir(cs)  # current version: fine
+    with pytest.raises(CompileError) as ei:
+        require_ir(cs, 3)
+    assert "v3" in str(ei.value) and "v4" in str(ei.value)
+    assert ei.value.diagnostics[0].code == "ir-version"
+
+
+def test_unplaceable_chain_is_a_compile_error():
+    # no worker fits heavy (4.0), and the affine i+d pair (2.0) cannot
+    # co-reside on a 1.5 worker — even through the default fallback chain
+    reg = _reg()
+    with pytest.raises(CompileError) as ei:
+        compile_script(SCRIPT, reg, workers={"w0": 1.5, "w1": 1.5})
+    codes = {(d.tag, d.code) for d in ei.value.diagnostics}
+    assert ("h", "unplaceable-chain") in codes
+    assert ("i", "unplaceable-chain") in codes
+
+
+def test_diagnostics_sort_deterministically():
+    from repro.core import Diagnostic, diagnostic_sort_key, sort_diagnostics
+
+    ds = [
+        Diagnostic("warning", "b", "m2", code="c", block=1),
+        Diagnostic("error", "z", "m0"),
+        Diagnostic("warning", "b", "m1", code="c", block=0),
+        Diagnostic("warning", "a", "m3"),
+    ]
+    got = sort_diagnostics(ds)
+    assert [d.severity for d in got] == ["error", "warning", "warning",
+                                         "warning"]
+    assert [d.message for d in got] == ["m0", "m3", "m1", "m2"]
+    assert sort_diagnostics(tuple(reversed(ds))) == got
+    assert diagnostic_sort_key(got[0])[0] == 0

@@ -241,3 +241,56 @@ def test_zone_terms_never_enter_the_tag_universe():
     reg.register("f", memory=1.0, tag="d")
     compiled = compile_script(parse(ZONED), reg)
     assert not any(t.startswith("zone:") for t in compiled.tag_index.tags)
+
+
+# ---- v4 cost clause --------------------------------------------------------- #
+
+COSTED = """
+d:
+  workers: *
+  strategy: best_first
+  cost:
+    - budget 1.5s
+    - rate 1.66e-05 $/GB-s
+i:
+  - workers: *
+    strategy: min_cost
+    affinity: [d]
+    cost:
+      - budget 3.5s
+  - followup: fail
+"""
+
+
+def test_cost_clause_parses_bare_block_and_list_forms():
+    s = parse(COSTED)
+    c = s["d"].blocks[0].cost  # bare single-block mapping form
+    assert c.budget_s == 1.5 and c.rate_per_gb_s == 1.66e-05
+    c = s["i"].blocks[0].cost  # explicit block-list form
+    assert c.budget_s == 3.5 and c.rate_per_gb_s is None
+    # inline string form, unit suffixes optional
+    s = parse("t:\n  workers: *\n  cost: budget 2\n")
+    assert s["t"].blocks[0].cost.budget_s == 2.0
+
+
+@pytest.mark.parametrize("stylised", [False, True])
+def test_cost_clause_roundtrips(stylised):
+    s = parse(COSTED)
+    text = s.to_yaml(stylised=stylised)
+    assert "cost:" in text and "budget 1.5s" in text
+    assert parse(text) == s
+    # and the emitted text is itself a fixed point
+    assert parse(parse(text).to_yaml(stylised=stylised)) == s
+
+
+@pytest.mark.parametrize("bad", [
+    "t:\n  workers: *\n  cost: []\n",                      # empty clause
+    "t:\n  workers: *\n  cost:\n    - budget 1s\n    - budget 2s\n",
+    "t:\n  workers: *\n  cost:\n    - rate 1\n    - rate 2\n",
+    "t:\n  workers: *\n  cost:\n    - 1.5\n",              # bare number
+    "t:\n  workers: *\n  cost:\n    - budget -1s\n",       # non-positive
+    "t:\n  workers: *\n  cost:\n    - speed 9\n",          # unknown option
+])
+def test_cost_clause_static_errors(bad):
+    with pytest.raises(AAppError):
+        parse(bad)

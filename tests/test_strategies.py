@@ -149,6 +149,49 @@ def test_warmest_prefers_rank_then_load_then_order():
     assert try_schedule("fn", state.conf(), script, reg) == "w0"
 
 
+def test_min_cost_weighs_lifecycle_against_congestion():
+    """min_cost minimises `LIFECYCLE_S[warmth] + CONGESTION_S x load` — a hot
+    but loaded worker can beat a cold idle one, unlike warmest's
+    lexicographic (rank, load) order."""
+    state, reg = _three_workers(loads=(0, 2, 0))
+    script = _script("min_cost")
+    # w1 hot (0.0 + 2*0.05 = 0.1) vs w2 warm idle (0.1 + 0 = 0.1): tie ->
+    # first in conf order wins (w1); w0 cold idle loses at 0.5
+    warmth = lambda f, w: {"w1": 2, "w2": 1}.get(w, 0)
+    assert try_schedule("fn", state.conf(), script, reg, warmth=warmth) == "w1"
+    session = SchedulerSession(state, reg, script)
+    assert session.try_schedule("fn", warmth=warmth) == "w1"
+    session.close()
+    # no warmth source: every worker is cold, congestion decides -> w0
+    assert try_schedule("fn", state.conf(), script, reg) == "w0"
+    # eleven invocations of load beat one cold start: warmest would stay on
+    # the hot worker, min_cost spills to the cold idle one
+    state2, reg2 = _three_workers(loads=(11, 0, 0))
+    warmth2 = lambda f, w: {"w0": 2}.get(w, 0)
+    assert try_schedule("fn", state2.conf(), _script("warmest"), reg2,
+                        warmth=warmth2) == "w0"
+    assert try_schedule("fn", state2.conf(), script, reg2,
+                        warmth=warmth2) == "w1"
+
+
+def test_incremental_cost_clamps_warmth_rank():
+    from repro.core.strategies import CONGESTION_S, LIFECYCLE_S, \
+        incremental_cost
+
+    assert incremental_cost(0, 0) == LIFECYCLE_S[0]
+    assert incremental_cost(2, 3) == LIFECYCLE_S[2] + 3 * CONGESTION_S
+    assert incremental_cost(-1, 0) == LIFECYCLE_S[0]  # clamped low
+    assert incremental_cost(9, 0) == LIFECYCLE_S[2]  # clamped high
+
+
+def test_min_cost_registers_with_alias():
+    names = strategy_names()
+    assert "min_cost" in names
+    from repro.core import get_strategy
+    assert get_strategy("min-cost") is get_strategy("min_cost")
+    assert get_strategy("min_cost").narrow_warmth is False
+
+
 # --------------------------------------------------------------------------- #
 # valid() <-> rejection_reason() agreement (the explain-trace twin)
 # --------------------------------------------------------------------------- #
@@ -174,7 +217,7 @@ def test_rejection_reason_agrees_with_valid():
 # scalar vs session bit-equality over the new strategies
 # --------------------------------------------------------------------------- #
 
-NEW_STRATEGIES = ("least_loaded", "warmest")
+NEW_STRATEGIES = ("least_loaded", "warmest", "min_cost")
 
 
 def new_strategy_script(rng: random.Random) -> AAppScript:
