@@ -461,13 +461,91 @@ def resilience_main(quick: bool = False) -> Dict[str, float]:
     return r
 
 
-def _best_of_two(bench, budget: float, **kw) -> Dict[str, float]:
-    """Run ``bench``; on a budget miss, measure once more and keep the
-    better estimate.  A single re-measure only fires on failure, so it
-    guards against a transient contention spike landing on the first
+# decide_batch([f]) vs invoke(f): the batch-of-1 tax.  The singleton lane
+# is a zero-copy delegation, but the API shape itself costs two
+# single-element list allocations plus a guard chain (~0.7us measured) —
+# the CPython floor for a list-in/list-out wrapper.  On a ~40us scalar
+# cycle that floor is ~1.7%, so the budget pins the tax at < 3%: well
+# inside the facade's own 5% gate, tight enough to catch any real work
+# (snapshotting, tensor prep) leaking onto the singleton path.
+BULK1_BUDGET = 0.03
+
+
+def run_bulk_batch1_microbench(W: int = FACADE_W, n: int = OBS_N,
+                               repeats: int = OBS_REPEATS
+                               ) -> Dict[str, float]:
+    """The group-commit front end's degenerate-batch tax: a wave of ONE
+    request through :meth:`Platform.decide_batch` must cost what the scalar
+    :meth:`Platform.invoke` it wraps costs (the front end short-circuits a
+    singleton wave to the sequential path), so callers can route *every*
+    arrival through the batch API without penalizing singletons — same
+    single-instance alternating-chunk protocol as the obs tax, budget
+    < 3% (the list-in/list-out API shape itself costs ~0.7us)."""
+    from repro.pool import StartCosts, WarmPool, make_policy
+
+    mix_rng = random.Random(2)
+    fs = [mix_rng.choice(["f_lat", "f_train", "f_batch"]) for _ in range(n)]
+
+    st, reg = _facade_setup(W)
+    pool = WarmPool(make_policy("fixed_ttl", ttl=1e9),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=256.0, hot_window=1e9)
+    plat = Platform(FACADE_SCRIPT, cluster=st, registry=reg,
+                    pool=pool, seed=3)
+
+    def run_invoke() -> float:
+        rng = random.Random(3)
+        t0 = time.process_time()
+        for f in fs:
+            d = plat.invoke(f, rng)
+            if d.worker is not None:
+                plat.complete(d)
+        return (time.process_time() - t0) / n * 1e6
+
+    def run_batch1() -> float:
+        rng = random.Random(3)
+        t0 = time.process_time()
+        for f in fs:
+            d = plat.decide_batch([f], rng)[0]
+            if d.worker is not None:
+                plat.complete(d)
+        return (time.process_time() - t0) / n * 1e6
+
+    r = _paired_overhead(run_invoke, run_batch1, repeats)
+    plat.close()
+    return r
+
+
+def bulk_main(quick: bool = False) -> Dict[str, float]:
+    reps = 150 if quick else OBS_REPEATS
+    r = _best_of_two(run_bulk_batch1_microbench,
+                     BULK1_BUDGET, tries=3, n=OBS_N, repeats=reps)
+    print(f"bulk batch-of-1 (facade cycle, W={FACADE_W}, "
+          f"{reps} chunk pairs of n={OBS_N}):")
+    print(f"  invoke          : {r['base_us']:8.2f} us/cycle (best)")
+    print(f"  decide_batch[1] : {r['obs_us']:8.2f} us/cycle (best)")
+    print(f"  overhead        : {r['overhead']*100:+7.2f}% "
+          f"(budget {BULK1_BUDGET*100:.0f}%)")
+    assert r["overhead"] < BULK1_BUDGET, (
+        f"batch-of-1 decide_batch adds {r['overhead']*100:.2f}% "
+        f"(budget {BULK1_BUDGET*100:.0f}%): {r}")
+    print(f"bulk batch-of-1 tax < {BULK1_BUDGET*100:.0f}% "
+          f"({(r['obs_us'] - r['base_us']):+.2f} us absolute) — the "
+          "group-commit front end stays at the delegation floor for "
+          "singleton arrivals")
+    return r
+
+
+def _best_of_two(bench, budget: float, tries: int = 2,
+                 **kw) -> Dict[str, float]:
+    """Run ``bench``; on a budget miss, measure up to ``tries - 1`` more
+    times and keep the best estimate.  Re-measures only fire on failure,
+    so this guards against transient contention spikes landing on a
     measurement without loosening the asserted budget itself."""
     r = bench(**kw)
-    if r["overhead"] >= budget:
+    for _ in range(tries - 1):
+        if r["overhead"] < budget:
+            break
         r2 = bench(**kw)
         if r2["overhead"] < r["overhead"]:
             r = r2
@@ -513,6 +591,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="run only the observability-plane tax microbenches")
     ap.add_argument("--resilience", action="store_true",
                     help="run only the disabled-resilience tax microbench")
+    ap.add_argument("--bulk", action="store_true",
+                    help="run only the decide_batch batch-of-1 tax "
+                         "microbench")
     ap.add_argument("--quick", action="store_true",
                     help="shorter runs (CI smoke)")
     args = ap.parse_args(argv)
@@ -524,6 +605,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         return
     if args.resilience:
         resilience_main(quick=args.quick)
+        return
+    if args.bulk:
+        bulk_main(quick=args.quick)
         return
 
     table = run()

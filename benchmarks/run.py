@@ -161,8 +161,9 @@ def main(argv=None) -> None:
     print("\n== scheduler scale ==")
     for r in srows:
         print(f"  W={r['workers']:5d} scalar={r['scalar_us_per_decision']:.1f}us "
-              f"batched={r['batched_us_per_decision']:.1f}us "
-              f"session={r['session_us_per_decision']:.1f}us")
+              f"legacy_wave={r['legacy_wave_us_per_decision']:.1f}us "
+              f"session={r['session_us_per_decision']:.1f}us "
+              f"bulk256={r['bulk256_us_per_decision']:.2f}us")
     big = srows[-1]
     rows.append(("sec7_scheduler_scale", big["scalar_us_per_decision"],
                  f"session_speedup_at_{big['workers']}w="

@@ -41,6 +41,7 @@ through it.  Same bit-exact contract, property-tested in
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 from collections import OrderedDict
 from time import perf_counter
@@ -57,8 +58,77 @@ from .ast import (
 from .decision import REASON_UNKNOWN_WORKER, REASON_WARMTH_TIER
 from .scheduler import Warmth, candidate_blocks, default_rng, rejection_reason
 from .state import ClusterState, Conf, Registry
-from .strategies import SelectionContext, get_strategy
-from repro.kernels.affinity import NO_CAP, NO_CONC, affinity_valid_np
+from .strategies import (BestFirst, LeastLoaded, MinCost, SelectionContext,
+                         Warmest, get_strategy)
+from repro.kernels.affinity import (NO_CAP, NO_CONC, affinity_valid_np,
+                                    bulk_argmin_np, bulk_decide_np,
+                                    bulk_scores_np)
+from repro.kernels.affinity.bulk_np import (CONGESTION_S as _BULK_CONGESTION,
+                                            LIFECYCLE_S as _BULK_LIFECYCLE,
+                                            WARMEST_BASE as _WARMEST_BASE)
+
+# Built-in strategies the fused bulk decide pass can express as a score row +
+# argmin (codes match repro.kernels.affinity.bulk_np.STRATEGY_CODES).  The
+# map is keyed by *class* so a user strategy registered over one of these
+# names falls back to the exact per-item reference path.
+_VEC_STRATEGIES = {BestFirst: 0, LeastLoaded: 1, Warmest: 2, MinCost: 3}
+_WARMEST_BASE32 = 4194304.0  # 2**22: f32-exact packing (mirrors bulk_ref)
+_MIN_COST_LIFE20 = tuple(c / _BULK_CONGESTION for c in _BULK_LIFECYCLE)
+_MIN_COST_CLAMP32 = 16777216.0 - 16.0  # 2**24 - 16 (mirrors bulk_ref)
+_F32_NEG_INF = np.float32(-np.inf)
+_F32_POS_INF = np.float32(np.inf)
+
+
+def _round32_le_cut(t: np.float32) -> float:
+    """Float64 cutoff ``c`` with ``mem < c  <=>  float32(mem) <= t`` for any
+    non-NaN float64 ``mem`` — folds the float32 round *and* the compare into
+    one exact python-float strict compare.  The boundary is the round-to-
+    nearest-even midpoint between ``t`` and the next float32 up (exact in
+    f64: adjacent f32 values sum without rounding); when the tie itself
+    rounds down to ``t`` the midpoint passes, which a strict compare
+    expresses by stepping the cutoff one f64 ulp higher."""
+    if np.isinf(t):
+        return float(t)  # +inf: everything finite passes; -inf: nothing
+    nxt = np.nextafter(t, _F32_POS_INF, dtype=np.float32)
+    if np.isinf(nxt):
+        # t is the largest finite f32: values at/above the overflow
+        # midpoint round to +inf (the tie rounds to the even 2**128)
+        return float(t) + 2.0 ** 103
+    mid = (float(t) + float(nxt)) / 2.0
+    if np.float32(mid) == t:  # tie rounds down: mem == mid still passes
+        return math.nextafter(mid, math.inf)
+    return mid
+
+
+def _f32_cell_cut(f_mem32: np.float32, cap32: np.float32, max_mem) -> float:
+    """Precomputed per-(row, worker) validity cutoff: the float64 ``cut``
+    such that, for the row's f32 arithmetic on this worker,
+
+      ``mem_used < cut``  <=>  ``f32(mem_used) + f_mem32 <= f32(max_mem)``
+                               and ``f32(mem_used) < cap32 * f32(max_mem)``
+
+    so the hot per-commit recheck is ONE exact python-float compare instead
+    of a chain of numpy float32 scalar ops.  The capacity-fit term uses
+    float32-add monotonicity: the largest f32 ``x`` with
+    ``f32(x + f_mem32) <= M`` bounds ``f32(mem_used)`` exactly, including
+    at rounding boundaries where the sum lands exactly on ``M``."""
+    M = np.float32(max_mem)
+    x = np.float32(M - f_mem32)
+    if np.float32(x + f_mem32) <= M:
+        up = np.nextafter(x, _F32_POS_INF, dtype=np.float32)
+        while np.float32(up + f_mem32) <= M:
+            x = up
+            up = np.nextafter(up, _F32_POS_INF, dtype=np.float32)
+    else:
+        while not (np.float32(x + f_mem32) <= M) and x != _F32_NEG_INF:
+            x = np.nextafter(x, _F32_NEG_INF, dtype=np.float32)
+    mem_cut = _round32_le_cut(x)
+    # strict `f32(mem) < capthr`  ==  `f32(mem) <= prev32(capthr)`
+    cap_cut = _round32_le_cut(
+        np.nextafter(cap32 * M, _F32_NEG_INF, dtype=np.float32))
+    return mem_cut if mem_cut < cap_cut else cap_cut
+BULK_BATCH_BOUNDS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                     256.0, 512.0, 1024.0, 2048.0, 4096.0)
 
 
 # --------------------------------------------------------------------------- #
@@ -393,6 +463,24 @@ class StateTensors:
             rev=self.rev,
         )
 
+    def scratch_copy(self) -> "StateTensors":
+        """Copy for as-if-applied scratch waves: shares every structure a
+        scratch commit never mutates (worker roster, ``widx``, zones,
+        ``max_mem`` and the resident-memory table — scratch applies bump the
+        sum arrays directly and never release), so the per-wave cost is
+        three array copies instead of a worker-count-sized dict walk."""
+        return StateTensors(
+            workers=self.workers,
+            widx=self.widx,
+            occ=self.occ.copy(),
+            mem_used=self.mem_used.copy(),
+            max_mem=self.max_mem,
+            n_funcs=self.n_funcs.copy(),
+            zones=self.zones,
+            _res_mem=self._res_mem,
+            rev=self.rev,
+        )
+
     def equals(self, other: "StateTensors") -> bool:
         """Bit-exact equality of the scheduling-visible tensors (the resident
         memory bookkeeping table is excluded: synthetic vs real keys)."""
@@ -423,6 +511,67 @@ class WaveResult:
     assignments: List[Optional[str]]  # per function, worker id or None
     rows_evaluated: int
     corrections: int
+
+
+class _WaveRow:
+    """One (function, block) row of an in-flight decide_wave: the writable
+    score vector, the cached first-minimum winner, and the deferred-staleness
+    set that makes per-commit maintenance O(dirty workers) instead of O(W)."""
+
+    __slots__ = ("cb", "wm", "wm_mv", "code", "score", "winner", "wscore",
+                 "stale", "pos_list", "neg_list", "pos_cols", "seq", "cap32",
+                 "cap64", "maxc", "has_cap", "has_conc", "thr")
+
+    def __init__(self, cb: CompiledBlock, wm: np.ndarray, code: int,
+                 score: np.ndarray, winner: int, wscore: float):
+        self.cb = cb
+        self.wm = wm  # static worker mask row (zones + wildcard)
+        try:  # buffer view: python-bool reads without numpy scalar boxing
+            self.wm_mv = memoryview(wm)
+        except (TypeError, ValueError):  # non-exportable (e.g. broadcast)
+            self.wm_mv = wm
+        self.code = code  # bulk strategy code
+        self.score = score  # [W] f64 (np backend) / f32 (ref, pallas)
+        self.winner = winner  # cached first-min index, -1 when none
+        self.wscore = wscore
+        self.stale: set = set()  # workers whose score entry is deferred
+        # per-ROW event-log cursor: a pick returns at the first winning row,
+        # so rows below it fold the skipped events in whenever next reached
+        self.seq = 0
+        self.pos_list = np.flatnonzero(cb.aff == 1).tolist()
+        self.neg_list = np.flatnonzero(cb.aff == -1).tolist()
+        # placements of these tag columns can *revive* an invalid worker
+        self.pos_cols = frozenset(self.pos_list)
+        # capacity fractions hoisted out of the per-cell recheck, keeping the
+        # wave-start operation order: f32 (cap * 0.01f) * maxm, f64
+        # (cap / 100.0) * maxm
+        self.cap32 = np.float32(cb.cap_pct) * np.float32(0.01)
+        self.cap64 = cb.cap_pct / 100.0
+        self.maxc = int(cb.max_conc)  # python int: cheap hot-path compare
+        self.has_cap = cb.cap_pct < NO_CAP
+        self.has_conc = cb.max_conc < NO_CONC
+        self.thr: Dict[int, float] = {}  # per-worker f32 validity cutoffs
+
+
+class _WaveFn:
+    """Per-unique-function wave state: its rows plus the warmth vector the
+    scores were built from (mutable so live pool acquires can be folded in)."""
+
+    __slots__ = ("f", "tag", "f_mem", "f_mem32", "rows", "warm", "warm_mv",
+                 "col")
+
+    def __init__(self, f: str, tag: str, f_mem: float,
+                 rows: List[_WaveRow], warm: Optional[np.ndarray]):
+        self.f = f
+        self.tag = tag
+        self.f_mem = f_mem
+        self.f_mem32 = np.float32(f_mem)
+        self.rows = rows
+        self.warm = warm  # [W] i32 ranks or None (rank 0 everywhere)
+        # buffer view: python-int rank reads without numpy scalar boxing
+        # (live pool writes go through self.warm and stay visible)
+        self.warm_mv = None if warm is None else memoryview(warm)
+        self.col = -2  # scratch tag column, resolved lazily (-2 = unresolved)
 
 
 def _row_valid_scalar(
@@ -670,7 +819,15 @@ class SchedulerSession:
         # the identity check sound (a live key can't be a recycled address)
         self._occ_cache = None
         self._last_pol: Optional[Tuple[AAppScript, CompiledPolicies]] = None
-        self.stats = {"decisions": 0, "deltas": 0, "rebuilds": 0, "waves": 0}
+        self.stats = {"decisions": 0, "deltas": 0, "rebuilds": 0, "waves": 0,
+                      "bulk_waves": 0, "bulk_fallback": 0}
+        # in-flight decide_wave bookkeeping: the change-feed handler appends
+        # every event here while a wave is open so the wave can tell its own
+        # group-commit allocations from structural changes (compact() bumps
+        # the counter for the same reason — a mid-wave compact rebuilds the
+        # tag universe, so in-flight tag-row indices must be re-derived)
+        self._wave_watch: Optional[List[Tuple[str, Dict]]] = None
+        self._compactions = 0
         # observability plane (repro.obs): None until attached — the hot
         # paths guard with a single `is not None`, so a session without obs
         # pays nothing (the `overhead.py --obs` disabled-path gate)
@@ -709,6 +866,7 @@ class SchedulerSession:
         tags should invoke it periodically (the engine does once the index
         outgrows a threshold).  O(one rebuild) — all caches recompile on
         demand."""
+        self._compactions += 1
         self.tag_index = TagIndex([])
         self._policies.clear()
         self._last_pol = None
@@ -734,6 +892,8 @@ class SchedulerSession:
         self._apply_event(kind, payload)
 
     def _apply_event(self, kind: str, payload: Dict) -> None:
+        if self._wave_watch is not None:
+            self._wave_watch.append((kind, payload))
         try:
             if kind == "allocate":
                 a = payload["activation"]
@@ -845,10 +1005,17 @@ class SchedulerSession:
                 if not hit:
                     return None, None
             else:
-                for w, r in row.items():
-                    j = widx.get(w)
-                    if j is not None:
-                        vec[j] = r
+                try:
+                    idx = np.fromiter(map(widx.__getitem__, row),
+                                      np.intp, count=len(row))
+                except KeyError:  # row mentions workers this shard lacks
+                    for w, r in row.items():
+                        j = widx.get(w)
+                        if j is not None:
+                            vec[j] = r
+                else:
+                    vec[idx] = np.fromiter(row.values(), np.int32,
+                                           count=len(row))
             return vec, None
         if warmth is None:
             return None, None
@@ -1101,3 +1268,533 @@ class SchedulerSession:
                                  self.tag_index)
         return WaveResult(assignments=assignments, rows_evaluated=rows,
                           corrections=0)
+
+    # ---- bulk decide (the group-commit batching front end) ----------------- #
+
+    def decide_wave(self, fs: Sequence[str], *,
+                    script: Optional[AAppScript] = None,
+                    rng: Optional[random.Random] = None,
+                    warmth="auto",
+                    apply_to: Optional[ClusterState] = None,
+                    commit: Optional[Callable[[int, str, Optional[str]], None]]
+                    = None) -> WaveResult:
+        """Group-commit a wave of decisions with exact sequential semantics
+        through one fused bulk pass.
+
+        Instead of a full :meth:`_decide` per item, the wave evaluates every
+        distinct function's block bank once against the wave-start tensors —
+        candidate masks *and* strategy scores in a single [R, W] pass
+        (``self.backend``: the float64 numpy twin, the jnp reference, or the
+        Pallas kernel) — and then commits items in order, maintaining each
+        row's cached argmin winner by re-checking only the workers dirtied by
+        earlier commits in the same wave.  Monotonicity does the heavy
+        lifting: a placement can only *worsen* a worker's validity and score
+        (memory, capacity, concurrency, load, anti-affinity) except when it
+        lands an affine tag, so a cached winner stays the winner until it is
+        itself dirtied, and untouched rows cost nothing.
+
+        Anything the score encoding can't express bit-identically falls back
+        to the per-item reference path: non-wildcard blocks, strategies
+        outside the built-in four (notably ``any``, which draws from ``rng``
+        — fallback preserves the draw sequence since vectorized strategies
+        never draw), unknown functions, explicit warmth callables, and whole
+        waves when a tracer is attached.  Mid-wave structural events —
+        ``complete``/worker churn deltas, an :meth:`invalidate`, or a
+        :meth:`compact` (which rebuilds the tag universe and would strand
+        in-flight tag-row indices) — rebuild the wave state for the
+        remaining suffix from the live tensors, which is exactly wave-start
+        semantics for that suffix.
+
+        ``apply_to`` must be the session's own state (live mode: each
+        decision is recorded — by ``commit`` when given, else directly via
+        ``state.allocate`` — before the next is made) or ``None`` (scratch
+        mode: decisions are as-if-applied on a copy of the tensors, nothing
+        mutates).  ``commit(i, f, worker)`` is invoked for every item,
+        including unplaced ones (``worker is None``) so callers can mirror
+        their full per-invoke bookkeeping.
+
+        With ``backend="np"`` (the default) the result is bit-identical to
+        calling :meth:`try_schedule` in a loop with the same rng — scores
+        are float64 with the scalar reference's exact operation sequence.
+        The ``ref``/``pallas`` backends score in float32 (``min_cost`` uses
+        the exact 20x-scaled integer encoding) and carry the same
+        near-tie caveat as their validity kernels.
+        """
+        if apply_to is not None and apply_to is not self.state:
+            raise ValueError("apply_to must be the session's state or None")
+        live = apply_to is not None
+        if commit is not None and not live:
+            raise ValueError("commit requires apply_to (live mode)")
+        rng = rng if rng is not None else default_rng()
+        self.stats["waves"] += 1
+        self.stats["bulk_waves"] += 1
+        tm = self._timers
+        timed = False
+        if tm is not None:
+            timed = tm.sample()
+            if timed:
+                _t0 = perf_counter()
+            tm.registry.histogram("session.bulk_batch_size",
+                                  bounds=BULK_BATCH_BOUNDS
+                                  ).observe(float(len(fs)))
+        watch: Optional[List[Tuple[str, Dict]]] = [] if live else None
+        if live:
+            self._wave_watch = watch
+        try:
+            result = self._run_wave(fs, script, rng, warmth, live, apply_to,
+                                    commit, watch)
+        finally:
+            self._wave_watch = None
+        if timed:
+            tm.observe("bulk_decide", perf_counter() - _t0)
+        return result
+
+    def _run_wave(self, fs, script, rng, warmth, live, apply_to, commit,
+                  watch) -> WaveResult:
+        reg = self.reg
+        f32 = self.backend != "np"
+        INF = np.inf
+        # only pool-backed ("auto") or absent warmth is vectorizable: an
+        # explicit callable could read state a commit mutates mid-wave
+        vec_warmth = warmth == "auto" or warmth is None
+        use_pool_warm = live and warmth == "auto" and self.pool is not None
+        corrections = 0
+        rows_evaluated = 0
+        events: List[Tuple[int, Optional[int]]] = []  # (worker idx, tag col)
+        watch_pos = 0
+        structural = False
+
+        pol = self.policies_for(script)
+        snap = self.tensors()
+        epoch0 = self._worker_epoch
+        compact0 = self._compactions
+        fstates: Dict[str, Optional[_WaveFn]] = {}
+        # scratch overlays (turbo mode): per-worker float64/int mirrors of
+        # the as-if-applied deltas, so an all-vectorizable scratch wave
+        # never copies or writes the tensors at all.  The accumulation is
+        # the same IEEE operation sequence as += into the arrays (a python
+        # float *is* a float64), so reads through the overlay are bit-exact.
+        turbo = False
+        mem_over: Dict[int, float] = {}
+        load_over: Dict[int, int] = {}
+        occ_over: Dict[Tuple[int, int], int] = {}
+
+        # ---- wave-start bulk pass ------------------------------------------ #
+
+        def build(funcs) -> None:
+            nonlocal rows_evaluated
+            pending = []
+            for f in funcs:
+                if f in fstates:
+                    continue
+                if self._tracer is not None or not vec_warmth:
+                    fstates[f] = None  # exact per-item path (trace records)
+                    continue
+                try:
+                    spec = reg[f]
+                except KeyError:
+                    fstates[f] = None  # _decide raises at the item's turn
+                    continue
+                bank = pol.rows_for(spec.tag)
+                codes: List[int] = []
+                vec = True
+                for cb in bank.cbs:
+                    code = None
+                    if cb.wildcard:
+                        try:
+                            code = _VEC_STRATEGIES.get(
+                                type(get_strategy(cb.strategy)))
+                        except KeyError:
+                            code = None
+                    if code is None:
+                        vec = False
+                        break
+                    codes.append(code)
+                if not vec:
+                    fstates[f] = None
+                    self.stats["bulk_fallback"] += 1
+                    continue
+                pending.append((f, spec, bank, codes))
+            if not pending:
+                return
+            W = len(snap.workers)
+            T = len(self.tag_index)
+            snap.ensure_tags(T)
+            ready = []
+            for f, spec, bank, codes in pending:
+                B = len(bank.cbs)
+                if B == 0 or W == 0:
+                    fstates[f] = _WaveFn(f, spec.tag, float(spec.memory),
+                                         [], None)
+                    continue
+                aff = bank.aff_at(T)
+                if snap.occ.shape[1] > T:  # tensors saw unreferenced tags
+                    aff = np.concatenate(
+                        [aff, np.zeros((B, snap.occ.shape[1] - T), np.int8)],
+                        axis=1)
+                    bank.aff = aff
+                    bank._derive()
+                wmask = self._wmask(pol, spec.tag, bank, snap)
+                warm_vec, _fn = self._resolve_warmth(f, warmth, snap)
+                if use_pool_warm and warm_vec is None:
+                    warm_vec = np.zeros((W,), np.int32)  # mutable: acquires
+                ready.append((f, spec, bank, codes, wmask, warm_vec))
+                rows_evaluated += B
+            if not ready:
+                return
+
+            def adopt(f, spec, bank, codes, wmask, warm_vec, valid, score,
+                      winners):
+                rows = []
+                for b, cb in enumerate(bank.cbs):
+                    k = int(winners[b])
+                    ws = float(score[b, k]) if k >= 0 else INF
+                    rows.append(_WaveRow(cb, wmask[b], codes[b],
+                                         score[b].copy(), k, ws))
+                fstates[f] = _WaveFn(f, spec.tag, float(spec.memory), rows,
+                                     warm_vec)
+
+            if not f32:
+                for f, spec, bank, codes, wmask, warm_vec in ready:
+                    valid = self._valid_rows(bank, snap, wmask, spec.memory)
+                    score = bulk_scores_np(
+                        valid, codes, 0 if warm_vec is None else warm_vec,
+                        snap.n_funcs)
+                    adopt(f, spec, bank, codes, wmask, warm_vec, valid, score,
+                          bulk_argmin_np(score))
+                return
+            # ref / pallas: one fused [R, W] launch across every pending
+            # function's rows
+            Tocc = snap.occ.shape[1]
+            affs, wms, fmems, caps, concs, strats = [], [], [], [], [], []
+            Rtot = sum(len(bank.cbs) for _, _, bank, _, _, _ in ready)
+            warm_all = np.zeros((Rtot, len(snap.workers)), np.int32)
+            r0 = 0
+            for f, spec, bank, codes, wmask, warm_vec in ready:
+                B = len(bank.cbs)
+                affs.append(bank.aff_at(Tocc))
+                wms.append(wmask)
+                if warm_vec is not None:
+                    warm_all[r0:r0 + B] = warm_vec
+                fmems.append(np.full((B,), spec.memory, np.float32))
+                caps.append(bank.cap.astype(np.float32))
+                concs.append(bank.conc)
+                strats.append(np.asarray(codes, np.int32))
+                r0 += B
+            valid_all, score_all, winner_all = bulk_decide_np(
+                snap.occ, np.concatenate(affs), np.concatenate(wms),
+                snap.mem_used, snap.max_mem, snap.n_funcs,
+                np.concatenate(fmems), np.concatenate(caps),
+                np.concatenate(concs), np.concatenate(strats),
+                warm_all, backend=self.backend)
+            score_all = np.asarray(score_all)
+            r0 = 0
+            for f, spec, bank, codes, wmask, warm_vec in ready:
+                B = len(bank.cbs)
+                adopt(f, spec, bank, codes, wmask, warm_vec,
+                      valid_all[r0:r0 + B], score_all[r0:r0 + B],
+                      winner_all[r0:r0 + B])
+                r0 += B
+
+        # ---- live-state change tracking ------------------------------------ #
+
+        def drain() -> None:
+            nonlocal watch_pos, structural
+            while watch_pos < len(watch):
+                kind, payload = watch[watch_pos]
+                watch_pos += 1
+                if kind == "allocate":
+                    a = payload["activation"]
+                    j = snap.widx.get(a.worker)
+                    if j is None:
+                        structural = True
+                        continue
+                    col = self.tag_index.index.get(a.tag) if a.tag else None
+                    events.append((j, col))
+                else:  # complete / worker churn / unknown: not monotonic
+                    structural = True
+            if (self._snap is not snap
+                    or self._synced_version != self.state.version
+                    or self._worker_epoch != epoch0
+                    or self._compactions != compact0):
+                structural = True
+
+        def rebuild(remaining) -> None:
+            nonlocal snap, structural, epoch0, compact0, watch_pos, pol
+            pol = self.policies_for(script)  # compact() drops the old one
+            snap = self.tensors()
+            epoch0 = self._worker_epoch
+            compact0 = self._compactions
+            watch_pos = len(watch)  # everything so far is in the fresh snap
+            events.clear()
+            fstates.clear()
+            structural = False
+            build(remaining)
+
+        # ---- cached-winner maintenance ------------------------------------- #
+
+        occ_arr = None  # buffer view over snap.occ, refreshed on identity
+        occ_mv = None  # change (scratch copy, live growth, rebuild)
+        occ_w = 0
+
+        def cell(st: _WaveFn, row: _WaveRow, j: int) -> float:
+            """Live re-check of one (row, worker) cell: validity + score with
+            the same arithmetic as the wave-start bulk pass (float64 for the
+            np backend, f32-exact encodings for ref/pallas)."""
+            nonlocal corrections, occ_arr, occ_mv, occ_w
+            corrections += 1
+            if not row.wm_mv[j]:
+                return INF
+            load = load_over.get(j)
+            if load is None:
+                load = int(snap.n_funcs[j])
+            mem = mem_over.get(j)
+            if mem is None:
+                mem = float(snap.mem_used[j])
+            if f32:
+                cut = row.thr.get(j)
+                if cut is None:
+                    cut = row.thr[j] = _f32_cell_cut(
+                        st.f_mem32, row.cap32, snap.max_mem[j])
+                if not (mem < cut):
+                    return INF
+                if not (load < row.maxc):
+                    return INF
+            else:
+                maxm = float(snap.max_mem[j])
+                if not (mem + st.f_mem <= maxm):
+                    return INF
+                if row.has_cap and not (mem < row.cap64 * maxm):
+                    return INF
+                if row.has_conc and load >= row.maxc:
+                    return INF
+            if row.pos_list or row.neg_list:
+                if snap.occ is not occ_arr:  # (re)snap the buffer view
+                    occ_arr = snap.occ
+                    occ_mv = memoryview(occ_arr)
+                    occ_w = occ_arr.shape[1]
+                for c in row.pos_list:
+                    v = occ_over.get((j, c))
+                    if v is None:
+                        v = occ_mv[j, c] if c < occ_w else 0
+                    if v == 0:
+                        return INF
+                for c in row.neg_list:
+                    v = occ_over.get((j, c))
+                    if v is None:
+                        v = occ_mv[j, c] if c < occ_w else 0
+                    if v > 0:
+                        return INF
+            if st.warm is None:
+                r = 0
+            elif use_pool_warm:
+                r = int(self.pool.warmth(st.f, snap.workers[j], self.clock()))
+                st.warm[j] = r
+            else:
+                r = st.warm_mv[j]
+            r = 0 if r < 0 else (2 if r > 2 else r)
+            code = row.code
+            if code == 0:  # best_first
+                return 2.0 - r
+            if f32:
+                if code == 1:  # least_loaded
+                    return float(np.float32(load))
+                if code == 2:  # warmest
+                    return (2.0 - r) * _WARMEST_BASE32 + min(
+                        float(load), _WARMEST_BASE32 - 1.0)
+                return _MIN_COST_LIFE20[r] + min(float(load),
+                                                 _MIN_COST_CLAMP32)
+            if code == 1:
+                return float(load)
+            if code == 2:
+                return (2.0 - r) * _WARMEST_BASE + load
+            return _BULK_LIFECYCLE[r] + _BULK_CONGESTION * load
+
+        def reargmin(st: _WaveFn, row: _WaveRow) -> None:
+            for j in row.stale:
+                row.score[j] = cell(st, row, j)
+            row.stale.clear()
+            k = int(np.argmin(row.score))
+            v = float(row.score[k])
+            if v == INF:
+                row.winner, row.wscore = -1, INF
+            else:
+                row.winner, row.wscore = k, v
+
+        def recheck(st: _WaveFn, row: _WaveRow, j: int) -> None:
+            row.stale.discard(j)
+            new = cell(st, row, j)
+            old_w = row.winner
+            if j == old_w:
+                if new == row.wscore:
+                    return  # unchanged: score[j] already holds this value
+                row.score[j] = new
+                if new > row.wscore:
+                    # the cached winner degraded (filled up, lost a
+                    # tier): fold in every deferred entry and re-scan
+                    reargmin(st, row)
+                else:
+                    row.wscore = new
+                return
+            row.score[j] = new
+            if new < row.wscore or (new == row.wscore and j < old_w):
+                row.winner, row.wscore = j, new
+
+        def update_row(st: _WaveFn, row: _WaveRow, dirty) -> None:
+            must = None
+            for j, cols in dirty.items():
+                if j == row.winner or (row.pos_cols and cols
+                                       and not row.pos_cols.isdisjoint(cols)):
+                    if must is None:
+                        must = []
+                    must.append(j)
+                else:
+                    row.stale.add(j)
+            if must is None:
+                return
+            for j in must:
+                recheck(st, row, j)
+
+        def wave_pick(st: _WaveFn) -> int:
+            n = len(events)
+            for row in st.rows:  # Listing-1 block order
+                s = row.seq
+                if s < n:
+                    row.seq = n
+                    if n - s == 1:  # common case: one commit since last pick
+                        j, col = events[s]
+                        if j == row.winner or (col is not None
+                                               and col in row.pos_cols):
+                            recheck(st, row, j)
+                        else:
+                            row.stale.add(j)
+                    else:
+                        dirty: Dict[int, set] = {}
+                        for j, col in events[s:n]:
+                            ds = dirty.get(j)
+                            if ds is None:
+                                ds = dirty[j] = set()
+                            if col is not None:
+                                ds.add(col)
+                        update_row(st, row, dirty)
+                if row.winner >= 0:
+                    return row.winner
+            return -1
+
+        # ---- commit loop ---------------------------------------------------- #
+
+        def scratch_apply(f: str, w_idx: int,
+                          st: Optional[_WaveFn] = None) -> None:
+            # mirrors StateTensors.apply_alloc bit for bit (extending a
+            # sequential float64 sum == re-summing with the new term last)
+            # without the resident-table bookkeeping scratch mode never reads
+            if st is not None:
+                col = st.col
+                if col == -2:  # resolve the tag column once per wave
+                    col = (self.tag_index.ensure(st.tag) if st.tag
+                           else None)
+                    if col is not None:
+                        snap.ensure_tags(len(self.tag_index))
+                    st.col = col
+                mem = st.f_mem
+            else:
+                spec = reg[f]
+                col = self.tag_index.ensure(spec.tag) if spec.tag else None
+                if col is not None:
+                    snap.ensure_tags(len(self.tag_index))
+                mem = float(spec.memory)
+            if col is not None:
+                snap.occ[w_idx, col] += 1
+            snap.mem_used[w_idx] += mem
+            snap.n_funcs[w_idx] += 1
+            snap.rev += 1
+            events.append((w_idx, col))
+
+        def scratch_apply_turbo(st: _WaveFn, j: int) -> None:
+            # overlay-only as-if-apply: same value sequence as the array
+            # twin above, no tensor writes at all
+            col = st.col
+            if col == -2:
+                col = self.tag_index.ensure(st.tag) if st.tag else None
+                st.col = col
+            if col is not None:
+                k = (j, col)
+                v = occ_over.get(k)
+                if v is None:
+                    r = snap.occ[j]
+                    v = int(r[col]) if col < r.shape[0] else 0
+                occ_over[k] = v + 1
+            m = mem_over.get(j)
+            if m is None:
+                m = float(snap.mem_used[j])
+            mem_over[j] = m + st.f_mem
+            l = load_over.get(j)
+            if l is None:
+                l = int(snap.n_funcs[j])
+            load_over[j] = l + 1
+            events.append((j, col))
+
+        build(list(dict.fromkeys(fs)))
+        if not live:
+            turbo = all(st is not None for st in fstates.values())
+            if not turbo:
+                # a fallback item runs the vectorized per-item reference
+                # against the snap arrays, so they must really mutate
+                snap = snap.scratch_copy()
+        picks = 0
+        wname: Dict[int, str] = {}  # winner-index -> id memo (few distinct)
+        assignments: List[Optional[str]] = []
+        if turbo and commit is None:
+            # scratch overlay fast path: every item is a vectorized pick
+            # with no live feed, per-item callback, or tensor writes —
+            # the amortized-microseconds loop the bulk budget is set on
+            append = assignments.append
+            workers = snap.workers
+            for f in fs:
+                st = fstates[f]
+                k = wave_pick(st)
+                if k >= 0:
+                    w = wname.get(k)
+                    if w is None:
+                        w = wname[k] = workers[k]
+                    scratch_apply_turbo(st, k)
+                else:
+                    w = None
+                append(w)
+            self.stats["decisions"] += len(fs)
+            return WaveResult(assignments=assignments,
+                              rows_evaluated=rows_evaluated,
+                              corrections=corrections)
+        for i, f in enumerate(fs):
+            if live:
+                drain()
+                if structural:
+                    rebuild(list(dict.fromkeys(fs[i:])))
+                    wname.clear()
+            st = fstates.get(f)
+            if st is None:
+                w = self._decide(f, pol, snap, rng, warmth)
+                k = -1 if w is None else snap.widx[w]
+            else:
+                picks += 1
+                k = wave_pick(st)
+                if k >= 0:
+                    w = wname.get(k)
+                    if w is None:
+                        w = wname[k] = snap.workers[k]
+                else:
+                    w = None
+            assignments.append(w)
+            if commit is not None:
+                commit(i, f, w)
+            elif w is not None:
+                if live:
+                    apply_to.allocate(f, w, reg)  # delta via change feed
+                elif turbo:
+                    scratch_apply_turbo(st, k)
+                else:
+                    scratch_apply(f, k, st)
+        self.stats["decisions"] += picks
+        return WaveResult(assignments=assignments,
+                          rows_evaluated=rows_evaluated,
+                          corrections=corrections)

@@ -364,6 +364,45 @@ class ShardedSession:
         return WaveResult(assignments=assignments, rows_evaluated=0,
                           corrections=0)
 
+    def decide_wave(self, fs: Sequence[str], *,
+                    script: Optional[AAppScript] = None,
+                    rng: Optional[random.Random] = None,
+                    warmth="auto",
+                    apply_to: Optional[ClusterState] = None,
+                    commit: Optional[Callable[[int, str, Optional[str]],
+                                              None]] = None,
+                    origin_zone: Optional[str] = None) -> WaveResult:
+        """Group-commit wave through the sharded plane.  Zone-free scripts
+        (or single-zone clusters) delegate wholesale to the flat session's
+        fused bulk pass; zone-routed waves run the sequential two-level
+        router per item — routing is origin-dependent control flow the [R, W]
+        pass cannot express, and the bit-identity contract only covers the
+        delegated case anyway."""
+        plan = self._plan_for(script)
+        if len(plan.zones) <= 1 or not plan.routed_tags:
+            return self.flat.decide_wave(fs, script=script, rng=rng,
+                                         warmth=warmth, apply_to=apply_to,
+                                         commit=commit)
+        if apply_to is None:
+            raise ValueError(
+                "a zone-routed wave must be applied (apply_to=state): "
+                "scratch simulation would need every shard forked")
+        if apply_to is not self.state:
+            raise ValueError("apply_to must be the session's state or None")
+        rng = rng if rng is not None else default_rng()
+        self.stats["waves"] += 1
+        assignments: List[Optional[str]] = []
+        for i, f in enumerate(fs):
+            w = self.try_schedule(f, script=script, rng=rng, warmth=warmth,
+                                  origin_zone=origin_zone)
+            assignments.append(w)
+            if commit is not None:
+                commit(i, f, w)
+            elif w is not None:
+                apply_to.allocate(f, w, self.reg)
+        return WaveResult(assignments=assignments, rows_evaluated=0,
+                          corrections=0)
+
     # ------------------------------------------------------------------ #
     # explain (zone-level trace)
     # ------------------------------------------------------------------ #

@@ -1,10 +1,18 @@
+from .bulk_np import (CONGESTION_S, LIFECYCLE_S, STRATEGY_CODES,
+                      bulk_argmin_np, bulk_decide_ref_np, bulk_scores_np)
+from .bulk_ops import bulk_decide, bulk_decide_np
 from .ops import HAS_JAX, affinity_valid, affinity_valid_np
 from .ref_np import NO_CAP, NO_CONC, affinity_valid_ref_np
 
 if HAS_JAX:
+    from .bulk_ref import bulk_decide_ref
     from .ref import affinity_valid_ref
-else:  # minimal environment: the numpy twin stands in
+else:  # minimal environment: the numpy twins stand in
     affinity_valid_ref = affinity_valid_ref_np
+    bulk_decide_ref = bulk_decide_ref_np
 
 __all__ = ["affinity_valid", "affinity_valid_np", "affinity_valid_ref",
-           "affinity_valid_ref_np", "NO_CAP", "NO_CONC", "HAS_JAX"]
+           "affinity_valid_ref_np", "bulk_decide", "bulk_decide_np",
+           "bulk_decide_ref", "bulk_decide_ref_np", "bulk_scores_np",
+           "bulk_argmin_np", "STRATEGY_CODES", "LIFECYCLE_S",
+           "CONGESTION_S", "NO_CAP", "NO_CONC", "HAS_JAX"]

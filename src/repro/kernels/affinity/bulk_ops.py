@@ -1,0 +1,158 @@
+"""jit'd public wrapper around the fused bulk decide kernel: padding,
+backend pick, unpadding — the bulk twin of :mod:`.ops`.  Without JAX the
+host entry degrades to the pure-numpy twin so the group-commit batching
+front end stays fully functional in minimal environments.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .bulk_np import bulk_decide_ref_np
+from .ref_np import NO_CAP, NO_CONC
+
+try:
+    import jax
+    import jax.numpy as jnp
+
+    from .bulk_kernel import bulk_decide_kernel
+    from .bulk_ref import bulk_decide_ref
+    from .kernel import BF, BW, T_ALIGN
+
+    # steady-state entry: one traced XLA program per (R, W, T) shape class
+    # instead of ~30 eager op dispatches per wave
+    _bulk_ref_jit = jax.jit(bulk_decide_ref)
+
+    HAS_JAX = True
+except ImportError:  # minimal environment: numpy twin only
+    HAS_JAX = False
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fill(R: int, W: int, strat, warm):
+    if strat is None:
+        strat = np.zeros((R,), np.int32)
+    if warm is None:
+        warm = np.zeros((R, W), np.int32)
+    return strat, warm
+
+
+def bulk_decide(
+    occ,
+    aff,
+    wmask,
+    mem_used,
+    max_mem,
+    n_funcs,
+    f_mem,
+    cap_pct=None,
+    max_conc=None,
+    strat=None,
+    warm=None,
+    *,
+    backend: str = "auto",
+):
+    """Fused bulk decide: returns ``(valid[R, W] bool, score[R, W] f32,
+    winner[R] i32)`` with ``winner == -1`` when a row has no valid worker.
+
+    ``backend``: ``auto`` (pallas on TPU, ref elsewhere), ``pallas``
+    (interpret-mode off-TPU — used by tests), or ``ref``.
+    """
+    if not HAS_JAX:
+        raise ImportError(
+            "bulk_decide requires JAX; use bulk_decide_np for the numpy "
+            "fallback")
+    occ = np.asarray(occ, np.int32)
+    aff = np.asarray(aff, np.int8)
+    W, T = occ.shape
+    R = aff.shape[0]
+    if aff.shape[1] != T:
+        raise ValueError(f"tag axes differ: occ {T}, aff {aff.shape[1]}")
+
+    if cap_pct is None:
+        cap_pct = np.full((R,), NO_CAP, np.float32)
+    if max_conc is None:
+        max_conc = np.full((R,), NO_CONC, np.int32)
+    strat, warm = _fill(R, W, strat, warm)
+
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return _bulk_ref_jit(
+            occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem,
+            cap_pct, max_conc, strat, warm)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    interpret = jax.default_backend() != "tpu"
+    Rp = _round_up(max(R, 1), BF)
+    Wp = _round_up(max(W, 1), BW)
+    Tp = _round_up(max(T, 1), T_ALIGN)
+
+    occ_p = jnp.zeros((Wp, Tp), jnp.int32).at[:W, :T].set(occ)
+    aff_p = jnp.zeros((Rp, Tp), jnp.int8).at[:R, :T].set(aff)
+    wmask_p = jnp.zeros((Rp, Wp), jnp.int8).at[:R, :W].set(
+        jnp.asarray(wmask, jnp.int8))
+    warm_p = jnp.zeros((Rp, Wp), jnp.int32).at[:R, :W].set(
+        jnp.asarray(warm, jnp.int32))
+    mem_p = jnp.zeros((Wp, 1), jnp.float32).at[:W, 0].set(
+        jnp.asarray(mem_used, jnp.float32))
+    maxm_p = jnp.zeros((Wp, 1), jnp.float32).at[:W, 0].set(
+        jnp.asarray(max_mem, jnp.float32))
+    nfn_p = jnp.zeros((Wp, 1), jnp.int32).at[:W, 0].set(
+        jnp.asarray(n_funcs, jnp.int32))
+    fmem_p = jnp.zeros((Rp, 1), jnp.float32).at[:R, 0].set(
+        jnp.asarray(f_mem, jnp.float32))
+    cap_p = jnp.full((Rp, 1), NO_CAP, jnp.float32).at[:R, 0].set(
+        jnp.asarray(cap_pct, jnp.float32))
+    conc_p = jnp.full((Rp, 1), NO_CONC, jnp.int32).at[:R, 0].set(
+        jnp.asarray(max_conc, jnp.int32))
+    strat_p = jnp.zeros((Rp, 1), jnp.int32).at[:R, 0].set(
+        jnp.asarray(strat, jnp.int32))
+
+    valid, score, minval, minidx = bulk_decide_kernel(
+        aff_p, fmem_p, cap_p, conc_p, strat_p, occ_p, mem_p, maxm_p, nfn_p,
+        wmask_p, warm_p, interpret=interpret)
+    winner = jnp.where(jnp.isinf(minval[:R, 0]), -1,
+                       minidx[:R, 0]).astype(jnp.int32)
+    return valid[:R, :W].astype(bool), score[:R, :W], winner
+
+
+def bulk_decide_np(
+    occ,
+    aff,
+    wmask,
+    mem_used,
+    max_mem,
+    n_funcs,
+    f_mem,
+    cap_pct=None,
+    max_conc=None,
+    strat=None,
+    warm=None,
+    *,
+    backend: str = "auto",
+):
+    """Host-side convenience: numpy in/out.  Runs the pure-numpy twin when
+    JAX is unavailable (``auto``/``ref``/``np`` backends only), or always
+    with ``backend="np"`` — the exact-arithmetic (float64 score) path the
+    incremental session uses."""
+    if HAS_JAX and backend != "np":
+        valid, score, winner = bulk_decide(
+            occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem,
+            cap_pct, max_conc, strat, warm, backend=backend)
+        return np.asarray(valid), np.asarray(score), np.asarray(winner)
+    if backend not in ("auto", "ref", "np"):
+        raise ImportError(f"backend {backend!r} requires JAX")
+    R = np.asarray(aff).shape[0]
+    W = np.asarray(occ).shape[0]
+    if cap_pct is None:
+        cap_pct = np.full((R,), NO_CAP, np.float32)
+    if max_conc is None:
+        max_conc = np.full((R,), NO_CONC, np.int32)
+    strat, warm = _fill(R, W, strat, warm)
+    return bulk_decide_ref_np(
+        occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem, cap_pct,
+        max_conc, strat, warm)

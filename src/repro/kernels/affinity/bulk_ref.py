@@ -1,0 +1,66 @@
+"""Pure-jnp reference for the fused bulk decide pass — the float32 twin of
+:mod:`.bulk_np` (same encoding, accelerator dtypes).  The ``warmest``
+lexicographic packing uses base ``2**22`` with the load clamped to
+``2**22 - 1`` so every packed value (at most ``3 * 2**22 - 1 < 2**24``)
+stays exactly representable in float32.
+
+``min_cost`` scores here are the cost scaled by ``1 / CONGESTION_S`` (20x):
+``load + {10, 2, 0}[rank]`` — pure integer arithmetic in float32 (exact, and
+immune to FMA-contraction differences between XLA and Pallas), with the same
+ordering as the exact rational cost.  That ordering can differ from the
+float64 scalar reference only where the scalar's rounding breaks a rational
+tie — the session's ``np`` backend keeps the bit-exact float64 path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .bulk_np import (CONGESTION_S, LIFECYCLE_S, STRAT_BEST_FIRST,
+                      STRAT_LEAST_LOADED, STRAT_WARMEST)
+from .ref import affinity_valid_ref
+
+F32_EXACT = 16777216.0  # 2**24: largest run of consecutive exact f32 ints
+# warmest packs (2 - rank) * BASE + load; the max packed value 3 * 2**22 - 1
+# must stay under 2**24 or the f32 add swallows small loads (spacing at
+# 2**25 is 4) — hence base 2**22, not 2**24
+WARMEST_BASE_F32 = 4194304.0  # 2**22
+# LIFECYCLE_S / CONGESTION_S: the 20x-scaled start costs, exact in f32.
+MIN_COST_LIFE_F32 = tuple(c / CONGESTION_S for c in LIFECYCLE_S)  # (10, 2, 0)
+MIN_COST_LOAD_CLAMP = F32_EXACT - 16.0  # keep load + life exact
+
+
+def bulk_scores_ref(valid, strat, warm, loads):
+    """Score matrix [R, W] in float32; invalid cells score ``+inf``."""
+    valid = jnp.asarray(valid, bool)
+    R, W = valid.shape
+    strat = jnp.asarray(strat, jnp.int32).reshape(R, 1)
+    rank = jnp.clip(jnp.broadcast_to(jnp.asarray(warm), (R, W)), 0, 2)
+    rankf = rank.astype(jnp.float32)
+    loadf = jnp.asarray(loads, jnp.float32).reshape(1, W)
+
+    s_wm = ((2.0 - rankf) * WARMEST_BASE_F32
+            + jnp.minimum(loadf, WARMEST_BASE_F32 - 1.0))
+    life = jnp.where(rank >= 2, MIN_COST_LIFE_F32[2],
+                     jnp.where(rank >= 1, MIN_COST_LIFE_F32[1],
+                               MIN_COST_LIFE_F32[0]))
+    s_mc = life + jnp.minimum(loadf, MIN_COST_LOAD_CLAMP)
+    score = jnp.where(
+        strat == STRAT_BEST_FIRST, 2.0 - rankf,
+        jnp.where(strat == STRAT_LEAST_LOADED, loadf + 0.0 * rankf,
+                  jnp.where(strat == STRAT_WARMEST, s_wm, s_mc)))
+    return jnp.where(valid, score, jnp.inf).astype(jnp.float32)
+
+
+def bulk_decide_ref(occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem,
+                    cap_pct, max_conc, strat, warm):
+    """Full fused pass, jnp end to end: (valid[R, W] bool,
+    score[R, W] f32, winner[R] i32)."""
+    valid = affinity_valid_ref(
+        occ, aff, wmask, mem_used, max_mem, n_funcs, f_mem, cap_pct, max_conc)
+    score = bulk_scores_ref(valid, strat, warm, n_funcs)
+    if score.shape[1] == 0:
+        return valid, score, jnp.full((score.shape[0],), -1, jnp.int32)
+    minv = jnp.min(score, axis=1)
+    winner = jnp.where(jnp.isinf(minv), -1,
+                       jnp.argmin(score, axis=1)).astype(jnp.int32)
+    return valid, score, winner

@@ -39,7 +39,8 @@ processor sharing) stays with :class:`repro.cluster.simulator.ClusterSim`;
 from __future__ import annotations
 
 import random
-from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple, Union
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
 
 from repro.core.ast import AAppError, AAppScript
 from repro.core.compile import CompiledScript, compile_script
@@ -85,6 +86,7 @@ class Platform:
         backend: str = "np",
         zones: Optional[Mapping[str, object]] = None,
         zone_strategy: str = "local_first",
+        shard_floor: int = 1024,
         obs=None,
         resilience=None,
     ):
@@ -113,11 +115,20 @@ class Platform:
                 self.compiled = compile_script(
                     source, self.registry,
                     zones=zone_set if zone_set else None)
-        # sharded control plane whenever the cluster carries >1 zone: the
-        # session shards by zone and *delegates* zone-free decisions to its
-        # flat sub-session, so zoning a cluster never changes zone-free
-        # scheduling (bit-identical; property-tested)
-        self._sharded = len(zone_set) > 1
+        # sharded control plane when the cluster carries >1 zone AND either
+        # the script actually routes (zone terms / topology hints — routing
+        # needs shards regardless of size) or the cluster is big enough
+        # (>= shard_floor workers) for per-zone tensors to pay for the
+        # router.  Below the floor a zone-free script runs on the flat
+        # session directly — bit-identical either way, since the sharded
+        # plane *delegates* zone-free decisions to its flat sub-session
+        # (property-tested)
+        self._backend = backend
+        self._zone_strategy = zone_strategy
+        self.shard_floor = shard_floor
+        self._sharded = len(zone_set) > 1 and (
+            self._script_routes()
+            or len(self.state.workers()) >= shard_floor)
         if self._sharded:
             self.session: SchedulerSession = ShardedSession(
                 self.state, self.registry,
@@ -232,6 +243,14 @@ class Platform:
     @property
     def script(self) -> Optional[AAppScript]:
         return self.compiled.script if self.compiled is not None else None
+
+    def _script_routes(self) -> bool:
+        """True when the active script carries zone terms or topology hints
+        — chains the sharded router must own whatever the cluster size."""
+        if self.compiled is None:
+            return False
+        return any(b.routed for p in self.compiled.script.policies
+                   for b in p.blocks)
 
     @property
     def diagnostics(self):
@@ -451,6 +470,133 @@ class Platform:
                 f, rng=rng, origin_zone=zone)
         return lambda f, zone=None: session.try_schedule(f, rng=rng)
 
+    def decide_batch(self, requests: Sequence[str],
+                     rng: Optional[random.Random] = None, *,
+                     warmth="auto", apply: bool = True,
+                     zone: Optional[str] = None,
+                     tenant: Optional[str] = None) -> List[Decision]:
+        """Group-commit a wave of invocations through the session's fused
+        bulk decide pass (:meth:`SchedulerSession.decide_wave`).
+
+        Semantics are *exactly* a sequential loop of :meth:`invoke`
+        (``apply=True``: admission, allocation, container charge, forecast
+        observation — decision for decision, rng draw for rng draw) or
+        :meth:`decide` (``apply=False``: nothing mutates, intra-wave
+        conflicts resolved as-if-applied on a tensor scratchpad), but the
+        candidate masks and strategy scores for the whole wave come from
+        one [R, W] pass instead of per-item Python loops.  A batch of one
+        short-circuits to the scalar path (``overhead.py --bulk`` pins
+        that tax at the sub-microsecond delegation floor), and a platform
+        with a tracer attached runs the
+        sequential loop outright — per-decision spans are per-item control
+        flow.  ``zone`` stamps every request of the wave with one origin
+        zone; zone-*routed* scripts run the sequential router per item (and
+        reject ``apply=False``, which would need every shard forked)."""
+        if len(requests) == 1 and apply and warmth == "auto" \
+                and zone is None and tenant is None and self._tracer is None:
+            # lean singleton lane (no listcomp frame): the batch front end
+            # must not tax callers that route every arrival through it
+            return [self.invoke(requests[0],
+                                rng if rng is not None else self.rng)]
+        n_req = len(requests)
+        if not n_req:
+            return []
+        rng = rng if rng is not None else self.rng
+        if n_req == 1 or self._tracer is not None:
+            if apply:
+                return [self.invoke(f, rng, warmth=warmth, zone=zone,
+                                    tenant=tenant) for f in requests]
+            return [self.decide(f, rng, warmth=warmth, zone=zone)
+                    for f in requests]
+        fs = list(requests)
+        reg = self.registry
+        kw = {"origin_zone": zone} if self._sharded else {}
+        if not apply:
+            res = self.session.decide_wave(fs, rng=rng, warmth=warmth, **kw)
+            tags: Dict[str, str] = {}
+            out_s: List[Decision] = []
+            for f, w in zip(fs, res.assignments):
+                tg = tags.get(f)
+                if tg is None:
+                    tg = tags[f] = reg[f].tag
+                out_s.append(Decision(f, tg, w))
+            return out_s
+        out: List[Optional[Decision]] = [None] * len(fs)
+        res_b = self._res
+        idx = list(range(len(fs)))
+        if res_b is not None:
+            _tn = tenant if tenant is not None else DEFAULT_TENANT
+            if res_b.admission is not None:
+                # admission pre-pass in arrival order: token draws are
+                # placement-independent, so this equals the interleaved
+                # sequential draws
+                idx = []
+                for i, f in enumerate(fs):
+                    ok, _reason = res_b.admission.admit(
+                        _tn, f, self.clock(), queue_depth=0)
+                    if ok:
+                        idx.append(i)
+                    else:
+                        out[i] = Decision(f, reg[f].tag)
+                if not idx:
+                    return out
+        wave_fs = [fs[i] for i in idx]
+
+        def commit(k: int, f: str, w: Optional[str]) -> None:
+            # mirrors the invoke body item for item, including the
+            # forecast observation of unplaced requests
+            i = idx[k]
+            if self.forecast is not None:
+                self.forecast.observe(f, self.clock())
+            if w is None:
+                out[i] = Decision(f, reg[f].tag)
+                return
+            act = self.state.allocate(f, w, reg)
+            if res_b is not None:
+                self._res_meta[act.activation_id] = (_tn, self.clock())
+            if self.pool is not None:
+                c, kind, cost = self.pool.acquire(
+                    f, w, self.clock(), memory=act.memory, tag=act.tag)
+                self._containers[act.activation_id] = c.cid
+                out[i] = Decision(f, act.tag, w,
+                                  activation_id=act.activation_id,
+                                  start_kind=kind, start_cost=cost)
+            else:
+                out[i] = Decision(f, act.tag, w,
+                                  activation_id=act.activation_id)
+
+        self.session.decide_wave(wave_fs, rng=rng, warmth=warmth,
+                                 apply_to=self.state, commit=commit, **kw)
+        return out
+
+    def batch_placer(self, rng: Optional[random.Random] = None
+                     ) -> Callable[..., List[Optional[str]]]:
+        """The wave-shaped counterpart of :meth:`placer`: one call maps a
+        list of function names to a list of worker ids (or ``None``s)
+        through the fused bulk pass — the workload driver owns allocation,
+        exactly as with :meth:`placer`.
+
+        Without ``commit`` the wave runs on a tensor scratchpad (nothing
+        mutates; intra-wave conflicts resolved as-if-applied).  With a
+        ``commit(i, f, worker)`` callback the wave runs *live*: the
+        callback must record each decision (allocate + container charge)
+        before the next one is made — the driver's per-item dispatch body —
+        which keeps pool-warmth reads mid-wave bit-identical to the
+        sequential ``placer`` loop.  Shares the platform rng with
+        :meth:`placer` by default, so a driver can mix both."""
+        rng = rng if rng is not None else self.rng
+        session = self.session
+
+        def _place_wave(fs: Sequence[str], zone: Optional[str] = None,
+                        commit=None) -> List[Optional[str]]:
+            kw = {"origin_zone": zone} if self._sharded else {}
+            if commit is not None:
+                kw["apply_to"] = self.state
+                kw["commit"] = commit
+            return session.decide_wave(list(fs), rng=rng, **kw).assignments
+
+        return _place_wave
+
     # ------------------------------------------------------------------ #
     # script lifecycle / time
     # ------------------------------------------------------------------ #
@@ -495,7 +641,23 @@ class Platform:
                                   zones=zone_set if zone_set else None,
                                   workers=dict(conf) if conf else None)
         self.compiled = compiled
-        self.session.set_default_script(compiled)
+        if (not self._sharded and len(zone_set) > 1
+                and self._script_routes()):
+            # a routed script arrived on a flat (below-shard_floor) zoned
+            # platform: upgrade to the sharded plane, which the zone terms
+            # need — the new flat sub-session adopts the live tag universe
+            self.session.close()
+            self._sharded = True
+            self.session = ShardedSession(
+                self.state, self.registry, compiled,
+                backend=self._backend, pool=self.pool, clock=self.clock,
+                zone_strategy=self._zone_strategy)
+            if self.obs is not None:
+                self.session.attach_obs(self.obs)
+                self.obs.registry.register_collector(
+                    "zone", lambda: self.session.zone_stats())
+        else:
+            self.session.set_default_script(compiled)
         if self._tracer is not None:
             self._tracer.compile_event(self.clock(), "reload",
                                        len(self.session.tag_index))

@@ -48,6 +48,8 @@ from repro.resilience import DEFAULT_TENANT, LostActivation
 
 from .traces import Arrival
 
+_UNSET = object()  # "no pre-computed decision" sentinel (None is a decision)
+
 
 @dataclasses.dataclass(frozen=True)
 class InvocationRecord:
@@ -123,12 +125,19 @@ class TraceWorkload:
         forecast=None,
         obs=None,
         resilience=None,
+        batcher: Optional[Callable[..., Sequence[Optional[str]]]] = None,
     ):
         self.sim = sim
         self.schedule = scheduler_fn
         self.compute = dict(compute)
         self.script = script
         self.forecast = forecast
+        # wave batcher (Platform.batch_placer): same-tick arrival groups
+        # are decided in one fused bulk pass instead of per-arrival calls.
+        # Decisions stay bit-identical to the sequential path (the batcher
+        # resolves intra-wave conflicts as-if-applied), so batching is a
+        # pure dispatch-cost optimisation
+        self.batcher = batcher
         # decision/invoke/complete spans on the simulator's virtual clock —
         # activation ids key the spans, so timelines are deterministic.
         # A traced Platform.placer marks itself `traces_decisions`; then the
@@ -159,10 +168,44 @@ class TraceWorkload:
         self.records: List[InvocationRecord] = []
 
     def load(self, trace: Sequence[Arrival]) -> None:
-        for i, a in enumerate(trace):
-            aid = f"a{i}"
-            self.sim.at(a.t, lambda a=a, aid=aid: self.submit(
-                a, arrival_id=aid))
+        # group consecutive same-instant, same-zone arrivals into one bulk
+        # wave when a batcher is wired and no per-item machinery (admission
+        # queues, per-decision tracing) owns the submit path
+        batching = (self.batcher is not None and self.resilience is None
+                    and self._tracer is None)
+        i = 0
+        n = len(trace)
+        arrivals = list(trace)
+        while i < n:
+            a = arrivals[i]
+            j = i + 1
+            if batching:
+                while (j < n and arrivals[j].t == a.t
+                       and arrivals[j].zone == a.zone):
+                    j += 1
+            if j - i >= 2:
+                group = [(arrivals[k], f"a{k}") for k in range(i, j)]
+                self.sim.at(a.t, lambda g=group: self._submit_wave(g))
+            else:
+                aid = f"a{i}"
+                self.sim.at(a.t, lambda a=a, aid=aid: self.submit(
+                    a, arrival_id=aid))
+            i = j
+
+    def _submit_wave(self, group) -> None:
+        """Dispatch one same-tick arrival group through the wave batcher:
+        one fused decide for the whole group, with the per-item dispatch
+        body (allocate + container charge) run as the wave's commit
+        callback — each decision lands before the next is made, exactly
+        like the sequential path, so pool warmth and tag occupancy stay
+        bit-identical to per-arrival submission."""
+        fs = [a.function for a, _aid in group]
+
+        def commit(k, f, w):
+            a, aid = group[k]
+            self._dispatch(a, aid, None, pre_worker=w)
+
+        self.batcher(fs, zone=group[0][0].zone, commit=commit)
 
     # ------------------------------------------------------------------ #
 
@@ -242,11 +285,13 @@ class TraceWorkload:
 
     def _dispatch(self, arrival: Arrival, arrival_id: Optional[str],
                   root_t: Optional[float], attempt: int = 1,
-                  queued: bool = False) -> bool:
+                  queued: bool = False, pre_worker=_UNSET) -> bool:
         """Schedule + allocate + charge one invocation (the historical
         submit body).  Returns False when the scheduler has no worker —
         with a queue the caller requeues; without one a failure record is
-        written (the historical behaviour)."""
+        written (the historical behaviour).  ``pre_worker`` carries a
+        wave-batched decision (including ``None`` = unplaceable): the
+        scheduler call is skipped, everything else runs unchanged."""
         sim = self.sim
         f = arrival.function
         t0 = sim.now
@@ -262,7 +307,9 @@ class TraceWorkload:
         # zone-stamped arrivals (multi-region traces) carry their origin to
         # the scheduler — Platform.placer accepts zone=; plain callables
         # without the keyword keep working for zone-agnostic traces
-        if arrival.zone is not None:
+        if pre_worker is not _UNSET:
+            w = pre_worker
+        elif arrival.zone is not None:
             w = self.schedule(f, zone=arrival.zone)
         else:
             w = self.schedule(f)

@@ -1,0 +1,459 @@
+"""The group-commit bulk decision plane is *bit-identical* to sequential
+scalar replay — decision for decision, rng draw for rng draw.
+
+Covers the whole stack: ``SchedulerSession.decide_wave`` (scratch and live
+modes) against the Listing-1 scalar loop, intra-wave conflict resolution
+(last memory slot, concurrency tokens), the ``compact()``-mid-wave
+regression, ``Platform.decide_batch`` against an ``invoke`` loop under
+hypothesis-driven wave partitions, the ``shard_floor`` delegation, and the
+workload driver's same-tick wave batching.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core import (
+    AAppScript,
+    Affinity,
+    Block,
+    ClusterState,
+    Invalidate,
+    Registry,
+    SchedulerSession,
+    TagPolicy,
+    try_schedule,
+)
+from tests.test_batched_equivalence import (
+    TAGS,
+    clone_state,
+    random_cluster,
+    random_script,
+    random_warmth,
+)
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+needs_hyp = pytest.mark.skipif(not HAS_HYPOTHESIS, reason="needs hypothesis")
+
+
+# --------------------------------------------------------------------------- #
+# decide_wave == scalar replay (session level)
+# --------------------------------------------------------------------------- #
+
+
+def _scalar_replay(state, reg, script, fs, seed, warmth):
+    """The sequential oracle: try_schedule + allocate on a cloned state."""
+    ref_state = clone_state(state, reg)
+    ref_rng = random.Random(seed * 7 + 1)
+    expected = []
+    for f in fs:
+        w = try_schedule(f, ref_state.conf(), script, reg, rng=ref_rng,
+                         warmth=warmth)
+        expected.append(w)
+        if w is not None:
+            ref_state.allocate(f, w, reg)
+    return expected
+
+
+def _check_decide_wave(seed, with_warmth, live):
+    rng = random.Random(seed)
+    script = random_script(rng)
+    state, reg = random_cluster(rng)
+    fs = [f"fn_{rng.choice(TAGS)}" for _ in range(rng.randint(1, 12))]
+    warmth = random_warmth(rng) if with_warmth else None
+    expected = _scalar_replay(state, reg, script, fs, seed, warmth)
+
+    session = SchedulerSession(state, reg, script)
+    res = session.decide_wave(fs, rng=random.Random(seed * 7 + 1),
+                              warmth=warmth,
+                              apply_to=state if live else None)
+    assert res.assignments == expected, (
+        f"seed={seed} warmth={with_warmth} live={live}: "
+        f"{res.assignments} != {expected}")
+
+
+@pytest.mark.parametrize("with_warmth", [False, True])
+@pytest.mark.parametrize("live", [False, True])
+def test_decide_wave_equals_scalar_replay(with_warmth, live):
+    for seed in range(60):
+        _check_decide_wave(seed, with_warmth, live)
+
+
+def test_decide_wave_scratch_does_not_mutate():
+    rng = random.Random(11)
+    script = random_script(rng)
+    state, reg = random_cluster(rng)
+    before = sorted((a.function, a.worker)
+                    for a in state.active_activations())
+    session = SchedulerSession(state, reg, script)
+    session.decide_wave([f"fn_{t}" for t in TAGS] * 3,
+                        rng=random.Random(1))
+    after = sorted((a.function, a.worker)
+                   for a in state.active_activations())
+    assert before == after
+
+
+# --------------------------------------------------------------------------- #
+# intra-wave conflicts: the wave must resolve as-if-applied
+# --------------------------------------------------------------------------- #
+
+
+def _tight_cluster(max_mem=10.0, workers=("w0", "w1")):
+    state = ClusterState()
+    reg = Registry()
+    for w in workers:
+        state.add_worker(w, max_memory=max_mem)
+    reg.register("fn_a", memory=6.0, tag="a")
+    return state, reg
+
+
+def test_wave_contends_for_last_memory_slot():
+    """Two 6 MB placements on 10 MB workers: the second request of the wave
+    must see the first one's memory charge and divert; the third finds no
+    room anywhere."""
+    state, reg = _tight_cluster()
+    script = AAppScript(policies=(
+        TagPolicy(tag="a", blocks=(Block(workers=("*",)),)),))
+    fs = ["fn_a", "fn_a", "fn_a"]
+    expected = _scalar_replay(state, reg, script, fs, seed=0, warmth=None)
+    assert expected == ["w0", "w1", None]  # the scenario really contends
+
+    for live in (False, True):
+        st2 = clone_state(state, reg)
+        session = SchedulerSession(st2, reg, script)
+        res = session.decide_wave(fs, rng=random.Random(1),
+                                  apply_to=st2 if live else None)
+        assert res.assignments == expected, f"live={live}"
+
+
+def test_wave_contends_for_concurrency_tokens():
+    """max_concurrent_invocations=1: each placement consumes the worker's
+    only token, so a wave of three drains both workers then fails."""
+    state = ClusterState()
+    reg = Registry()
+    for w in ("w0", "w1"):
+        state.add_worker(w, max_memory=100.0)
+    reg.register("fn_a", memory=1.0, tag="a")
+    script = AAppScript(policies=(
+        TagPolicy(tag="a", blocks=(Block(
+            workers=("*",),
+            invalidate=Invalidate(max_concurrent_invocations=1)),),
+            followup="fail"),))
+    fs = ["fn_a", "fn_a", "fn_a"]
+    expected = _scalar_replay(state, reg, script, fs, seed=0, warmth=None)
+    assert expected == ["w0", "w1", None]
+
+    for live in (False, True):
+        st2 = clone_state(state, reg)
+        session = SchedulerSession(st2, reg, script)
+        res = session.decide_wave(fs, rng=random.Random(1),
+                                  apply_to=st2 if live else None)
+        assert res.assignments == expected, f"live={live}"
+
+
+def test_wave_affine_placement_attracts_followers():
+    """A positive-affinity landing mid-wave must *improve* later rows (the
+    one non-monotone direction): followers chase the first placement."""
+    state = ClusterState()
+    reg = Registry()
+    for w in ("w0", "w1", "w2"):
+        state.add_worker(w, max_memory=100.0)
+    reg.register("fn_a", memory=1.0, tag="a")
+    reg.register("fn_b", memory=1.0, tag="b")
+    # b requires co-location with a; nothing is placed yet, so the wave's
+    # first item creates the only valid target for the second
+    script = AAppScript(policies=(
+        TagPolicy(tag="a", blocks=(Block(workers=("*",)),)),
+        TagPolicy(tag="b", blocks=(Block(
+            workers=("*",), affinity=Affinity(affine=("a",))),),
+            followup="fail"),
+    ))
+    fs = ["fn_b", "fn_a", "fn_b"]
+    expected = _scalar_replay(state, reg, script, fs, seed=0, warmth=None)
+    assert expected == [None, "w0", "w0"]
+
+    for live in (False, True):
+        st2 = clone_state(state, reg)
+        session = SchedulerSession(st2, reg, script)
+        res = session.decide_wave(fs, rng=random.Random(1),
+                                  apply_to=st2 if live else None)
+        assert res.assignments == expected, f"live={live}"
+
+
+# --------------------------------------------------------------------------- #
+# compact() mid-wave: in-flight tag-row indices must survive
+# --------------------------------------------------------------------------- #
+
+
+def test_compact_mid_wave_does_not_strand_tag_rows():
+    """A commit callback that compacts the session midway (tag universe
+    rebuilt, occupancy columns renumbered) must leave the rest of the wave
+    bit-identical to the scalar replay — the regression where in-flight
+    wave rows kept pre-compaction column indices."""
+    for seed in range(25):
+        rng = random.Random(seed + 900)
+        script = random_script(rng)
+        state, reg = random_cluster(rng)
+        fs = [f"fn_{rng.choice(TAGS)}" for _ in range(8)]
+        expected = _scalar_replay(state, reg, script, fs, seed, None)
+
+        session = SchedulerSession(state, reg, script)
+        got = []
+
+        def commit(i, f, w):
+            got.append(w)
+            if w is not None:
+                state.allocate(f, w, reg)
+            if i == 3:
+                session.compact()  # mid-wave: rebuilds the tag universe
+
+        res = session.decide_wave(fs, rng=random.Random(seed * 7 + 1),
+                                  apply_to=state, commit=commit)
+        assert res.assignments == expected, f"seed={seed}"
+        assert got == expected, f"seed={seed}"
+
+
+# --------------------------------------------------------------------------- #
+# Platform.decide_batch == invoke loop (hypothesis wave partitions)
+# --------------------------------------------------------------------------- #
+
+BATCH_SCRIPT = """
+lat:
+  workers: *
+  strategy: best_first
+  affinity: [!train]
+train:
+  workers: *
+  strategy: least_loaded
+  invalidate:
+    - capacity_used 80%
+img:
+  workers: *
+  strategy: warmest
+etl:
+  workers: *
+  strategy: min_cost
+"""
+
+BATCH_FNS = {"f_lat": (1.0, "lat"), "f_train": (8.0, "train"),
+             "f_img": (2.0, "img"), "f_etl": (3.0, "etl")}
+
+
+def _platform(seed, W=6):
+    from repro.platform import Platform
+    from repro.pool import StartCosts, WarmPool, make_policy
+
+    state = ClusterState()
+    for i in range(W):
+        state.add_worker(f"w{i}", max_memory=24.0)
+    pool = WarmPool(make_policy("fixed_ttl", ttl=1e9),
+                    costs=StartCosts(cold=0.5, warm=0.1, hot=0.0),
+                    budget_mb=128.0, hot_window=1e9)
+    return Platform(BATCH_SCRIPT, cluster=state, functions=dict(BATCH_FNS),
+                    pool=pool, seed=seed)
+
+
+def _decision_key(d):
+    return (d.function, d.tag, d.worker, d.activation_id, d.start_kind,
+            d.start_cost)
+
+
+def _run_partitioned(plat, fs, parts, seed):
+    """Drive ``fs`` through decide_batch in wave slices of the given sizes
+    (size 1 exercises the singleton lane)."""
+    rng = random.Random(seed)
+    out = []
+    i = 0
+    for p in parts:
+        wave = fs[i:i + p]
+        i += p
+        if not wave:
+            break
+        out.extend(plat.decide_batch(wave, rng))
+    out.extend(plat.decide_batch(fs[i:], rng))
+    return out
+
+
+def _check_batch_equals_invoke_loop(seed, parts):
+    mix = random.Random(seed)
+    fs = [mix.choice(sorted(BATCH_FNS)) for _ in range(20)]
+
+    pa = _platform(seed)
+    rng_a = random.Random(seed + 1)
+    want = [pa.invoke(f, rng_a) for f in fs]
+
+    pb = _platform(seed)
+    got = _run_partitioned(pb, fs, parts, seed + 1)
+
+    assert [_decision_key(d) for d in got] == \
+        [_decision_key(d) for d in want], f"seed={seed} parts={parts}"
+    # the applied state is identical too, allocation for allocation
+    assert sorted((a.function, a.worker)
+                  for a in pb.state.active_activations()) == \
+        sorted((a.function, a.worker)
+               for a in pa.state.active_activations())
+    pa.close()
+    pb.close()
+
+
+def test_decide_batch_equals_invoke_loop_fixed_partitions():
+    for seed, parts in [(0, [20]), (1, [1] * 20), (2, [5, 1, 7, 3, 4]),
+                        (3, [2, 8, 10]), (4, [19, 1])]:
+        _check_batch_equals_invoke_loop(seed, parts)
+
+
+if HAS_HYPOTHESIS:
+    @needs_hyp
+    @settings(max_examples=20, deadline=None)
+    @given(hyp_st.integers(0, 2**20),
+           hyp_st.lists(hyp_st.integers(1, 8), min_size=1, max_size=10))
+    def test_decide_batch_equals_invoke_loop_property(seed, parts):
+        _check_batch_equals_invoke_loop(seed, parts)
+
+
+def test_decide_batch_apply_false_matches_scalar_replay():
+    """apply=False: conflicts resolved as-if-applied on a scratchpad —
+    the assignments equal a sequential schedule-and-allocate replay, but
+    nothing on the platform mutates."""
+    fs = ["f_lat", "f_train", "f_img", "f_etl"] * 3
+    pa = _platform(7)
+    before = sorted((a.function, a.worker)
+                    for a in pa.state.active_activations())
+    expected = _scalar_replay(pa.state, pa.registry, pa.script, fs,
+                              seed=5, warmth=None)
+    got_wave = pa.decide_batch(fs, random.Random(5 * 7 + 1), apply=False)
+    assert [d.worker for d in got_wave] == expected
+    assert all(d.activation_id is None for d in got_wave)  # nothing applied
+    assert sorted((a.function, a.worker)
+                  for a in pa.state.active_activations()) == before
+    pa.close()
+
+
+# --------------------------------------------------------------------------- #
+# shard_floor: flat delegation below the floor, bit-identical
+# --------------------------------------------------------------------------- #
+
+ZONED_SCRIPT = """
+api:
+  workers: *
+  strategy: best_first
+"""
+
+
+def _zoned_platform(shard_floor):
+    from repro.platform import Platform
+
+    state = ClusterState()
+    zones = {}
+    for i in range(8):
+        w = f"w{i}"
+        state.add_worker(w, max_memory=24.0)
+        zones[w] = "eu" if i < 4 else "us"
+    return Platform(ZONED_SCRIPT, cluster=state,
+                    functions={"f_api": (2.0, "api")},
+                    zones=zones, shard_floor=shard_floor, seed=1)
+
+
+def test_shard_floor_picks_the_plane():
+    big = _zoned_platform(shard_floor=4)   # 8 workers >= 4: sharded
+    small = _zoned_platform(shard_floor=1024)  # below the floor: flat
+    assert big._sharded and not small._sharded
+    big.close()
+    small.close()
+
+
+def test_shard_floor_delegation_is_bit_identical():
+    """A zone-free script must decide identically on the flat session and
+    the sharded plane — shard_floor only moves the crossover, never the
+    decisions (invoke loop *and* decide_batch waves)."""
+    fs = ["f_api"] * 10
+    pa = _zoned_platform(shard_floor=1024)
+    pb = _zoned_platform(shard_floor=4)
+    ra, rb = random.Random(2), random.Random(2)
+    for f in fs:
+        da = pa.invoke(f, ra)
+        db = pb.invoke(f, rb)
+        assert _decision_key(da)[:3] == _decision_key(db)[:3]
+    wa = pa.decide_batch(fs, random.Random(9))
+    wb = pb.decide_batch(fs, random.Random(9))
+    assert [d.worker for d in wa] == [d.worker for d in wb]
+    pa.close()
+    pb.close()
+
+
+# --------------------------------------------------------------------------- #
+# driver wave batching: same-tick groups through batch_placer
+# --------------------------------------------------------------------------- #
+
+
+def _records_equal(a, b):
+    """NaN-aware record comparison (components carry NaN for unplaced)."""
+    if len(a) != len(b):
+        return False
+
+    def feq(x, y):
+        if isinstance(x, float) and isinstance(y, float):
+            return x == y or (math.isnan(x) and math.isnan(y))
+        return x == y
+
+    for ra, rb in zip(a, b):
+        for field in ("function", "worker", "t_submit", "latency",
+                      "start_kind", "failed", "origin_zone", "arrival_id",
+                      "t_root", "activation_id", "tenant", "attempts"):
+            if not feq(getattr(ra, field), getattr(rb, field)):
+                return False
+        ca, cb = ra.components, rb.components
+        if (ca is None) != (cb is None):
+            return False
+        if ca is not None:
+            if ca.keys() != cb.keys():
+                return False
+            if not all(feq(ca[k], cb[k]) for k in ca):
+                return False
+    return True
+
+
+def _sim_records(batched):
+    from repro.cluster.simulator import ClusterSim, SimParams
+    from repro.cluster.topology import paper_testbed
+    from repro.platform import Platform
+    from repro.workload import (Arrival, COMPUTE_S, TraceWorkload,
+                                register_functions)
+
+    sim = ClusterSim(paper_testbed(), SimParams(), seed=0)
+    register_functions(sim.registry)
+    plat = Platform.for_sim(
+        sim, "api:\n  workers: *\nimg:\n  workers: *\netl:\n  workers: *\n")
+    rng = random.Random(1)
+    mix = random.Random(4)
+    trace = []
+    t = 0.0
+    for _ in range(12):  # bursts of same-tick arrivals + singletons
+        n = mix.choice([1, 3, 4])
+        for _ in range(n):
+            trace.append(Arrival(t=t, function=mix.choice(
+                ["api", "thumb", "etl"])))
+        t += mix.choice([0.5, 1.0])
+    wl = TraceWorkload(
+        sim, plat.placer(rng), COMPUTE_S, script=plat.script,
+        batcher=plat.batch_placer(rng) if batched else None)
+    wl.load(trace)
+    sim.run()
+    recs = list(wl.records)
+    plat.close()
+    return recs
+
+
+def test_driver_wave_batching_is_bit_identical():
+    """Same trace, same seeds: same-tick groups dispatched through the
+    fused wave batcher must produce record-for-record identical output
+    (NaN-aware) versus per-arrival sequential submission."""
+    seq = _sim_records(batched=False)
+    bat = _sim_records(batched=True)
+    assert seq  # the trace actually produced work
+    assert _records_equal(seq, bat)
